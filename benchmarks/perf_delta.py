@@ -1,0 +1,95 @@
+"""§Perf before/after tables: artifacts_baseline/ vs artifacts/.
+
+    PYTHONPATH=src python -m benchmarks.perf_delta [--update-experiments]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+BASE = pathlib.Path(__file__).parent / "artifacts_baseline"
+AFTER = pathlib.Path(__file__).parent / "artifacts"
+EXP = pathlib.Path(__file__).parent.parent / "EXPERIMENTS.md"
+
+CELLS = [
+    ("deepseek-v2-236b", "train_4k", "16x16"),
+    ("deepseek-coder-33b", "decode_32k", "16x16"),
+    ("deepseek-v2-236b", "decode_32k", "16x16"),
+    # padding + chunked-attention side effects on other key cells
+    ("qwen1.5-4b", "train_4k", "16x16"),
+    ("phi4-mini-3.8b", "decode_32k", "16x16"),
+    ("granite-moe-1b-a400m", "decode_32k", "16x16"),
+    ("deepseek-coder-33b", "prefill_32k", "16x16"),
+    ("tinyllama-1.1b", "train_4k", "16x16"),
+]
+
+
+def load(d: pathlib.Path, arch, shape, mesh):
+    f = d / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def fmt_mem(r):
+    m = r["memory"]
+    return (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)) / 2**30
+
+
+def rows():
+    out = []
+    for arch, shape, mesh in CELLS:
+        b, a = load(BASE, arch, shape, mesh), load(AFTER, arch, shape, mesh)
+        if not (b and a and b.get("ok") and a.get("ok")):
+            continue
+        out.append(
+            dict(
+                cell=f"{arch}/{shape}",
+                mem_b=fmt_mem(b),
+                mem_a=fmt_mem(a),
+                coll_b=b["collectives"]["total_bytes"] / 2**30,
+                coll_a=a["collectives"]["total_bytes"] / 2**30,
+                dom_b=b["roofline"]["dominant"],
+                dom_a=a["roofline"]["dominant"],
+                bound_b=b["roofline"]["dominant_s"],
+                bound_a=a["roofline"]["dominant_s"],
+            )
+        )
+    return out
+
+
+def table(rs) -> str:
+    out = [
+        "| cell | args+temp GiB (before→after) | coll GiB/dev/step | dominant | bound s |",
+        "|---|---|---|---|---|",
+    ]
+    for r in rs:
+        out.append(
+            f"| {r['cell']} | {r['mem_b']:.1f} → **{r['mem_a']:.1f}** "
+            f"| {r['coll_b']:.1f} → **{r['coll_a']:.1f}** "
+            f"| {r['dom_b']} → {r['dom_a']} "
+            f"| {r['bound_b']:.2f} → **{r['bound_a']:.2f}** |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update-experiments", action="store_true")
+    args = ap.parse_args()
+    t = table(rows())
+    print(t)
+    if args.update_experiments and EXP.exists():
+        import re
+
+        text = EXP.read_text()
+        begin, end = "<!-- perf-after:begin -->", "<!-- perf-after:end -->"
+        pre, rest = text.split(begin)
+        _, post = rest.split(end)
+        EXP.write_text(pre + begin + "\n" + t + "\n" + end + post)
+        print("updated EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--update-experiments]
+
+Reads benchmarks/artifacts/*.json (written by repro.launch.dryrun) and
+prints markdown tables; with --update-experiments it rewrites the marked
+sections of EXPERIMENTS.md in place.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).parent / "artifacts"
+EXP = pathlib.Path(__file__).parent.parent / "EXPERIMENTS.md"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load() -> list[dict]:
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        try:
+            rows.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]), r["mesh"]))
+    return rows
+
+
+def gib(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | ok | compile_s | args GiB/dev | temp GiB/dev | HLO GFLOP/dev | coll MiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | - | - | - | - | - |"
+            )
+            continue
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']:.1f} "
+            f"| {gib(m.get('argument_size_in_bytes', 0))} "
+            f"| {gib(m.get('temp_size_in_bytes', 0))} "
+            f"| {r['hlo_flops_per_device'] / 1e9:.1f} "
+            f"| {r['collectives']['total_bytes'] / 2**20:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | bound_ms | MODEL_FLOPS/chip | useful_ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} | {rf['collective_s']:.3e} "
+            f"| **{rf['dominant']}** | {rf['dominant_s'] * 1e3:.1f} "
+            f"| {rf['model_flops_per_chip']:.2e} | {rf['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def collective_breakdown(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | all-gather | all-reduce | reduce-scatter | all-to-all | permute |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            continue
+        bk = r["collectives"]["bytes_by_kind"]
+        mb = lambda k: f"{bk.get(k, 0) / 2**20:.0f}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {mb('all-gather')} "
+            f"| {mb('all-reduce')} | {mb('reduce-scatter')} | {mb('all-to-all')} "
+            f"| {mb('collective-permute')} |"
+        )
+    return "\n".join(out)
+
+
+def replace_section(text: str, marker: str, body: str) -> str:
+    begin, end = f"<!-- {marker}:begin -->", f"<!-- {marker}:end -->"
+    if begin not in text:
+        return text + f"\n{begin}\n{body}\n{end}\n"
+    pre = text.split(begin)[0]
+    post = text.split(end)[1] if end in text else ""
+    return pre + begin + "\n" + body + "\n" + end + post
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update-experiments", action="store_true")
+    args = ap.parse_args()
+    rows = load()
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    summary = f"{n_ok}/{len(rows)} cells compiled OK."
+    dt = dryrun_table(rows)
+    rt = roofline_table(rows)
+    cb = collective_breakdown(rows)
+    print(summary)
+    print("\n## Dry-run\n" + dt)
+    print("\n## Roofline\n" + rt)
+    print("\n## Collective breakdown\n" + cb)
+    if args.update_experiments and EXP.exists():
+        text = EXP.read_text()
+        text = replace_section(text, "dryrun-table", summary + "\n\n" + dt)
+        text = replace_section(text, "roofline-table", rt)
+        text = replace_section(text, "collective-table", cb)
+        EXP.write_text(text)
+        print(f"\nupdated {EXP}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Quickstart: the paper's async-task and task-graph API (paper §4).
+
+Runs the (a+b)*(c+d) task graph from the paper, then a recursive-Fibonacci
+task graph, on the work-stealing pool.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import Task, TaskGraph, ThreadPool
+
+
+def async_task_demo() -> None:
+    # paper §4.1: submit a lambda, eventually executed by a worker
+    with ThreadPool() as thread_pool:
+        thread_pool.Submit(lambda: print("Completed"))
+        thread_pool.wait_idle()
+
+
+def task_graph_demo() -> None:
+    # paper §4.2: (a + b) * (c + d) with every operation as a task
+    vals = {}
+    tasks = TaskGraph("arith")
+    get_a = tasks.emplace_back(lambda: vals.__setitem__("a", 1))
+    get_b = tasks.emplace_back(lambda: vals.__setitem__("b", 2))
+    get_c = tasks.emplace_back(lambda: vals.__setitem__("c", 3))
+    get_d = tasks.emplace_back(lambda: vals.__setitem__("d", 4))
+    get_sum_ab = tasks.emplace_back(lambda: vals.__setitem__("ab", vals["a"] + vals["b"]))
+    get_sum_cd = tasks.emplace_back(lambda: vals.__setitem__("cd", vals["c"] + vals["d"]))
+    get_product = tasks.emplace_back(lambda: vals.__setitem__("p", vals["ab"] * vals["cd"]))
+
+    get_sum_ab.Succeed(get_a, get_b)
+    get_sum_cd.Succeed(get_c, get_d)
+    get_product.Succeed(get_sum_ab, get_sum_cd)
+
+    with ThreadPool() as thread_pool:
+        thread_pool.Submit(tasks)
+        thread_pool.wait_idle()
+    print(f"(a+b)*(c+d) = {vals['p']}")
+    assert vals["p"] == 21
+
+
+def fibonacci_demo(n: int = 18) -> None:
+    # the paper's benchmark workload: the full fib(n) recursion DAG
+    results = {}
+    g = TaskGraph("fib")
+
+    def build(n: int, key: str) -> Task:
+        if n < 2:
+            return g.add(lambda k=key, v=n: results.__setitem__(k, v))
+        left = build(n - 1, key + "l")
+        right = build(n - 2, key + "r")
+        return g.add(
+            lambda k=key: results.__setitem__(k, results[k + "l"] + results[k + "r"])
+        ).succeed(left, right)
+
+    build(n, "r")
+    t0 = time.perf_counter()
+    with ThreadPool() as pool:
+        pool.run(g)
+    dt = time.perf_counter() - t0
+    print(f"fib({n}) = {results['r']}  [{len(g)} tasks in {dt * 1e3:.1f} ms, "
+          f"{dt / len(g) * 1e6:.2f} us/task]")
+
+
+if __name__ == "__main__":
+    async_task_demo()
+    task_graph_demo()
+    fibonacci_demo()

@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Exercises the full substrate on CPU: model zoo config, ThreadPool-prefetched
+synthetic data, AdamW, async checkpointing with atomic commit + resume, and
+(optionally) an injected failure mid-run to demonstrate restart/resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--fail]
+
+(A ~100M model on one CPU core takes ~1s/step at seq 256; defaults keep the
+run a few minutes. Use --tiny for a 60-second sanity run.)
+"""
+import argparse
+import time
+
+from repro.configs.base import ModelConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def model_100m() -> ModelConfig:
+    # ~103M params: 12L, d=768, llama-style
+    return ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32_000,
+        remat="none", dtype="float32",
+    )
+
+
+def model_tiny() -> ModelConfig:
+    return ModelConfig(
+        name="lm-tiny", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=688, vocab_size=4_096,
+        remat="none", dtype="float32",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--fail", action="store_true", help="inject a failure mid-run")
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    from repro.configs.base import param_count
+
+    print(f"model: {cfg.name}  params≈{param_count(cfg)['total'] / 1e6:.1f}M")
+    tcfg = TrainerConfig(
+        num_steps=args.steps,
+        checkpoint_every=max(args.steps // 4, 10),
+        log_every=max(args.steps // 20, 1),
+        seq_len=args.seq,
+        global_batch=args.batch,
+        lr=3e-4,
+        warmup=20,
+        fail_at_step=args.steps // 2 if args.fail else None,
+    )
+    t0 = time.time()
+    with Trainer(cfg, tcfg, args.ckpt) as tr:
+        out = tr.run_with_restarts() if args.fail else tr.run(resume=False)
+    dt = time.time() - t0
+    first, last = out["metrics"][0], out["metrics"][-1]
+    toks = args.seq * args.batch * args.steps
+    print(f"\nsteps={args.steps} wall={dt:.1f}s  tokens/s={toks / dt:,.0f}")
+    print(f"loss: {first['loss']:.4f} (step {first['step']}) -> "
+          f"{last['loss']:.4f} (step {last['step']})")
+    assert last["loss"] < first["loss"], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""HLO text analysis: per-device collective traffic from a compiled module.
+
+``compiled.cost_analysis()`` has no collective information, so we parse the
+(SPMD-partitioned, hence per-device) HLO text and apply a ring-algorithm
+traffic model per op:
+
+  all-reduce          2 * size * (n-1)/n     (reduce-scatter + all-gather)
+  all-gather          size * (n-1)/n         (size = gathered result)
+  reduce-scatter      size_result * (n-1)    (operand = result * n)
+  all-to-all          size * (n-1)/n
+  collective-permute  size                   (point-to-point)
+
+``n`` is the collective group size parsed from replica_groups. Sizes are the
+per-partition HLO shapes, so the returned numbers are bytes over ICI links
+per device per step.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = f32[16,128]{1,0} all-reduce(...)   or tuple results
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# replica_groups={{0,1,2,3},{...}}  or  replica_groups=[8,2]<=[16]
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9]+),([0-9]+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    return 2  # conservative default when groups are implicit
+
+
+def collective_traffic(hlo_text: str) -> dict[str, Any]:
+    """Per-device ICI traffic (bytes) by collective kind + op counts."""
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    count_by_kind: dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # async pairs (-start/-done) describe one transfer; count -start only
+        if "-done(" in line:
+            continue
+        size = _shape_bytes(m.group("shape"))
+        n = max(_group_size(line), 1)
+        if op == "all-reduce":
+            moved = 2.0 * size * (n - 1) / n
+        elif op == "all-gather":
+            moved = size * (n - 1) / n
+        elif op == "reduce-scatter":
+            moved = size * (n - 1)
+        elif op == "all-to-all":
+            moved = size * (n - 1) / n
+        else:  # collective-permute
+            moved = float(size)
+        bytes_by_kind[op] += moved
+        count_by_kind[op] += 1
+    return {
+        "bytes_by_kind": dict(bytes_by_kind),
+        "count_by_kind": dict(count_by_kind),
+        "total_bytes": float(sum(bytes_by_kind.values())),
+    }
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "convolution", "custom-call")) -> dict:
+    hist: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line:
+                hist[op] += 1
+    return dict(hist)

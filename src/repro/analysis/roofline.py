@@ -1,0 +1,145 @@
+"""Three-term roofline model for TPU v5e (assignment constants).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = ICI_bytes_per_device / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` of the SPMD-partitioned
+module (per-device numbers); collective bytes from analysis/hlo.py.
+
+MODEL_FLOPS is the analytic useful work: 6·N·D for a train step (2·N·D for
+forward-only inference), N = active non-embedding params, D = tokens — plus
+the causal-attention term which 6·N·D ignores but 32k-sequence cells are
+dominated by. The ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/
+padding overheads in the compiled program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ModelConfig, param_count
+
+# TPU v5e, per chip (assignment constants)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def dominant_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bound_s(self) -> float:
+        """Perfect-overlap execution-time lower bound (max of the terms)."""
+        return self.dominant_s
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "dominant_s": self.dominant_s,
+        }
+
+
+def terms_from_analysis(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS_BF16,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=collective_bytes_per_device / ICI_BW,
+    )
+
+
+def model_flops(cfg: ModelConfig, seq_len: int, global_batch: int, kind: str) -> dict:
+    """Analytic useful FLOPs for one step of a shape cell (whole job)."""
+    counts = param_count(cfg)
+    n_active = counts["active"] - cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2
+    )
+    n_active = max(n_active, 1)
+    # lm head is real compute even when embeddings are "excluded"
+    head = 2 * cfg.d_model * cfg.vocab_size
+
+    if kind == "train":
+        tokens = seq_len * global_batch
+        dense = (6 * n_active + 3 * head) * tokens
+        attn = _attn_flops(cfg, seq_len, global_batch, backward=True)
+    elif kind == "prefill":
+        tokens = seq_len * global_batch
+        dense = (2 * n_active + head) * tokens
+        attn = _attn_flops(cfg, seq_len, global_batch, backward=False)
+    else:  # decode: one token per sequence against a seq_len cache
+        tokens = global_batch
+        dense = (2 * n_active + head) * tokens
+        attn = _decode_attn_flops(cfg, seq_len, global_batch)
+    return {"dense": float(dense), "attention": float(attn), "total": float(dense + attn)}
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.attention == "none":
+        return 0
+    return cfg.num_layers + (cfg.encoder_layers if cfg.is_encdec else 0)
+
+
+def _attn_flops(cfg: ModelConfig, S: int, B: int, *, backward: bool) -> float:
+    L = _attn_layers(cfg)
+    if L == 0:
+        return 0.0
+    H = cfg.num_heads
+    Dh = cfg.head_dim or 0
+    if cfg.attention == "mla":
+        Dh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim + cfg.v_head_dim
+    # QK^T + AV: 4 * S^2 * Dh per head, halved by causality
+    full = 4.0 * S * S * Dh * H * B
+    causal = 0.5 if not cfg.is_encdec else 0.75  # enc is bidirectional
+    window_frac = 1.0
+    if cfg.window is not None and cfg.window < S:
+        n_global = len(cfg.global_layers)
+        frac_sw = cfg.window / S
+        window_frac = (n_global + (cfg.num_layers - n_global) * frac_sw) / cfg.num_layers
+    mult = 3.0 if backward else 1.0
+    return full * causal * window_frac * L * mult
+
+
+def _decode_attn_flops(cfg: ModelConfig, S_cache: int, B: int) -> float:
+    L = _attn_layers(cfg)
+    if L == 0:
+        return 0.0
+    if cfg.attention == "mla":
+        # absorbed form: scores vs ckv (lora) + rope, values from ckv
+        per_tok = 2.0 * cfg.num_heads * (
+            2 * cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        ) * S_cache
+    else:
+        Dh = cfg.head_dim or 0
+        per_tok = 4.0 * cfg.num_kv_heads * Dh * S_cache * (
+            cfg.num_heads / max(cfg.num_kv_heads, 1)
+        )
+    window_frac = 1.0
+    if cfg.window is not None and cfg.window < S_cache:
+        n_global = len(cfg.global_layers)
+        frac = cfg.window / S_cache
+        window_frac = (n_global + (cfg.num_layers - n_global) * frac) / cfg.num_layers
+    return per_tok * L * B * window_frac

@@ -1,0 +1,43 @@
+"""repro.core — the paper's contribution: a work-stealing thread pool capable
+of running task graphs (Puyda 2024), plus the trace-time schedule simulator
+that adapts its execution policy to statically-scheduled TPU programs."""
+from .baseline import NaiveThreadPool, SerialExecutor
+from .deque import EMPTY, ChaseLevDeque, FastDeque
+from .graph import CycleError, TaskGraph
+from .pool import Future, ThreadPool
+from .schedule import (
+    PipelineOp,
+    SimResult,
+    SimTask,
+    gpipe_schedule,
+    peak_activation_buffers,
+    pipeline_schedule,
+    pipeline_task_graph,
+    schedule_to_table,
+    simulate,
+)
+from .task import CancelledError, Task, iter_graph
+
+__all__ = [
+    "NaiveThreadPool",
+    "SerialExecutor",
+    "EMPTY",
+    "ChaseLevDeque",
+    "FastDeque",
+    "CycleError",
+    "TaskGraph",
+    "Future",
+    "ThreadPool",
+    "CancelledError",
+    "Task",
+    "iter_graph",
+    "PipelineOp",
+    "SimResult",
+    "SimTask",
+    "simulate",
+    "pipeline_task_graph",
+    "pipeline_schedule",
+    "gpipe_schedule",
+    "schedule_to_table",
+    "peak_activation_buffers",
+]

@@ -1,0 +1,153 @@
+"""Baseline executors the paper's design is compared against.
+
+The paper benchmarks its work-stealing pool against Taskflow (C++). Taskflow
+is not available here, so EXPERIMENTS.md compares against the designs the
+paper positions itself against in §1–2:
+
+* :class:`NaiveThreadPool` — the "typical" pre-work-stealing design: a single
+  mutex-protected global FIFO queue shared by all workers. Same Task-graph
+  semantics (dependency counting), but every push/pop contends on one lock
+  and there is no continuation passing — newly-ready successors are always
+  re-queued.
+
+* ``SerialExecutor`` — runs a task graph topologically on the calling thread;
+  the zero-overhead floor for scheduling-overhead measurements.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque as _pydeque
+from typing import Any, Callable, Iterable, Optional, Union
+
+from .task import Task, iter_graph
+
+__all__ = ["NaiveThreadPool", "SerialExecutor"]
+
+
+class NaiveThreadPool:
+    """Single locked global queue, no stealing, no continuation passing."""
+
+    def __init__(self, num_threads: Optional[int] = None) -> None:
+        import os
+
+        n = num_threads if num_threads is not None else (os.cpu_count() or 1)
+        self._q: _pydeque[Task] = _pydeque()
+        self._cond = threading.Condition()
+        self._unfinished = 0
+        self._stop = False
+        self._first_error: Optional[BaseException] = None
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"naive-{i}", daemon=True)
+            for i in range(n)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        if isinstance(work, Task):
+            self._push(work)
+        elif callable(work):
+            self._push(Task(work))
+        else:
+            tasks = list(work)
+            graph = iter_graph(tasks)
+            for t in graph:
+                t.reset()
+            for t in graph:
+                if t.num_predecessors == 0:
+                    self._push(t)
+
+    def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        self.submit(work)
+        self.wait_idle()
+
+    def wait_idle(self, timeout: Optional[float] = None) -> None:
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._unfinished == 0, timeout):
+                raise TimeoutError("pool did not become idle within timeout")
+            err, self._first_error = self._first_error, None
+        if err is not None:
+            raise err
+
+    def close(self) -> None:
+        with self._cond:
+            if self._stop:
+                return
+            self._stop = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join()
+
+    def __enter__(self) -> "NaiveThreadPool":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # -- internals ------------------------------------------------------------
+
+    def _push(self, task: Task) -> None:
+        with self._cond:
+            self._unfinished += 1
+            self._q.append(task)
+            self._cond.notify()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                while not self._q and not self._stop:
+                    self._cond.wait()
+                if self._stop:
+                    return
+                task = self._q.popleft()
+            try:
+                task.run()
+            except BaseException as exc:  # noqa: BLE001
+                task.exception = exc
+                with self._cond:
+                    if self._first_error is None:
+                        self._first_error = exc
+            ready = [s for s in task.successors if s.decrement()]
+            with self._cond:
+                for s in ready:
+                    self._unfinished += 1
+                    self._q.append(s)
+                if ready:
+                    self._cond.notify_all()
+                self._unfinished -= 1
+                if self._unfinished == 0:
+                    self._cond.notify_all()
+
+
+class SerialExecutor:
+    """Topological execution on the calling thread (overhead floor)."""
+
+    def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        if isinstance(work, Task):
+            tasks = iter_graph([work])
+        elif callable(work):
+            Task(work).run()
+            return
+        else:
+            tasks = iter_graph(list(work))
+        for t in tasks:
+            t.reset()
+        stack = [t for t in tasks if t.num_predecessors == 0]
+        while stack:
+            t = stack.pop()
+            t.run()
+            for s in t.successors:
+                if s.decrement():
+                    stack.append(s)
+
+    def close(self) -> None:  # interface parity
+        pass
+
+    def wait_idle(self, timeout: Optional[float] = None) -> None:
+        pass
+
+    def __enter__(self) -> "SerialExecutor":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        pass

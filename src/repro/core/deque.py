@@ -1,0 +1,195 @@
+"""Work-stealing deques — Python adaptations of the Chase-Lev deque.
+
+The paper (Puyda 2024, §2.1) builds its thread pool on the Chase-Lev
+work-stealing deque [Chase & Lev, SPAA'05; Le et al., PPoPP'13]: each worker
+owns one deque, pushes and pops at the *bottom*, and thieves steal at the
+*top*. The C/C++ implementations need careful atomics and memory fences; the
+paper discusses sanitizer false positives around ``std::atomic_thread_fence``
+and adopts the fence-free Google Filament variant.
+
+CPython gives us a different memory model: the GIL serializes bytecodes, so a
+single ``collections.deque`` operation is atomic and sequentially consistent.
+Two adaptations are provided:
+
+* :class:`FastDeque` — the production deque. ``collections.deque`` with the
+  owner operating on the right end and thieves on the left end. Under the GIL
+  every operation is atomic, so this is the moral equivalent of the fence-free
+  Filament implementation: no locks on any path.
+
+* :class:`ChaseLevDeque` — a faithful *structural* port of the Chase-Lev
+  ring-buffer algorithm (explicit ``top``/``bottom`` indices, growable ring).
+  CPython exposes no CAS, so the single compare-and-swap that guards the
+  one-element owner/thief race is replaced by a lock acquired **only** on the
+  steal path and on the owner's last-element path — exactly the race the CAS
+  guards in C11. The common owner push/pop path takes no lock, mirroring the
+  lock-free fast path of the original.
+
+Both classes expose ``push`` (owner, bottom), ``pop`` (owner, bottom, LIFO)
+and ``steal`` (any thread, top, FIFO); ``pop``/``steal`` return :data:`EMPTY`
+when nothing was taken, allowing ``None`` payloads. Chase-Lev deques are
+single-producer, so non-worker submissions go through the pool's shared MPMC
+inbox (a :class:`FastDeque`, whose every op is GIL-atomic) rather than into a
+worker's deque — see ``pool.py``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque as _pydeque
+from typing import Any
+
+__all__ = ["EMPTY", "FastDeque", "ChaseLevDeque"]
+
+
+class _Empty:
+    """Sentinel distinguishing 'nothing taken' from a ``None`` payload."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "<EMPTY>"
+
+    def __bool__(self) -> bool:
+        return False
+
+
+EMPTY = _Empty()
+
+
+class FastDeque:
+    """GIL-atomic work-stealing deque (the default, fence-free analogue).
+
+    Owner pushes/pops at the right end (LIFO — depth-first execution order,
+    which is what makes recursive task graphs cache-friendly); thieves steal
+    at the left end (FIFO — stealing the *oldest*, typically largest, task).
+    ``collections.deque.append/pop/popleft`` are each a single bytecode in
+    CPython, hence atomic under the GIL, so no fences or locks are needed —
+    the GIL plays the role the memory-model proofs play for the C11 code.
+    """
+
+    __slots__ = ("_q",)
+
+    def __init__(self) -> None:
+        self._q: _pydeque[Any] = _pydeque()
+
+    def push(self, item: Any) -> None:
+        """Owner-side push at the bottom (right)."""
+        self._q.append(item)
+
+    def push_external(self, item: Any) -> None:
+        """Submission from a non-owner thread.
+
+        Pushed at the *top* (left) so external work is stolen/obtained in FIFO
+        order and the owner's LIFO hot path is undisturbed. Atomic under GIL.
+        """
+        self._q.appendleft(item)
+
+    def pop(self) -> Any:
+        """Owner-side pop at the bottom (right). Returns EMPTY if none."""
+        try:
+            return self._q.pop()
+        except IndexError:
+            return EMPTY
+
+    def steal(self) -> Any:
+        """Thief-side steal at the top (left). Returns EMPTY if none."""
+        try:
+            return self._q.popleft()
+        except IndexError:
+            return EMPTY
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class ChaseLevDeque:
+    """Structural port of the Chase-Lev growable ring-buffer deque.
+
+    Layout follows Le et al. (PPoPP'13): ``_top`` and ``_bottom`` are
+    monotonically increasing 64-bit-style indices into a power-of-two ring.
+    The owner manipulates ``_bottom``; thieves advance ``_top``.
+
+    The C11 version resolves the owner/thief race on the *last* element with a
+    CAS on ``top``. CPython has no CAS, so ``_lock`` protects exactly that
+    race: every steal holds it, and the owner takes it only when it observes
+    ``bottom - 1 == top`` (one element left). The owner's multi-element
+    push/pop path is lock-free, as in the original.
+    """
+
+    __slots__ = ("_buf", "_mask", "_top", "_bottom", "_lock")
+
+    def __init__(self, capacity: int = 64) -> None:
+        if capacity & (capacity - 1):
+            raise ValueError("capacity must be a power of two")
+        self._buf: list[Any] = [None] * capacity
+        self._mask = capacity - 1
+        self._top = 0
+        self._bottom = 0
+        self._lock = threading.Lock()
+
+    # -- owner side ---------------------------------------------------------
+
+    def push(self, item: Any) -> None:
+        b = self._bottom
+        t = self._top
+        if b - t > self._mask:  # full: grow (rare; lock so thieves see a
+            with self._lock:  # consistent buffer during the copy)
+                self._grow()
+        self._buf[b & self._mask] = item
+        # Publication point. In C11 this is a release store of `bottom`;
+        # under the GIL a plain store is sequentially consistent.
+        self._bottom = b + 1
+
+    def pop(self) -> Any:
+        b = self._bottom - 1
+        self._bottom = b  # reserve slot b (C11: relaxed store + SC fence)
+        t = self._top
+        if b < t:  # deque was empty
+            self._bottom = t
+            return EMPTY
+        if b > t:  # more than one element: no race possible on slot b
+            item = self._buf[b & self._mask]
+            self._buf[b & self._mask] = None
+            return item
+        # exactly one element left: the CAS-guarded race
+        with self._lock:
+            t = self._top
+            if t <= b:  # we won: claim it by advancing top past it
+                item = self._buf[b & self._mask]
+                self._buf[b & self._mask] = None
+                self._top = t + 1
+                self._bottom = t + 1
+                return item
+            self._bottom = t  # lost to a thief
+            return EMPTY
+
+    # -- thief side ----------------------------------------------------------
+
+    def steal(self) -> Any:
+        with self._lock:
+            t = self._top
+            if t >= self._bottom:
+                return EMPTY
+            item = self._buf[t & self._mask]
+            self._buf[t & self._mask] = None
+            self._top = t + 1
+            return item
+
+    # -- internals -----------------------------------------------------------
+
+    def _grow(self) -> None:
+        """Double the ring. Caller holds ``_lock``."""
+        old, mask = self._buf, self._mask
+        cap = (mask + 1) * 2
+        buf = [None] * cap
+        for i in range(self._top, self._bottom):
+            buf[i & (cap - 1)] = old[i & mask]
+        self._buf = buf
+        self._mask = cap - 1
+
+    def __len__(self) -> int:
+        return max(0, self._bottom - self._top)

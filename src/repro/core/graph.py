@@ -1,0 +1,132 @@
+"""TaskGraph convenience container on top of ``task.py``.
+
+The paper's API works on any iterable of ``Task`` objects;
+:class:`TaskGraph` adds the bookkeeping a framework wants: named task
+creation, cycle validation (Kahn), root discovery, DOT export, and
+helpers to build common shapes (map/reduce, wavefronts) used by the data
+pipeline, checkpointing and benchmarks.
+"""
+from __future__ import annotations
+
+from collections import deque as _pydeque
+from typing import Any, Callable, Iterator, Optional, Sequence
+
+from .task import Task
+
+__all__ = ["TaskGraph", "CycleError"]
+
+
+class CycleError(ValueError):
+    """The task graph contains a dependency cycle."""
+
+
+class TaskGraph:
+    def __init__(self, name: str = "") -> None:
+        self.name = name
+        self.tasks: list[Task] = []
+
+    # -- construction -----------------------------------------------------------
+
+    def add(self, fn: Optional[Callable[[], Any]] = None, *, name: str = "") -> Task:
+        t = Task(fn, name=name or f"t{len(self.tasks)}")
+        self.tasks.append(t)
+        return t
+
+    def emplace_back(self, fn: Optional[Callable[[], Any]] = None) -> Task:
+        """Paper-style alias (``tasks.emplace_back([...])``)."""
+        return self.add(fn)
+
+    def map_reduce(
+        self,
+        map_fns: Sequence[Callable[[], Any]],
+        reduce_fn: Callable[[], Any],
+        *,
+        name: str = "reduce",
+    ) -> Task:
+        """Fan-out/fan-in: ``reduce_fn`` runs after every mapped task."""
+        mapped = [self.add(fn, name=f"map{i}") for i, fn in enumerate(map_fns)]
+        red = self.add(reduce_fn, name=name)
+        red.succeed(*mapped)
+        return red
+
+    def chain(self, fns: Sequence[Callable[[], Any]], *, name: str = "chain") -> list[Task]:
+        """Sequential chain of tasks."""
+        out: list[Task] = []
+        for i, fn in enumerate(fns):
+            t = self.add(fn, name=f"{name}{i}")
+            if out:
+                t.succeed(out[-1])
+            out.append(t)
+        return out
+
+    # -- inspection ---------------------------------------------------------------
+
+    def roots(self) -> list[Task]:
+        return [t for t in self.tasks if t.num_predecessors == 0]
+
+    def validate(self) -> None:
+        """Raise :class:`CycleError` unless the graph is a DAG (Kahn)."""
+        indeg = {id(t): t.num_predecessors for t in self.tasks}
+        known = set(indeg)
+        q = _pydeque(t for t in self.tasks if t.num_predecessors == 0)
+        visited = 0
+        while q:
+            t = q.popleft()
+            visited += 1
+            for s in t.successors:
+                if id(s) not in known:  # successor outside this container
+                    known.add(id(s))
+                    indeg[id(s)] = s.num_predecessors
+                    self.tasks.append(s)
+                indeg[id(s)] -= 1
+                if indeg[id(s)] == 0:
+                    q.append(s)
+        if visited != len(self.tasks):
+            raise CycleError(
+                f"task graph {self.name!r}: {len(self.tasks) - visited} task(s) "
+                "unreachable from roots — dependency cycle"
+            )
+
+    def critical_path(self, cost: Callable[[Task], float] = lambda _t: 1.0) -> float:
+        """Length of the longest dependency chain (lower bound on makespan)."""
+        self.validate()
+        order = self._topo_order()
+        dist = {id(t): cost(t) for t in order}
+        for t in order:
+            for s in t.successors:
+                if id(s) in dist:
+                    dist[id(s)] = max(dist[id(s)], dist[id(t)] + cost(s))
+        return max(dist.values(), default=0.0)
+
+    def _topo_order(self) -> list[Task]:
+        indeg = {id(t): t.num_predecessors for t in self.tasks}
+        q = _pydeque(t for t in self.tasks if t.num_predecessors == 0)
+        order: list[Task] = []
+        while q:
+            t = q.popleft()
+            order.append(t)
+            for s in t.successors:
+                indeg[id(s)] -= 1
+                if indeg[id(s)] == 0:
+                    q.append(s)
+        return order
+
+    def to_dot(self) -> str:
+        lines = [f'digraph "{self.name or "taskgraph"}" {{']
+        idx = {id(t): i for i, t in enumerate(self.tasks)}
+        for t in self.tasks:
+            lines.append(f'  n{idx[id(t)]} [label="{t.name}"];')
+        for t in self.tasks:
+            for s in t.successors:
+                if id(s) in idx:
+                    lines.append(f"  n{idx[id(t)]} -> n{idx[id(s)]};")
+        lines.append("}")
+        return "\n".join(lines)
+
+    # -- protocol ------------------------------------------------------------------
+
+    def __iter__(self) -> Iterator[Task]:
+        return iter(self.tasks)
+
+    def __len__(self) -> int:
+        return len(self.tasks)

@@ -1,0 +1,273 @@
+"""Work-stealing thread pool capable of running task graphs (paper §2).
+
+Faithful Python adaptation of the paper's C++ design:
+
+* one work-stealing deque per worker thread (``deque.py``);
+* the current worker's deque is found through a **thread-local** variable
+  (the paper's replacement for thread-ID→index maps, §2.1);
+* a task submitted *from* a worker thread is pushed to that worker's own
+  deque (depth-first, cache-friendly); tasks submitted from outside land in a
+  shared MPMC inbox (Chase-Lev deques are single-producer — see deque.py);
+* idle workers first pop their own deque, then drain the inbox, then sweep
+  the other workers' deques stealing from the top, then park;
+* task-graph execution by dependency counting (§2.2): when a task body
+  completes, every successor's pending-predecessor counter is decremented;
+  **one** newly-ready successor is executed inline on the same worker
+  (continuation passing), the others are pushed.
+
+Differences from the C++ original are documented in DESIGN.md §2.1.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Callable, Iterable, Optional, Sequence, Union
+
+from .deque import EMPTY, ChaseLevDeque, FastDeque
+from .task import CancelledError, Task, iter_graph
+
+__all__ = ["ThreadPool", "Future"]
+
+_PARK_TIMEOUT_S = 0.05  # bounded park: robust against missed wakeups
+
+
+class Future:
+    """Minimal completion handle for ``ThreadPool.submit_future``."""
+
+    __slots__ = ("_event", "_result", "_exception")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._result: Any = None
+        self._exception: Optional[BaseException] = None
+
+    def set_result(self, value: Any) -> None:
+        self._result = value
+        self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("future not completed within timeout")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+
+class ThreadPool:
+    """Work-stealing thread pool running async tasks and task graphs.
+
+    Parameters
+    ----------
+    num_threads:
+        Worker count; defaults to ``os.cpu_count()`` — the analogue of the
+        paper's ``std::thread::hardware_concurrency()`` default.
+    deque_cls:
+        ``FastDeque`` (default, GIL-atomic / fence-free analogue) or
+        ``ChaseLevDeque`` (faithful structural port; used in tests).
+    """
+
+    def __init__(
+        self,
+        num_threads: Optional[int] = None,
+        *,
+        deque_cls: type = FastDeque,
+        name: str = "repro-pool",
+    ) -> None:
+        n = num_threads if num_threads is not None else (os.cpu_count() or 1)
+        if n < 1:
+            raise ValueError("num_threads must be >= 1")
+        self._deques = [deque_cls() for _ in range(n)]
+        self._inbox = FastDeque()  # MPMC under the GIL
+        self._tls = threading.local()
+        self._cond = threading.Condition()
+        self._unfinished = 0  # tasks claimed but not yet completed
+        self._stop = False
+        self._first_error: Optional[BaseException] = None
+        self._executed = 0  # statistics (approximate across threads)
+        self._steals = 0
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,), name=f"{name}-{i}", daemon=True)
+            for i in range(n)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- public API -----------------------------------------------------------
+
+    @property
+    def num_threads(self) -> int:
+        return len(self._deques)
+
+    def submit(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        """Submit a callable, a single Task, or a task graph (iterable).
+
+        Graph submission mirrors the paper: counters of every task reachable
+        from the collection are re-armed, then all roots (tasks with no
+        predecessors) are scheduled.
+        """
+        if isinstance(work, Task):
+            self._schedule(work)
+        elif callable(work):
+            self._schedule(Task(work))
+        else:
+            tasks = list(work)
+            graph = iter_graph(tasks)
+            for t in graph:
+                t.reset()
+            roots = [t for t in graph if t.num_predecessors == 0]
+            if not roots and graph:
+                raise ValueError("task graph has no roots (dependency cycle?)")
+            for t in roots:
+                self._schedule(t)
+
+    # paper-style alias
+    Submit = submit
+
+    def submit_future(self, fn: Callable[[], Any]) -> Future:
+        """Submit a callable and get a :class:`Future` for its result."""
+        fut = Future()
+
+        def body() -> None:
+            try:
+                fut.set_result(fn())
+            except BaseException as exc:  # noqa: BLE001 - delivered via the
+                fut.set_exception(exc)  # future only; does not poison the pool
+
+        self._schedule(Task(body))
+        return fut
+
+    def wait_idle(self, timeout: Optional[float] = None) -> None:
+        """Block until every claimed task has completed.
+
+        Re-raises the first task exception, if any (then clears it).
+        """
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._unfinished == 0, timeout):
+                raise TimeoutError("pool did not become idle within timeout")
+            err, self._first_error = self._first_error, None
+        if err is not None:
+            raise err
+
+    def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        """``submit`` + ``wait_idle`` convenience."""
+        self.submit(work)
+        self.wait_idle()
+
+    def close(self) -> None:
+        """Stop the workers (idempotent). Pending tasks are abandoned."""
+        with self._cond:
+            if self._stop:
+                return
+            self._stop = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join()
+
+    def stats(self) -> dict[str, int]:
+        return {"executed": self._executed, "steals": self._steals}
+
+    def __enter__(self) -> "ThreadPool":
+        return self
+
+    def __exit__(self, *exc_info: Any) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # pragma: no cover - interpreter shutdown path
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- scheduling internals ---------------------------------------------------
+
+    def _schedule(self, task: Task) -> None:
+        """Claim ``task`` (+1 unfinished) and enqueue it.
+
+        From a worker thread: push to the worker's own deque, found through
+        the thread-local variable (paper §2.1). Otherwise: shared inbox.
+        """
+        with self._cond:
+            self._unfinished += 1
+            self._cond.notify()
+        idx = getattr(self._tls, "index", None)
+        if idx is not None:
+            self._deques[idx].push(task)
+        else:
+            self._inbox.push_external(task)
+
+    def _worker(self, index: int) -> None:
+        self._tls.index = index
+        own = self._deques[index]
+        n = len(self._deques)
+        while True:
+            task = self._next_task(index, own, n)
+            if task is EMPTY:
+                with self._cond:
+                    if self._stop:
+                        return
+                # Bounded park instead of a racy empty-recheck protocol: a
+                # submit between our sweep and the wait costs at most one
+                # timeout tick.
+                with self._cond:
+                    self._cond.wait(_PARK_TIMEOUT_S)
+            else:
+                self._execute(task)
+
+    def _next_task(self, index: int, own: Any, n: int) -> Any:
+        # 1. own deque, bottom (LIFO depth-first)
+        task = own.pop()
+        if task is not EMPTY:
+            return task
+        # 2. shared inbox (external submissions), FIFO
+        task = self._inbox.steal()
+        if task is not EMPTY:
+            return task
+        # 3. sweep victims, stealing from the top (FIFO)
+        for k in range(1, n):
+            task = self._deques[(index + k) % n].steal()
+            if task is not EMPTY:
+                self._steals += 1
+                return task
+        return EMPTY
+
+    def _execute(self, first: Task) -> None:
+        """Run a task, then its ready successors via continuation passing."""
+        task: Optional[Task] = first
+        while task is not None:
+            try:
+                if self._first_error is not None:
+                    # fail-fast: skip bodies once the graph is poisoned, but
+                    # keep draining dependencies so waiters unblock.
+                    task.exception = CancelledError("predecessor failed")
+                    task._done = True  # noqa: SLF001 - internal protocol
+                else:
+                    task.run()
+            except BaseException as exc:  # noqa: BLE001 - recorded + re-raised in wait
+                task.exception = exc
+                with self._cond:
+                    if self._first_error is None:
+                        self._first_error = exc
+            self._executed += 1
+            # Fan out (paper §2.2): decrement successors; run ONE newly-ready
+            # successor inline, push the rest.
+            inline: Optional[Task] = None
+            for s in task.successors:
+                if s.decrement():
+                    if inline is None:
+                        with self._cond:
+                            self._unfinished += 1
+                        inline = s
+                    else:
+                        self._schedule(s)
+            with self._cond:
+                self._unfinished -= 1
+                if self._unfinished == 0:
+                    self._cond.notify_all()
+            task = inline

@@ -1,0 +1,144 @@
+"""Task-graph primitives (paper §2.2).
+
+A :class:`Task` is a thin wrapper over a nullary callable. Each task stores
+references to its *successor* tasks and a counter of uncompleted
+*predecessor* tasks. When the thread pool finishes a task body it decrements
+the counter of every successor; one successor whose counter hits zero is
+executed inline on the same worker thread (continuation passing), and any
+other newly-ready successors are submitted to the pool. That policy is
+implemented in ``pool.py``; this module only defines the data structure and
+the dependency-wiring API.
+
+The public API mirrors the paper::
+
+    tasks: list[Task] = []
+    get_a = Task(lambda: ...)
+    get_sum = Task(lambda: ...)
+    get_sum.succeed(get_a, get_b)     # get_sum runs after get_a and get_b
+    pool.submit(tasks)
+
+``Succeed`` is kept as an alias for drop-in similarity with the C++ API.
+
+The C++ implementation uses ``std::atomic<int>`` for the predecessor counter.
+CPython's ``x -= 1`` is three bytecodes (load/sub/store) and *not* atomic, so
+each task carries a tiny lock guarding the decrement — the direct analogue of
+``fetch_sub`` (contended only at the instant a join point completes).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Iterable, Optional
+
+__all__ = ["Task", "CancelledError"]
+
+
+class CancelledError(RuntimeError):
+    """Raised for tasks skipped because a predecessor failed."""
+
+
+class Task:
+    """A unit of work plus its task-graph bookkeeping.
+
+    Attributes
+    ----------
+    fn:
+        The wrapped callable (no arguments, return value ignored — use
+        closures/captures for data flow, as in the paper).
+    successors:
+        Tasks that depend on this one.
+    num_predecessors:
+        Static in-degree, set up via :meth:`succeed`.
+    """
+
+    __slots__ = (
+        "fn",
+        "name",
+        "successors",
+        "num_predecessors",
+        "_pending",
+        "_lock",
+        "_done",
+        "exception",
+    )
+
+    def __init__(self, fn: Optional[Callable[[], Any]] = None, name: str = "") -> None:
+        self.fn = fn
+        self.name = name
+        self.successors: list[Task] = []
+        self.num_predecessors = 0
+        self._pending = 0  # runtime countdown; reset() restores it
+        self._lock = threading.Lock()
+        self._done = False
+        self.exception: Optional[BaseException] = None
+
+    # -- graph wiring ---------------------------------------------------------
+
+    def succeed(self, *predecessors: "Task") -> "Task":
+        """Declare that ``self`` runs after every task in ``predecessors``.
+
+        Matches the paper's ``task.Succeed(&a, &b)``. Returns ``self`` so
+        calls can be chained.
+        """
+        for p in predecessors:
+            p.successors.append(self)
+            self.num_predecessors += 1
+        self._pending = self.num_predecessors
+        return self
+
+    def precede(self, *successors: "Task") -> "Task":
+        """Inverse wiring convenience: ``self`` runs before ``successors``."""
+        for s in successors:
+            s.succeed(self)
+        return self
+
+    # C++-style aliases
+    Succeed = succeed
+    Precede = precede
+
+    # -- runtime ---------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Re-arm the countdown so the same graph can be resubmitted."""
+        self._pending = self.num_predecessors
+        self._done = False
+        self.exception = None
+
+    def decrement(self) -> bool:
+        """Atomically decrement the pending count; True when it reaches zero.
+
+        Analogue of ``fetch_sub(1) == 1`` in the C++ implementation.
+        """
+        with self._lock:
+            self._pending -= 1
+            return self._pending == 0
+
+    @property
+    def is_ready(self) -> bool:
+        return self._pending == 0 and not self._done
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def run(self) -> None:
+        """Execute the wrapped callable (exceptions handled by the pool)."""
+        if self.fn is not None:
+            self.fn()
+        self._done = True
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        nm = self.name or (getattr(self.fn, "__name__", "") if self.fn else "")
+        return f"Task({nm!r}, preds={self.num_predecessors}, succs={len(self.successors)})"
+
+
+def iter_graph(tasks: Iterable[Task]) -> list[Task]:
+    """All tasks reachable from ``tasks`` through successor edges."""
+    seen: dict[int, Task] = {}
+    stack = list(tasks)
+    while stack:
+        t = stack.pop()
+        if id(t) in seen:
+            continue
+        seen[id(t)] = t
+        stack.extend(t.successors)
+    return list(seen.values())

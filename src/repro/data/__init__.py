@@ -1,0 +1,4 @@
+from .pipeline import Prefetcher
+from .synthetic import MemmapTokens, SyntheticTokens
+
+__all__ = ["Prefetcher", "SyntheticTokens", "MemmapTokens"]

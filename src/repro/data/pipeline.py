@@ -1,0 +1,79 @@
+"""ThreadPool-driven input pipeline: the paper's scheduler in production.
+
+Each batch is a small task graph
+    generate (CPU, numpy)  ->  device_put (transfer)
+submitted ``depth`` steps ahead on the work-stealing pool, so host-side data
+work overlaps device steps (the GIL-releasing regime the pool targets —
+DESIGN.md §2). The pipeline cursor is just the step index: checkpointable
+and restorable with no draining protocol. Straggler mitigation falls out of
+work stealing: a slow generate task gets picked up by whichever worker goes
+idle first, and ``depth`` bounds how far ahead we buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core import Future, TaskGraph, ThreadPool
+
+
+class Prefetcher:
+    def __init__(
+        self,
+        source: Any,  # .batch(step) -> dict of np arrays
+        *,
+        pool: Optional[ThreadPool] = None,
+        depth: int = 2,
+        start_step: int = 0,
+        put_fn: Optional[Callable[[dict], Any]] = None,  # e.g. sharded device_put
+    ) -> None:
+        self.source = source
+        self.pool = pool or ThreadPool(2)
+        self._own_pool = pool is None
+        self.depth = max(1, depth)
+        self.put_fn = put_fn or (lambda b: jax.tree.map(jax.numpy.asarray, b))
+        self._inflight: dict[int, Future] = {}
+        self._next_submit = start_step
+        self._next_read = start_step
+        for _ in range(self.depth):
+            self._submit_one()
+
+    # -- internals ------------------------------------------------------------
+
+    def _submit_one(self) -> None:
+        step = self._next_submit
+        self._next_submit += 1
+
+        def produce():
+            host_batch = self.source.batch(step)  # numpy work
+            return self.put_fn(host_batch)  # transfer (GIL-releasing)
+
+        self._inflight[step] = self.pool.submit_future(produce)
+
+    # -- public ------------------------------------------------------------------
+
+    def get(self, timeout: float = 120.0) -> Any:
+        """Next batch, in order; refills the prefetch window."""
+        step = self._next_read
+        self._next_read += 1
+        fut = self._inflight.pop(step)
+        batch = fut.result(timeout)
+        self._submit_one()
+        return batch
+
+    @property
+    def cursor(self) -> int:
+        """Checkpointable resume point (first unconsumed step)."""
+        return self._next_read
+
+    def close(self) -> None:
+        self._inflight.clear()
+        if self._own_pool:
+            self.pool.close()
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

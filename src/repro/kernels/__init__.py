@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots (validated in interpret
+mode on CPU; see DESIGN.md §6): flash attention + Mamba2 SSD scan."""
+from . import ops, ref
+from .flash_attention import flash_attention_bhsd
+from .ssd import ssd_bshp
+
+__all__ = ["ops", "ref", "flash_attention_bhsd", "ssd_bshp"]

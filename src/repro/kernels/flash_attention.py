@@ -1,0 +1,165 @@
+"""Flash attention Pallas TPU kernel (blocked online softmax, GQA-aware).
+
+TPU adaptation notes (DESIGN.md §6): the GPU flash-attention algorithm is
+re-tiled for the TPU memory hierarchy — Q tiles of (block_q, head_dim) live
+in VMEM; K/V stream through VMEM one (block_k, head_dim) tile per grid step;
+the running max/denominator/accumulator persist in VMEM scratch across the
+K-block grid axis (TPU grids execute sequentially, so scratch is the carry).
+All matmul shapes are (128 × head_dim)-aligned for the MXU; softmax
+statistics are f32.
+
+Grid: (batch × q_heads, num_q_blocks, num_k_blocks); K/V tiles are indexed
+through the folded (batch, kv_head) coordinate so GQA groups share tiles.
+
+Supports: causal masking, sliding window, valid-length (padded keys) and
+full (bidirectional) attention. The pure-jnp oracle lives in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, block_q, Dh)
+    k_ref,  # (1, block_k, Dh)
+    v_ref,  # (1, block_k, Dh)
+    o_ref,  # (1, block_q, Dh)
+    m_scr,  # (block_q,) f32 running max
+    l_scr,  # (block_q,) f32 running denominator
+    acc_scr,  # (block_q, Dh) f32 accumulator
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    causal: bool,
+    window: Optional[int],
+    k_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def compute():
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (block_q, block_k)
+        mask = k_pos < k_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    # tile-level skip: upper-triangular tiles under causality, tiles entirely
+    # left of the window — the blocked analogue of flash attention's
+    # "skip fully-masked blocks" (also what makes causal ~2x cheaper).
+    relevant = None
+    if causal:
+        relevant = ki * block_k <= (qi + 1) * block_q - 1
+    if window is not None:
+        in_win = (ki + 1) * block_k - 1 > qi * block_q - window
+        relevant = in_win if relevant is None else jnp.logical_and(relevant, in_win)
+    if relevant is None:
+        compute()
+    else:
+        pl.when(relevant)(compute)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, Sq, Dh)
+    k: jax.Array,  # (B, KV, Sk, Dh)
+    v: jax.Array,  # (B, KV, Sk, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_len: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core entry point; layout (batch, heads, seq, head_dim)."""
+    B, H, Sq, Dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = Dh**-0.5
+    k_len = Sk if k_len is None else k_len
+
+    qf = q.reshape(B * H, Sq, Dh)
+    kf = k.reshape(B * KV, Sk, Dh)
+    vf = v.reshape(B * KV, Sk, Dh)
+
+    def q_index(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * KV + h // G, ki, 0)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+        causal=causal,
+        window=window,
+        k_len=k_len,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dh), q_index),
+            pl.BlockSpec((1, block_k, Dh), kv_index),
+            pl.BlockSpec((1, block_k, Dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dh), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, Dh)

@@ -1,0 +1,65 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These adapt the model-layer layouts ((B, S, H, Dh) activations) to the
+kernel layouts, pick block sizes, and fall back to interpret mode off-TPU
+(so the same call sites work in CPU tests; the dry-run lowers the jnp
+reference path instead — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .ssd import ssd_bshp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, Dh) — model layout
+    k: jax.Array,  # (B, Sk, KV, Dh)
+    v: jax.Array,  # (B, Sk, KV, Dh)
+    bias: Optional[jax.Array] = None,  # ignored: masks via causal/window
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    del bias
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 64,
+) -> jax.Array:
+    return ssd_bshp(x, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())

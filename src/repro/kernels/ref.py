@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_reference  # noqa: F401  (the SSD oracle)
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, Dh)
+    k: jax.Array,  # (B, KV, Sk, Dh)
+    v: jax.Array,  # (B, KV, Sk, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_len: Optional[int] = None,
+) -> jax.Array:
+    """Dense f32 softmax attention with GQA head grouping."""
+    B, H, Sq, Dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, Dh).astype(jnp.float32) * Dh**-0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if k_len is not None:
+        mask &= k_pos < k_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, vf)
+    return o.reshape(B, H, Sq, Dh).astype(q.dtype)

@@ -1,0 +1,126 @@
+"""Mamba2 SSD (state-space duality) Pallas TPU kernel.
+
+The SSD chunked scan is two matmul-shaped contractions per chunk plus a tiny
+sequential state recurrence — ideal MXU work if the chunk is tiled into VMEM.
+
+Grid: (batch, num_chunks). TPU grids execute sequentially (row-major, last
+dim fastest), so the inter-chunk state carry lives in a VMEM scratch buffer
+(H, P, N) f32 that persists across the chunk axis and is reset whenever a
+new batch row begins — the same scratch-as-carry idiom as the flash kernel.
+
+Per grid step, with one (chunk × heads) tile resident in VMEM:
+  L       = exp(segsum(dt*A))                 (H, cl, cl) intra-chunk decay
+  y_intra = (C Bᵀ ∘ L) @ (dt*x)               batched (cl,cl)@(cl,P) per head
+  y_inter = (C @ state_prev) * in_decay        (cl,N)@(N,P) per head
+  state   = state_prev * chunk_decay + (decay_to_end * B)ᵀ @ (dt*x)
+
+The pure-jnp oracle is models/ssm.ssd_reference (re-exported in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # (1, cl, H, P)
+    dt_ref,  # (1, cl, H) f32
+    a_ref,  # (H,) f32
+    b_ref,  # (1, cl, N)
+    c_ref,  # (1, cl, N)
+    y_ref,  # (1, cl, H, P)
+    state_scr,  # (H, P, N) f32 carry across chunks
+    *,
+    cl: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (cl, H, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (cl, H)
+    A = a_ref[...].astype(jnp.float32)  # (H,)
+    Bm = b_ref[0].astype(jnp.float32)  # (cl, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (cl, N)
+
+    dA = dt * A[None, :]  # (cl, H)
+    dA_cum = jnp.cumsum(dA, axis=0)  # (cl, H)
+    xdt = x * dt[..., None]  # (cl, H, P)
+
+    # intra-chunk: y[i] = sum_{j<=i} C_i·B_j exp(dA_cum_i - dA_cum_j) xdt_j
+    seg = dA_cum.T[:, :, None] - dA_cum.T[:, None, :]  # (H, cl, cl)
+    tril = (
+        jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    )
+    L = jnp.where(tril[None], jnp.exp(seg), 0.0)  # (H, cl, cl)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (cl, cl)
+    M = scores[None] * L  # (H, cl, cl)
+    xdt_h = xdt.transpose(1, 0, 2)  # (H, cl, P)
+    y_intra = jax.lax.dot_general(
+        M, xdt_h, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (H, cl, P)
+
+    # inter-chunk: y[i] += (C_i @ state_prev_h) * exp(dA_cum_i)
+    state = state_scr[...]  # (H, P, N)
+    y_inter = jax.lax.dot_general(
+        jnp.broadcast_to(Cm[None], (state.shape[0], cl, Cm.shape[1])),
+        state,
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (H, cl, P)
+    in_decay = jnp.exp(dA_cum).T  # (H, cl)
+    y = y_intra + y_inter * in_decay[:, :, None]
+    y_ref[0] = y.transpose(1, 0, 2).astype(y_ref.dtype)  # (cl, H, P)
+
+    # state update
+    chunk_decay = jnp.exp(dA_cum[-1, :])  # (H,)
+    decay_to_end = jnp.exp(dA_cum[-1:, :] - dA_cum)  # (cl, H)
+    bw = Bm[None, :, :] * decay_to_end.T[:, :, None]  # (H, cl, N)
+    new_contrib = jax.lax.dot_general(
+        xdt_h, bw, (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (H, P, N)
+    state_scr[...] = state * chunk_decay[:, None, None] + new_contrib
+
+
+def ssd_bshp(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) f32
+    A: jax.Array,  # (H,) f32
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    cl = min(chunk, S)
+    assert S % cl == 0, (S, cl)
+    nc = S // cl
+
+    kernel = functools.partial(_kernel, cl=cl)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, cl, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, cl, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, cl, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, cl, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cl, H, P), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), A.astype(jnp.float32), Bm, Cm)
+    return out

@@ -1,0 +1,252 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init. Everything below is ordinary code.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(**ShapeDtypeStruct inputs) . compile()
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, printing
+``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs/bytes for
+§Roofline), parsing collective traffic out of the partitioned HLO, and
+writing one JSON artifact per cell to benchmarks/artifacts/.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo import collective_traffic, op_histogram
+from repro.analysis.roofline import model_flops, terms_from_analysis
+from repro.configs import ARCH_NAMES, get_config, param_count
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.parallel.steps import build_decode_step, build_prefill, build_train_step
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, scan_probe=None, scan_unroll=False):
+    cfg = get_config(arch)
+    spec = cfg.shapes()[shape_name]
+    model = build_model(cfg, scan_probe=scan_probe, scan_unroll=scan_unroll)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_abstract = model.input_specs(shape_name, spec)
+    kind = spec["kind"]
+    with mesh:
+        if kind == "train":
+            ocfg = AdamWConfig(
+                moments_dtype="bfloat16" if param_count(cfg)["total"] > 1e11 else "float32"
+            )
+            step, shardings, abstract = build_train_step(
+                model, mesh, ocfg, cosine_schedule(3e-4, 2000, 100_000), batch_abstract
+            )
+            lowered = step.lower(
+                abstract["params"],
+                abstract["opt"],
+                batch_abstract,
+                jax.ShapeDtypeStruct((), jax.numpy.int32),
+            )
+        elif kind == "prefill":
+            step, shardings = build_prefill(model, mesh, batch_abstract)
+            lowered = step.lower(model.abstract_params(), batch_abstract)
+        else:  # decode
+            step, shardings = build_decode_step(model, mesh, batch_abstract)
+            lowered = step.lower(
+                model.abstract_params(),
+                batch_abstract["tokens"],
+                batch_abstract["caches"],
+                batch_abstract["index"],
+            )
+    return cfg, spec, mesh, lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    cfg, spec, mesh, lowered = lower_cell(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_info[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = collective_traffic(hlo)
+    hist = op_histogram(hlo)
+
+    # --- scan-depth correction -------------------------------------------------
+    # XLA cost analysis counts a while-loop body ONCE, regardless of trip
+    # count (verified by calibration), and layers live in scans. One probe
+    # compile with every multi-layer scan group at count=2 and fully
+    # UNROLLED gives base + 2*body; the full compile gives base + body;
+    # their difference is the per-group body cost, so
+    #   corrected = raw + (total_scan_layers - groups) * body_sum / groups
+    # (valid because each arch's multi-layer scan groups are homogeneous).
+    cfg_model = build_model(get_config(arch))
+    stats = cfg_model.scan_group_stats()
+    probe_info = {}
+    if stats["groups"] > 0:
+        _, _, _, lw = lower_cell(arch, shape_name, multi_pod, scan_probe=2, scan_unroll=True)
+        cp = lw.compile()
+        pc = cp.cost_analysis() or {}
+        probe = {
+            "flops": float(pc.get("flops", 0.0)),
+            "bytes": float(pc.get("bytes accessed", 0.0)),
+            "coll": collective_traffic(cp.as_text())["total_bytes"],
+        }
+        g, total_layers = stats["groups"], stats["layers"]
+        raws = {"flops": flops, "bytes": bytes_accessed, "coll": coll["total_bytes"]}
+
+        def corrected(key):
+            body_sum = max(probe[key] - raws[key], 0.0)  # = sum of body costs
+            return raws[key] + (total_layers - g) * body_sum / g
+
+        probe_info = {
+            "probe2_unrolled": probe,
+            "scan_groups": g,
+            "scan_layers": total_layers,
+            "flops_raw": flops,
+            "bytes_raw": bytes_accessed,
+            "coll_raw": coll["total_bytes"],
+        }
+        flops = corrected("flops")
+        bytes_accessed = corrected("bytes")
+        coll = dict(coll, total_bytes=corrected("coll"))
+
+    chips = 512 if multi_pod else 256
+    terms = terms_from_analysis(flops, bytes_accessed, coll["total_bytes"])
+    mf = model_flops(cfg, spec["seq_len"], spec["global_batch"], spec["kind"])
+    useful_per_chip = mf["total"] / chips
+    ratio = useful_per_chip / flops if flops else 0.0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": spec["kind"],
+        "seq_len": spec["seq_len"],
+        "global_batch": spec["global_batch"],
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_info,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collectives": coll,
+        "op_histogram": hist,
+        "scan_correction": probe_info,
+        "roofline": {
+            **terms.to_dict(),
+            "model_flops_total": mf["total"],
+            "model_flops_attention": mf["attention"],
+            "model_flops_per_chip": useful_per_chip,
+            "useful_flops_ratio": ratio,
+        },
+    }
+    if verbose:
+        dev_bytes = mem_info.get("argument_size_in_bytes", 0) + mem_info.get(
+            "temp_size_in_bytes", 0
+        )
+        print(
+            f"[OK] {arch:>22s} {shape_name:<12s} {mesh_name:<8s}"
+            f" compile={t_compile:6.1f}s args+temp={dev_bytes / 2**30:7.2f}GiB"
+            f" flops/dev={flops:.3e} coll={coll['total_bytes'] / 2**20:9.1f}MiB"
+            f" dominant={terms.dominant}",
+            flush=True,
+        )
+    return result
+
+
+def save_result(result: dict) -> pathlib.Path:
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    path = ART_DIR / name
+    path.write_text(json.dumps(result, indent=1, default=float))
+    return path
+
+
+def all_cells() -> list:
+    cells = []
+    for arch in ARCH_NAMES:
+        for shape_name in get_config(arch).shapes():
+            cells.append((arch, shape_name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        shapes = [args.shape] if args.shape else list(get_config(args.arch).shapes())
+        cells = [(args.arch, s) for s in shapes]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape_name in cells:
+        for multi_pod in meshes:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            out = ART_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if prev.get("ok"):
+                    print(f"[skip] {arch} {shape_name} {mesh_name}", flush=True)
+                    continue
+            try:
+                result = run_cell(arch, shape_name, multi_pod)
+            except Exception as e:  # noqa: BLE001 - report, continue sweep
+                failures += 1
+                result = {
+                    "arch": arch,
+                    "shape": shape_name,
+                    "mesh": mesh_name,
+                    "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"[FAIL] {arch} {shape_name} {mesh_name}: {e}", flush=True)
+            save_result(result)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh builders (assignment-fixed shapes).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and the dry-run
+must set XLA_FLAGS before that happens).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes_of(mesh) -> tuple:
+    return tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))

@@ -1,0 +1,3 @@
+from .lm import Model, build_model, stack_plan
+
+__all__ = ["Model", "build_model", "stack_plan"]

@@ -1,0 +1,227 @@
+"""Decoder/encoder blocks and scan-based layer stacks.
+
+Families:
+  dense / vlm     pre-norm attn + gated MLP
+  moe             pre-norm attn + (routed MoE | dense MLP for first_dense)
+  ssm             pre-norm Mamba2 SSD block (no separate MLP)
+  hybrid (hymba)  parallel attention + SSD heads fused, then MLP
+  encdec          whisper-style LayerNorm blocks, decoder adds cross-attn
+
+Stacks scan over stacked layer params (compile time O(1) in depth). Configs
+with ``global_layers`` (hymba: full-attention layers amid sliding-window
+layers, with differently-shaped KV caches) use a segmented stack: scans over
+the uniform SWA segments, plain calls for the global layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    gqa_attention,
+    gqa_cache_shape,
+    gqa_params,
+    mla_attention,
+    mla_cache_shape,
+    mla_params,
+)
+from .common import Alloc, layer_norm, rms_norm
+from .mlp import mlp_apply, mlp_params
+from .moe import moe_apply, moe_params
+from .ssm import ssm_apply, ssm_cache_shape, ssm_params
+
+
+class StackedAlloc:
+    """Prepends a ``layers`` dim to every param (for scan-stacked layers)."""
+
+    def __init__(self, a: Alloc, num_layers: int):
+        self._a, self._L = a, num_layers
+        self.mode = a.mode
+
+    def param(self, name, shape, axes, **kw):
+        return self._a.param(name, (self._L, *shape), ("layers", *axes), **kw)
+
+    def scope(self, name):
+        return self._a.scope(name)
+
+
+def _norm_params(cfg, a, name: str):
+    if cfg.norm == "ln":
+        return {
+            "w": a.param(f"{name}_w", (cfg.d_model,), ("embed",), init="ones"),
+            "b": a.param(f"{name}_b", (cfg.d_model,), ("embed",), init="zeros"),
+        }
+    return {"w": a.param(f"{name}_w", (cfg.d_model,), ("embed",), init="zeros")}
+
+
+def _norm(cfg, p, x):
+    if cfg.norm == "ln":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+
+def block_params(cfg, a, *, kind: str = "decoder", moe_layer: bool = True) -> dict:
+    """kind: decoder | encoder | xdecoder (decoder with cross-attention)."""
+    p: dict[str, Any] = {}
+    with a.scope("attn"):
+        if cfg.attention == "mla":
+            p["attn"] = mla_params(cfg, a)
+        elif cfg.attention == "gqa":
+            p["attn"] = gqa_params(cfg, a)
+    if cfg.attention != "none":
+        p["attn_norm"] = _norm_params(cfg, a, "attn_norm")
+    if cfg.family in ("ssm", "hybrid"):
+        with a.scope("ssm"):
+            p["ssm"] = ssm_params(cfg, a)
+        p["ssm_norm"] = _norm_params(cfg, a, "ssm_norm")
+    if kind == "xdecoder":
+        with a.scope("cross"):
+            p["cross"] = gqa_params(cfg, a)
+        p["cross_norm"] = _norm_params(cfg, a, "cross_norm")
+    if cfg.d_ff > 0 or (cfg.is_moe and moe_layer):
+        p["mlp_norm"] = _norm_params(cfg, a, "mlp_norm")
+        if cfg.is_moe and moe_layer:
+            with a.scope("moe"):
+                p["moe"] = moe_params(cfg, a)
+        else:
+            with a.scope("mlp"):
+                p["mlp"] = mlp_params(cfg, a)
+    return p
+
+
+def block_apply(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    bidirectional: bool = False,
+    prefix_len: Optional[int] = None,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    emit_slices: bool = False,
+    enc_out: Optional[jax.Array] = None,  # encoder states for cross-attn
+    ctx=None,
+    window: Optional[int] = None,  # None = full attention (global layers)
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x_out, new_cache, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if cfg.attention != "none" and "attn" in p:
+        h = _norm(cfg, p["attn_norm"], x)
+        attn_fn = mla_attention if cfg.attention == "mla" else gqa_attention
+        a_out, a_cache = attn_fn(
+            cfg,
+            p["attn"],
+            h,
+            positions,
+            window=window,
+            prefix_len=prefix_len,
+            bidirectional=bidirectional,
+            cache=cache.get("attn") if cache else None,
+            cache_index=cache_index,
+            return_cache=return_cache,
+            emit_slices=emit_slices,
+            use_kernel=cfg.use_kernels,
+        )
+        if cfg.family == "hybrid":
+            # parallel attn + SSD heads on the same normalized input (hymba)
+            s_in = _norm(cfg, p["ssm_norm"], x)
+            s_out, s_cache = ssm_apply(
+                cfg, p["ssm"], s_in, cache=cache.get("ssm") if cache else None,
+                return_cache=return_cache, use_kernel=cfg.use_kernels,
+            )
+            x = x + 0.5 * (a_out + s_out)
+            if s_cache is not None:
+                new_cache["ssm"] = s_cache
+        else:
+            x = x + a_out
+        if a_cache is not None:
+            new_cache["attn"] = a_cache
+    elif cfg.family in ("ssm", "hybrid"):
+        s_in = _norm(cfg, p["ssm_norm"], x)
+        s_out, s_cache = ssm_apply(
+            cfg, p["ssm"], s_in, cache=cache.get("ssm") if cache else None,
+            return_cache=return_cache, use_kernel=cfg.use_kernels,
+        )
+        x = x + s_out
+        if s_cache is not None:
+            new_cache["ssm"] = s_cache
+
+    if "cross" in p:
+        h = _norm(cfg, p["cross_norm"], x)
+        c_out, c_cache = _cross_attention(
+            cfg, p["cross"], h, enc_out, cache=cache.get("cross") if cache else None,
+            return_cache=return_cache,
+        )
+        x = x + c_out
+        if c_cache is not None:
+            if emit_slices and cache is not None:
+                # encoder K/V are static during decode: emit a sentinel and
+                # let the stack reuse the donated cache unchanged
+                new_cache["cross"] = jnp.zeros((), jnp.int32)
+            else:
+                new_cache["cross"] = c_cache
+
+    if "moe" in p:
+        h = _norm(cfg, p["mlp_norm"], x)
+        m_out, aux = moe_apply(cfg, p["moe"], h, ctx=ctx)
+        x = x + m_out
+    elif "mlp" in p:
+        h = _norm(cfg, p["mlp_norm"], x)
+        x = x + mlp_apply(cfg, p["mlp"], h)
+
+    return x, (new_cache if new_cache else None), aux
+
+
+def _cross_attention(cfg, p, x, enc_out, *, cache=None, return_cache=False):
+    """Cross-attention: queries from decoder, keys/values from encoder.
+
+    During decode the projected encoder K/V are static — cached once.
+    """
+    from .attention import attend
+
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cache is not None:
+        k, v = cache["k"], cache["v"]
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    bias = jnp.zeros((1, S, k.shape[1]), jnp.float32)  # full cross visibility
+    out = attend(q, k, v, bias)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    # keep the cache flowing during decode (encoder K/V are static)
+    new_cache = {"k": k, "v": v} if (return_cache or cache is not None) else None
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache shapes
+# ---------------------------------------------------------------------------
+
+
+def block_cache_shape(cfg, batch: int, seq: int, dtype, *, is_global: bool = True, xdec_enc_seq: Optional[int] = None) -> dict:
+    """Abstract cache for ONE layer. seq = the KV length this layer keeps."""
+    c: dict[str, Any] = {}
+    if cfg.attention == "mla":
+        c["attn"] = mla_cache_shape(cfg, batch, seq, dtype)
+    elif cfg.attention == "gqa":
+        ring = (not is_global) and cfg.window is not None and cfg.window < seq
+        kv_len = min(seq, cfg.window) if ring else seq
+        c["attn"] = gqa_cache_shape(cfg, batch, kv_len, dtype, ring=ring)
+    if cfg.family in ("ssm", "hybrid"):
+        c["ssm"] = ssm_cache_shape(cfg, batch, dtype)
+    if xdec_enc_seq is not None:
+        c["cross"] = gqa_cache_shape(cfg, batch, xdec_enc_seq, dtype)
+    return c

@@ -1,0 +1,178 @@
+"""Shared model-building utilities.
+
+``Alloc`` is the single source of truth for parameters: the same model code
+path produces (depending on mode) initialized arrays, logical-axis trees for
+sharding, or ShapeDtypeStructs for allocation-free dry runs.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (mapped to mesh axes in repro.parallel.sharding):
+#   layers   scan-stacked layer dim (never sharded)
+#   embed    d_model
+#   vocab    vocabulary
+#   heads    attention heads / q-head dim groups
+#   kv       kv heads
+#   mlp      feed-forward hidden
+#   experts  MoE expert dim
+#   expert_mlp  per-expert hidden (sharded over data for very large MoE)
+#   lora     MLA compression dims
+#   conv/state/ssm_heads  mamba dims
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+def _path_key(root: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha1(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+class Alloc:
+    """Parameter allocator with three modes:
+
+    init      -> returns initialized jnp arrays (mode for real runs)
+    abstract  -> returns jax.ShapeDtypeStruct (dry-run, no allocation)
+    axes      -> returns the logical-axes tuple (sharding-rule input)
+    """
+
+    def __init__(self, mode: str, key: Optional[jax.Array] = None, dtype=jnp.bfloat16):
+        assert mode in ("init", "abstract", "axes")
+        self.mode = mode
+        self.key = key
+        self.dtype = dtype
+        self._path: list[str] = []
+
+    # scoped path management so call sites stay terse
+    class _Scope:
+        def __init__(self, alloc: "Alloc", name: str):
+            self.alloc, self.name = alloc, name
+
+        def __enter__(self):
+            self.alloc._path.append(self.name)
+
+        def __exit__(self, *exc):
+            self.alloc._path.pop()
+
+    def scope(self, name: str) -> "Alloc._Scope":
+        return Alloc._Scope(self, name)
+
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: Optional[float] = None,
+        dtype: Any = None,
+    ):
+        assert len(shape) == len(axes), f"{name}: shape {shape} vs axes {axes}"
+        if self.mode == "axes":
+            return axes
+        dtype = dtype or self.dtype
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+        path = "/".join(self._path + [name])
+        k = _path_key(self.key, path)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            if scale is None:  # fan-in variance scaling over contracted dims
+                fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+                scale = fan_in ** -0.5
+            return (jax.random.normal(k, tuple(shape), jnp.float32) * scale).astype(dtype)
+        if init == "embed":
+            return (jax.random.normal(k, tuple(shape), jnp.float32) * (scale or 1.0)).astype(dtype)
+        if init == "uniform":
+            lim = scale or (shape[0] ** -0.5)
+            return jax.random.uniform(k, tuple(shape), jnp.float32, -lim, lim).astype(dtype)
+        if init == "ssm_dt":  # softplus-inverse-spaced dt bias (mamba init)
+            lo, hi = 0.001, 0.1
+            u = jax.random.uniform(k, tuple(shape), jnp.float32)
+            dt = jnp.exp(u * (np.log(hi) - np.log(lo)) + np.log(lo))
+            return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+        if init == "ssm_a":  # A in [1, 16), stored as log
+            u = jax.random.uniform(k, tuple(shape), jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+
+# -- numerics ------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)  # (Dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (..., S, 1, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- masks ------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def causal_mask_bias(
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+    prefix_len: Optional[jax.Array] = None,
+    valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Additive attention bias, f32: 0 = attend, NEG_INF = masked.
+
+    q_pos: (Sq,), k_pos: (Sk,) absolute positions. window: sliding-window
+    radius (keys within [q-window+1, q]). prefix_len: positions < prefix_len
+    attend bidirectionally (PaLI-Gemma prefix-LM). valid_len: keys at
+    positions >= valid_len masked (decode with partially-filled cache).
+    """
+    q = q_pos[:, None].astype(jnp.int32)
+    k = k_pos[None, :].astype(jnp.int32)
+    ok = k <= q
+    if prefix_len is not None:
+        ok = ok | (k < prefix_len)
+    if window is not None:
+        ok = ok & (k > q - window)
+        if prefix_len is not None:
+            ok = ok | ((k < prefix_len) & (k > q - window))
+    if valid_len is not None:
+        ok = ok & (k < valid_len)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,50 @@
+"""Feed-forward blocks: SwiGLU/GeGLU (gated) and plain GELU MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Alloc, act_fn
+
+
+def gated_mlp_params(cfg, a: Alloc, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": a.param("w_gate", (d, ff), ("embed", "mlp")),
+        "w_up": a.param("w_up", (d, ff), ("embed", "mlp")),
+        "w_down": a.param("w_down", (ff, d), ("mlp", "embed")),
+    }
+
+
+def gated_mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    act = act_fn(cfg.act if cfg.act in ("silu", "gelu") else "silu")
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", act(g) * u, p["w_down"])
+
+
+def dense_mlp_params(cfg, a: Alloc, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": a.param("w1", (d, ff), ("embed", "mlp")),
+        "b1": a.param("b1", (ff,), ("mlp",), init="zeros"),
+        "w2": a.param("w2", (ff, d), ("mlp", "embed")),
+        "b2": a.param("b2", (d,), ("embed",), init="zeros"),
+    }
+
+
+def dense_mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"], approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"]
+
+
+def mlp_params(cfg, a: Alloc, d_ff: int | None = None) -> dict:
+    if cfg.act == "gelu_mlp":
+        return dense_mlp_params(cfg, a, d_ff)
+    return gated_mlp_params(cfg, a, d_ff)
+
+
+def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.act == "gelu_mlp":
+        return dense_mlp(cfg, p, x)
+    return gated_mlp(cfg, p, x)

@@ -1,0 +1,240 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+The SSD form computes the selective-SSM recurrence as chunked matmuls
+(MXU-friendly on TPU, DESIGN.md §6):
+
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t ⊗ x_t          (per head)
+  y_t = C_t · h_t + D * x_t
+
+Chunking sequence S into (nc × cl): within a chunk the recurrence unrolls
+into a masked quadratic form (``intra``), and chunk-final states propagate
+through a tiny scan over chunks (``inter``). ``ssd_reference`` is the
+pure-jnp oracle; the Pallas kernel in repro/kernels/ssd.py implements the
+same contraction pattern with VMEM tiling.
+
+Layout follows the Mamba2 reference: one fused input projection producing
+[z | x | B | C | dt], a depthwise causal conv over [x|B|C], per-head scalar
+A (log-parameterised) and D, gated RMSNorm, output projection. n_groups=1.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Alloc, rms_norm
+
+
+def ssm_dims(cfg) -> dict:
+    if cfg.family == "hybrid":
+        d_inner = cfg.num_heads * cfg.head_dim  # match attention width
+    else:
+        d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.ssm_heads or d_inner // cfg.ssm_head_dim
+    return dict(
+        d_inner=d_inner,
+        nheads=nheads,
+        headdim=d_inner // nheads,
+        dstate=cfg.ssm_state,
+        conv_dim=d_inner + 2 * cfg.ssm_state,
+    )
+
+
+def ssm_params(cfg, a: Alloc) -> dict:
+    dims = ssm_dims(cfg)
+    d, di, nh, N = cfg.d_model, dims["d_inner"], dims["nheads"], dims["dstate"]
+    conv_dim = dims["conv_dim"]
+    proj_out = 2 * di + 2 * N + nh  # [z | x | B | C | dt]
+    return {
+        "in_proj": a.param("in_proj", (d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": a.param("conv_w", (cfg.conv_kernel, conv_dim), (None, "ssm_inner")),
+        "conv_b": a.param("conv_b", (conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": a.param("a_log", (nh,), ("ssm_heads",), init="ssm_a", dtype=jnp.float32),
+        "d_skip": a.param("d_skip", (nh,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": a.param("dt_bias", (nh,), ("ssm_heads",), init="ssm_dt", dtype=jnp.float32),
+        "norm": a.param("norm", (di,), ("ssm_inner",), init="zeros"),
+        "out_proj": a.param("out_proj", (di, d), ("ssm_inner", "embed")),
+    }
+
+
+def ssm_cache_shape(cfg, batch: int, dtype) -> dict:
+    dims = ssm_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, dims["conv_dim"]), dtype),
+        "state": jax.ShapeDtypeStruct(
+            (batch, dims["nheads"], dims["headdim"], dims["dstate"]), jnp.float32
+        ),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    cl = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((cl, cl), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_reference(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) f32, post-softplus
+    A: jax.Array,  # (H,) f32, negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N) f32
+    return_final_state: bool = False,
+):
+    """Chunked SSD scan, pure jnp (the oracle for the Pallas kernel)."""
+    Bb, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    cl = min(chunk, S)
+    S_orig = S
+    if S % cl:  # pad with dt=0 steps: exp(0)=1 keeps state, 0*x adds nothing
+        pad = cl - S % cl
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // cl
+
+    xf = x.astype(jnp.float32)
+    dA = dt * A  # (B, S, H)
+    # chunked views
+    xr = xf.reshape(Bb, nc, cl, H, Pd)
+    dtr = dt.reshape(Bb, nc, cl, H)
+    dAr = dA.reshape(Bb, nc, cl, H).transpose(0, 1, 3, 2)  # (B,nc,H,cl)
+    Br = Bm.astype(jnp.float32).reshape(Bb, nc, cl, N)
+    Cr = Cm.astype(jnp.float32).reshape(Bb, nc, cl, N)
+
+    # intra-chunk quadratic term
+    L = jnp.exp(_segsum(dAr))  # (B,nc,H,cl,cl)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # (B,nc,cl,cl)
+    M = scores[:, :, None] * L  # (B,nc,H,cl,cl)
+    xdt = xr * dtr[..., None]  # dt-weighted inputs
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # chunk-final states: sum_j exp(sum_{j<k<=end} dA) B_j ⊗ (dt_j x_j)
+    dA_cum = jnp.cumsum(dAr, axis=-1)  # (B,nc,H,cl)
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum)  # (B,nc,H,cl)
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchpn", decay_to_end, Br, xdt)
+
+    # inter-chunk recurrence (tiny scan over nc)
+    chunk_decay = jnp.exp(dA_cum[..., -1])  # (B,nc,H)
+    init = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_i · (decay into chunk) state_prev
+    in_decay = jnp.exp(dA_cum)  # (B,nc,H,cl)
+    y_inter = jnp.einsum("bcin,bchpn,bchi->bcihp", Cr, prev_states, in_decay)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, Pd)[:, :S_orig].astype(x.dtype)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H) f32
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+    state: jax.Array,  # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update (O(1) in sequence length)."""
+    dA = jnp.exp(dt * A)  # (B, H)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bm.astype(jnp.float32), xdt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array, prepend: Optional[jax.Array]):
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    K = w.shape[0]
+    if prepend is None:
+        pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = prepend.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)  # (B, S+K-1, C)
+    out = sum(full[:, i : full.shape[1] - (K - 1 - i), :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), full[:, full.shape[1] - (K - 1) :, :]
+
+
+def ssm_apply(
+    cfg,
+    p: dict,
+    u: jax.Array,  # (B, S, d_model)
+    *,
+    cache: Optional[dict] = None,
+    return_cache: bool = False,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence (cache=None) or recurrent decode (cache given, S==1)."""
+    dims = ssm_dims(cfg)
+    di, nh, Pd, N = dims["d_inner"], dims["nheads"], dims["headdim"], dims["dstate"]
+    B, S, _ = u.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, di + dims["conv_dim"]], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["a_log"])  # (nh,)
+
+    if cache is None:
+        conv_in_raw = xBC  # pre-activation stream feeds the decode ring
+        xBC, tail = _causal_conv(xBC, p["conv_w"], p["conv_b"], None)
+        xc, Bc, Cc = jnp.split(xBC, [di, di + N], axis=-1)
+        x = xc.reshape(B, S, nh, Pd)
+        if return_cache:
+            y, final = ssd_reference(
+                x, dt, A, Bc, Cc, chunk=min(cfg.ssm_chunk, S), return_final_state=True
+            )
+            new_cache = {"conv": tail, "state": final}
+        else:
+            if use_kernel and S > 1:
+                from repro.kernels import ops as kops
+
+                y = kops.ssd(x, dt, A, Bc, Cc, chunk=cfg.ssm_chunk)
+            else:
+                y = ssd_reference(x, dt, A, Bc, Cc, chunk=min(cfg.ssm_chunk, S))
+            new_cache = None
+    else:
+        # decode: conv ring buffer + recurrent state update
+        conv_in = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, K, conv)
+        w, bbias = p["conv_w"], p["conv_b"]
+        conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w) + bbias)[:, None, :]
+        xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+        x = xc.reshape(B, nh, Pd)
+        y1, new_state = ssd_decode_step(
+            x, dt[:, 0], A, Bc[:, 0], Cc[:, 0], cache["state"]
+        )
+        y = y1[:, None]
+        new_cache = {"conv": conv_in[:, 1:], "state": new_state}
+
+    yd = y.reshape(B, S, di) + (
+        x.reshape(B, S, di) * jnp.repeat(p["d_skip"], Pd).astype(y.dtype)
+    )
+    yd = yd * jax.nn.silu(z.astype(jnp.float32)).astype(yd.dtype)  # gate
+    yd = rms_norm(yd, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", yd, p["out_proj"])
+    return out, new_cache

@@ -1,0 +1,140 @@
+"""AdamW from scratch (no optax): dtype policies, ZeRO-friendly state.
+
+State layout (a pytree mirroring params):
+  m, v        first/second moments, dtype = moments_dtype (bf16 for >=100B)
+  master      fp32 master copy of the bf16 params (kept when params are
+              low-precision; updates apply to the master, params re-cast)
+  count       step counter
+
+Sharding: the state trees reuse the param PartitionSpecs with an extra
+data-axis shard on the largest replicated dim (parallel/sharding.zero_specs)
+— ZeRO-1 semantics under GSPMD (XLA gathers as needed).
+
+Weight decay is masked off 1-D params (norms, biases) by default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"  # "bfloat16" for very large models
+    keep_master: bool = True  # fp32 master copy when params are bf16
+
+
+def _moments_dtype(cfg: AdamWConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moments_dtype]
+
+
+def decay_mask(params: Any) -> Any:
+    """True where weight decay applies: every tensor with ndim >= 2."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> dict:
+    mdt = _moments_dtype(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.keep_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_abstract_state(cfg: AdamWConfig, abstract_params: Any) -> dict:
+    mdt = _moments_dtype(cfg)
+    sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+    state = {
+        "m": jax.tree.map(lambda p: sds(p, mdt), abstract_params),
+        "v": jax.tree.map(lambda p: sds(p, mdt), abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.keep_master:
+        state["master"] = jax.tree.map(lambda p: sds(p, jnp.float32), abstract_params)
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    lr: jax.Array,
+    params: Any,
+    grads: Any,
+    state: dict,
+) -> Tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    mdt = _moments_dtype(cfg)
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        gnorm > cfg.grad_clip, cfg.grad_clip / jnp.maximum(gnorm, 1e-12), 1.0
+    ) if cfg.grad_clip else jnp.ones(())
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    mask = decay_mask(params)
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, mst, dk):
+        gf = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        step = (m1 / c1) / (jnp.sqrt(v1 / c2) + cfg.eps)
+        base = mst.astype(jnp.float32)
+        if dk and cfg.weight_decay:
+            step = step + cfg.weight_decay * base
+        new_master = base - lr * step
+        return new_master.astype(p.dtype), m1.astype(mdt), v1.astype(mdt), new_master
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat = [
+        upd(p, g, m, v, mst, dk)
+        for p, g, m, v, mst, dk in zip(
+            flat_p,
+            jax.tree.leaves(grads),
+            jax.tree.leaves(state["m"]),
+            jax.tree.leaves(state["v"]),
+            jax.tree.leaves(masters),
+            jax.tree.leaves(mask),
+        )
+    ]
+    new_params = jax.tree.unflatten(treedef, [f[0] for f in flat])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [f[1] for f in flat]),
+        "v": jax.tree.unflatten(treedef, [f[2] for f in flat]),
+        "count": count,
+    }
+    if cfg.keep_master:
+        new_state["master"] = jax.tree.unflatten(treedef, [f[3] for f in flat])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+def cosine_schedule(
+    base_lr: float, warmup: int, total: int, min_frac: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+
+    return lr

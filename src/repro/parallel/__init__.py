@@ -1,0 +1,21 @@
+from .ctx import ParallelCtx
+from .sharding import (
+    DEFAULT_RULES,
+    estimate_padding_waste,
+    param_specs,
+    rules_for,
+    shardings,
+    spec_for,
+    zero_specs,
+)
+
+__all__ = [
+    "ParallelCtx",
+    "DEFAULT_RULES",
+    "estimate_padding_waste",
+    "param_specs",
+    "rules_for",
+    "shardings",
+    "spec_for",
+    "zero_specs",
+]

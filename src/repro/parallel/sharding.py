@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules → PartitionSpecs / NamedShardings.
+
+Every parameter carries a tuple of logical axis names (built by the same
+code path that builds the arrays — models/common.Alloc). Rules map logical
+axes to mesh axes; a rule is dropped (replicated) when the dimension is not
+divisible by the mesh-axis size *and* padding is disabled. With
+``allow_uneven=True`` (default) GSPMD pads the last shards — the padding
+waste for awkward head counts (56, 24, 20, 25) is reported in the roofline.
+
+ZeRO: optimizer-state specs additionally shard the largest replicated dim
+over the data axis (``zero_spec``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicate)
+DEFAULT_RULES: dict[Optional[str], Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,  # deepseek-v2 overrides to 'data' (2D expert sharding)
+    "ssm_inner": "model",
+    "ssm_heads": None,
+    "lora": None,
+    "embed": None,
+    "layers": None,
+    None: None,
+}
+
+
+def rules_for(cfg) -> dict:
+    rules = dict(DEFAULT_RULES)
+    for k, v in getattr(cfg, "sharding_rules", ()) or ():
+        rules[k] = v
+    return rules
+
+
+# fallback priority when the preferred dim is not divisible by the mesh axis
+# (jit rejects uneven shardings): shard a contracted/output dim instead —
+# row-parallel style; GSPMD inserts the reduction. Order matters: prefer the
+# large embedding/hidden dims.
+_FALLBACK_ORDER = ("embed", "mlp", "vocab", "ssm_inner", "lora")
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...], rules: dict, mesh: Mesh) -> P:
+    parts: list = []
+    used: set = set()
+    for ax_name, dim in zip(axes, shape):
+        mesh_ax = rules.get(ax_name)
+        if mesh_ax is None or mesh_ax in used:
+            parts.append(None)
+            continue
+        size = mesh.shape[mesh_ax]
+        if dim % size != 0 or dim < size:  # jit requires exact divisibility
+            parts.append(None)
+            continue
+        parts.append(mesh_ax)
+        used.add(mesh_ax)
+    # Fallback: a >=2D param that ended up unsharded on `model` (awkward head
+    # counts 56/25/24/20/8, odd vocabs 51865/50280/49155) gets `model` on the
+    # best divisible alternative dim instead of being replicated.
+    if "model" not in used and len(shape) >= 2:
+        n_model = mesh.shape.get("model", 1)
+
+        def priority(i: int) -> tuple:
+            name = axes[i]
+            try:
+                rank = _FALLBACK_ORDER.index(name)
+            except ValueError:
+                rank = len(_FALLBACK_ORDER)
+            return (rank, -shape[i])
+
+        for i in sorted(range(len(shape)), key=priority):
+            if parts[i] is None and shape[i] % n_model == 0 and shape[i] >= n_model:
+                if axes[i] == "layers":
+                    continue  # never shard the scan dim
+                parts[i] = "model"
+                break
+    return P(*parts)
+
+
+def param_specs(abstract: Any, axes_tree: Any, rules: dict, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching the abstract-param tree.
+
+    ``axes_tree`` has tuple leaves (which are pytree containers), so it is
+    flattened only down to the abstract tree's leaf positions.
+    """
+    flat_abs, treedef = jax.tree.flatten(abstract)
+    flat_axes = treedef.flatten_up_to(axes_tree)
+    flat = [
+        spec_for(tuple(ax), tuple(leaf.shape), rules, mesh)
+        for leaf, ax in zip(flat_abs, flat_axes)
+    ]
+    return jax.tree.unflatten(treedef, flat)
+
+
+def shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def zero_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh, data_axes: Tuple[str, ...] = ("data",)) -> P:
+    """Add data-axis sharding to the largest still-replicated divisible dim
+    (ZeRO partitioning of optimizer state / master weights)."""
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes]))
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    # never double-map a mesh axis (e.g. deepseek-v2 expert_mlp already on data)
+    already = set()
+    for cur in parts:
+        if cur is None:
+            continue
+        for a in (cur if isinstance(cur, tuple) else (cur,)):
+            already.add(a)
+    if any(a in already for a in data_axes):
+        return P(*parts)
+    best, best_dim = -1, 0
+    for i, (cur, dim) in enumerate(zip(parts, shape)):
+        if cur is None and dim % n_data == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        parts[best] = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(*parts)
+
+
+def zero_specs(spec_tree: Any, abstract: Any, mesh: Mesh, data_axes: Tuple[str, ...] = ("data",)) -> Any:
+    return jax.tree.map(
+        lambda s, a: zero_spec(s, tuple(a.shape), mesh, data_axes),
+        spec_tree,
+        abstract,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def estimate_padding_waste(abstract: Any, spec_tree: Any, mesh: Mesh) -> dict:
+    """Bytes wasted by GSPMD padding on uneven shards (roofline honesty)."""
+    total, padded = 0, 0
+
+    def one(leaf, spec):
+        nonlocal total, padded
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        pbytes = nbytes
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if ax is None:
+                continue
+            size = mesh.shape[ax] if isinstance(ax, str) else int(
+                np.prod([mesh.shape[a] for a in ax])
+            )
+            pbytes = pbytes // dim * (-(-dim // size) * size)
+        total += nbytes
+        padded += pbytes
+
+    jax.tree.map(one, abstract, spec_tree, is_leaf=lambda s: isinstance(s, P))
+    return {"logical_bytes": total, "padded_bytes": padded, "waste_frac": (padded - total) / max(total, 1)}

@@ -1,0 +1,239 @@
+"""pjit step builders: train_step / prefill / decode_step with full sharding.
+
+This is the layer the dry-run lowers: it owns the in/out shardings for
+params, optimizer state (ZeRO), batches and KV caches, and the donation
+policy (params+opt donated in train; caches donated in decode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import batch_axes_of
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import adamw_abstract_state
+
+from .ctx import ParallelCtx
+from .sharding import param_specs, rules_for, zero_specs
+
+
+def make_ctx(mesh: Mesh, *, seq_shard: bool = True, expert_parallel: bool = True) -> ParallelCtx:
+    return ParallelCtx(
+        mesh,
+        batch_axes=batch_axes_of(mesh),
+        seq_shard=seq_shard,
+        expert_parallel=expert_parallel,
+    )
+
+
+def model_param_specs(model: Model, mesh: Mesh):
+    rules = rules_for(model.cfg)
+    return param_specs(model.abstract_params(), model.logical_axes(), rules, mesh)
+
+
+def opt_state_specs(model: Model, ocfg: AdamWConfig, mesh: Mesh, pspecs, batch_axes):
+    abstract_p = model.abstract_params()
+    z = zero_specs(pspecs, abstract_p, mesh, batch_axes)
+    specs = {"m": z, "v": z, "count": P()}
+    if ocfg.keep_master:
+        specs["master"] = z
+    return specs
+
+
+def _batch_part(B: int, mesh: Mesh, batch_axes):
+    """Batch dim mesh axes, or None when B is too small to shard (B=1 cells
+    keep the data axes idle — reported honestly in the roofline)."""
+    n = 1
+    for ax in batch_axes:
+        n *= mesh.shape[ax]
+    return batch_axes if (B % n == 0 and B >= n) else None
+
+
+def batch_specs(model: Model, batch_abstract: dict, batch_axes, mesh: Mesh) -> dict:
+    out = {}
+    for k, v in batch_abstract.items():
+        if k in ("caches",):
+            continue
+        if v.ndim == 0:
+            out[k] = P()
+            continue
+        out[k] = P(_batch_part(v.shape[0], mesh, batch_axes), *([None] * (v.ndim - 1)))
+    return out
+
+
+# -- cache sharding -----------------------------------------------------------
+
+
+def cache_specs(abstract_caches: Any, mesh: Mesh, batch_axes) -> Any:
+    """PartitionSpecs for a (possibly scan-stacked) cache pytree.
+
+    Strategy (see DESIGN.md §5): batch over data axes; KV heads over model
+    (GSPMD-padded when the count is awkward); MQA caches shard head_dim;
+    MLA compressed caches replicate over model (they are small — that is the
+    point of MLA) while attention math shards over heads; SSM state shards
+    its heads dim; conv streams shard channels.
+    """
+    n_model = mesh.shape["model"]
+
+    def bpart(B):
+        return _batch_part(B, mesh, batch_axes)
+
+    def spec(path, leaf) -> P:
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1]
+        nd = leaf.ndim
+        if name == "pos":
+            return P(*([None] * nd))
+        if name in ("k", "v"):  # (..., B, S, KV, Dh)
+            KV, Dh = leaf.shape[-2], leaf.shape[-1]
+            lead = [None] * (nd - 4)
+            if KV % n_model == 0 and KV >= n_model:
+                kv_ax, dh_ax = "model", None
+            elif Dh % n_model == 0 and Dh >= n_model:
+                # awkward/few KV heads: shard head_dim (scores psum per layer)
+                kv_ax, dh_ax = None, "model"
+            else:
+                kv_ax, dh_ax = None, None
+            return P(*lead, bpart(leaf.shape[-4]), None, kv_ax, dh_ax)
+        if name in ("ckv", "krope"):  # (..., B, S, D) compressed MLA cache:
+            # shard the SEQUENCE over model (the lora dim is tiny; per-token
+            # softmax stats psum is cheap) — EXPERIMENTS §Perf hillclimb C.
+            S_len = leaf.shape[-2]
+            lead = [None] * (nd - 3)
+            seq_ax = "model" if (S_len % n_model == 0 and S_len >= n_model) else None
+            return P(*lead, bpart(leaf.shape[-3]), seq_ax, None)
+        if name == "conv":  # (..., B, K, C)
+            C = leaf.shape[-1]
+            lead = [None] * (nd - 3)
+            return P(*lead, bpart(leaf.shape[-3]), None, "model" if C % n_model == 0 else None)
+        if name == "state":  # (..., B, H, Pd, N)
+            H, N = leaf.shape[-3], leaf.shape[-1]
+            lead = [None] * (nd - 4)
+            if H % n_model == 0 and H >= n_model:
+                return P(*lead, bpart(leaf.shape[-4]), "model", None, None)
+            if N % n_model == 0 and N >= n_model:
+                return P(*lead, bpart(leaf.shape[-4]), None, None, "model")
+            return P(*lead, bpart(leaf.shape[-4]), None, None, None)
+        lead = [None] * (nd - 1)
+        return P(bpart(leaf.shape[0]), *lead)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_caches)
+
+
+# -- step builders ---------------------------------------------------------------
+
+
+def build_train_step(
+    model: Model,
+    mesh: Mesh,
+    ocfg: AdamWConfig,
+    lr_fn: Callable[[jax.Array], jax.Array],
+    batch_abstract: dict,
+    *,
+    donate: bool = True,
+):
+    """Returns (jitted step, state_shardings dict, abstract state)."""
+    ctx = make_ctx(mesh)
+    batch_axes = ctx.batch_axes
+    pspecs = model_param_specs(model, mesh)
+    ospecs = opt_state_specs(model, ocfg, mesh, pspecs, batch_axes)
+    bspecs = batch_specs(model, batch_abstract, batch_axes, mesh)
+    s = lambda tree: jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    def step_fn(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, ctx), has_aux=True
+        )(params)
+        lr = lr_fn(step)
+        new_params, new_opt, om = adamw_update(ocfg, lr, params, grads, opt_state)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    metric_names = ("loss", "ce", "aux", "tokens", "grad_norm", "lr")
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(s(pspecs), s(ospecs), s(bspecs), NamedSharding(mesh, P())),
+        out_shardings=(
+            s(pspecs),
+            s(ospecs),
+            {k: NamedSharding(mesh, P()) for k in metric_names},
+        ),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    abstract = {
+        "params": model.abstract_params(),
+        "opt": adamw_abstract_state(ocfg, model.abstract_params()),
+    }
+    return jitted, {"params": pspecs, "opt": ospecs, "batch": bspecs}, abstract
+
+
+def build_prefill(model: Model, mesh: Mesh, batch_abstract: dict):
+    ctx = make_ctx(mesh)
+    batch_axes = ctx.batch_axes
+    pspecs = model_param_specs(model, mesh)
+    bspecs = batch_specs(model, batch_abstract, batch_axes, mesh)
+    B = batch_abstract["tokens"].shape[0]
+    S = batch_abstract["tokens"].shape[1] + (
+        model.cfg.num_image_tokens if model.cfg.family == "vlm" else 0
+    )
+    cshapes = model.cache_shapes(B, S)
+    cspecs = cache_specs(cshapes, mesh, batch_axes)
+    s = lambda tree: jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    vocab_part = "model" if model.cfg.vocab_size % mesh.shape["model"] == 0 else None
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    jitted = jax.jit(
+        prefill_fn,
+        in_shardings=(s(pspecs), s(bspecs)),
+        out_shardings=(
+            NamedSharding(mesh, P(_batch_part(B, mesh, batch_axes), None, vocab_part)),
+            s(cspecs),
+        ),
+    )
+    return jitted, {"params": pspecs, "batch": bspecs, "caches": cspecs}
+
+
+def build_decode_step(model: Model, mesh: Mesh, batch_abstract: dict):
+    """decode: one token for every sequence, donated KV cache."""
+    ctx = make_ctx(mesh)
+    batch_axes = ctx.batch_axes
+    pspecs = model_param_specs(model, mesh)
+    Bt = batch_abstract["tokens"].shape[0]
+    cspecs = cache_specs(batch_abstract["caches"], mesh, batch_axes)
+    s = lambda tree: jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    vocab_part = "model" if model.cfg.vocab_size % mesh.shape["model"] == 0 else None
+
+    def decode_fn(params, tokens, caches, index):
+        return model.decode_step(params, tokens, caches, index, ctx)
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(
+            s(pspecs),
+            NamedSharding(mesh, P(_batch_part(Bt, mesh, batch_axes), None)),
+            s(cspecs),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P(_batch_part(Bt, mesh, batch_axes), None, vocab_part)),
+            s(cspecs),
+        ),
+        donate_argnums=(2,),
+    )
+    return jitted, {"params": pspecs, "caches": cspecs}

@@ -1,0 +1,113 @@
+"""Unit + property tests for the work-stealing deques (paper §2.1)."""
+import threading
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import EMPTY, ChaseLevDeque, FastDeque
+
+DEQUES = [FastDeque, ChaseLevDeque]
+
+
+@pytest.mark.parametrize("cls", DEQUES)
+def test_lifo_owner_fifo_thief(cls):
+    dq = cls()
+    for i in range(10):
+        dq.push(i)
+    assert dq.pop() == 9  # owner: LIFO bottom
+    assert dq.steal() == 0  # thief: FIFO top
+    assert dq.steal() == 1
+    assert dq.pop() == 8
+    assert len(dq) == 6
+
+
+@pytest.mark.parametrize("cls", DEQUES)
+def test_empty_sentinel(cls):
+    dq = cls()
+    assert dq.pop() is EMPTY
+    assert dq.steal() is EMPTY
+    dq.push(None)  # None is a valid payload
+    assert dq.pop() is None
+    assert dq.pop() is EMPTY
+
+
+def test_chase_lev_growth():
+    dq = ChaseLevDeque(capacity=4)
+    for i in range(1000):
+        dq.push(i)
+    assert len(dq) == 1000
+    got = [dq.steal() for _ in range(500)] + [dq.pop() for _ in range(500)]
+    assert set(got) == set(range(1000))
+    assert dq.pop() is EMPTY
+
+
+def test_chase_lev_capacity_validation():
+    with pytest.raises(ValueError):
+        ChaseLevDeque(capacity=3)
+
+
+@pytest.mark.parametrize("cls", DEQUES)
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.sampled_from(["push", "pop", "steal"]), max_size=200))
+def test_sequential_model_equivalence(cls, ops):
+    """Single-threaded: deque behaves as a double-ended queue (model-based)."""
+    dq = cls()
+    model: list[int] = []
+    counter = 0
+    for op in ops:
+        if op == "push":
+            dq.push(counter)
+            model.append(counter)
+            counter += 1
+        elif op == "pop":
+            got = dq.pop()
+            want = model.pop() if model else EMPTY
+            assert got == want or (got is EMPTY and want is EMPTY)
+        else:
+            got = dq.steal()
+            want = model.pop(0) if model else EMPTY
+            assert got == want or (got is EMPTY and want is EMPTY)
+    assert len(dq) == len(model)
+
+
+@pytest.mark.parametrize("cls", DEQUES)
+def test_concurrent_owner_and_thieves_no_loss_no_dup(cls):
+    """One owner pushes/pops while thieves steal: every item taken exactly once.
+
+    This is the Chase-Lev correctness contract (single producer at the
+    bottom, concurrent consumers at the top).
+    """
+    dq = cls()
+    N = 20_000
+    n_thieves = 3
+    taken: list[list[int]] = [[] for _ in range(n_thieves + 1)]
+    stop = threading.Event()
+
+    def thief(slot):
+        while not stop.is_set() or len(dq):
+            item = dq.steal()
+            if item is not EMPTY:
+                taken[slot].append(item)
+
+    threads = [threading.Thread(target=thief, args=(i,)) for i in range(n_thieves)]
+    for t in threads:
+        t.start()
+    # owner: interleave pushes with occasional pops
+    for i in range(N):
+        dq.push(i)
+        if i % 3 == 0:
+            got = dq.pop()
+            if got is not EMPTY:
+                taken[n_thieves].append(got)
+    while True:
+        got = dq.pop()
+        if got is EMPTY:
+            break
+        taken[n_thieves].append(got)
+    stop.set()
+    for t in threads:
+        t.join()
+    everything = [x for sub in taken for x in sub]
+    assert len(everything) == N, f"lost/duplicated: {len(everything)} != {N}"
+    assert set(everything) == set(range(N))

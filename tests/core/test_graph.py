@@ -1,0 +1,63 @@
+"""Tests for the TaskGraph container."""
+import pytest
+
+from repro.core import CycleError, TaskGraph, ThreadPool
+
+
+def test_cycle_detection():
+    g = TaskGraph("cyclic")
+    a = g.add(lambda: None)
+    b = g.add(lambda: None)
+    a.succeed(b)
+    b.succeed(a)
+    with pytest.raises(CycleError):
+        g.validate()
+
+
+def test_roots_and_validate_ok():
+    g = TaskGraph()
+    a = g.add(lambda: None, name="a")
+    b = g.add(lambda: None, name="b")
+    c = g.add(lambda: None, name="c")
+    c.succeed(a, b)
+    g.validate()
+    assert set(t.name for t in g.roots()) == {"a", "b"}
+
+
+def test_critical_path():
+    g = TaskGraph()
+    chain = g.chain([lambda: None] * 5)
+    assert len(chain) == 5
+    extra = g.add(lambda: None)
+    extra.succeed(chain[0])
+    assert g.critical_path() == pytest.approx(5.0)
+
+
+def test_map_reduce_runs():
+    acc = []
+    g = TaskGraph()
+    g.map_reduce([lambda i=i: acc.append(i) for i in range(8)], lambda: acc.append("done"))
+    with ThreadPool(4) as pool:
+        pool.run(g)
+    assert acc[-1] == "done"
+    assert sorted(acc[:-1]) == list(range(8))
+
+
+def test_to_dot():
+    g = TaskGraph("viz")
+    a = g.add(lambda: None, name="a")
+    b = g.add(lambda: None, name="b")
+    b.succeed(a)
+    dot = g.to_dot()
+    assert "digraph" in dot and "->" in dot
+
+
+def test_validate_pulls_in_external_successors():
+    g = TaskGraph()
+    a = g.add(lambda: None)
+    from repro.core import Task
+
+    outside = Task(lambda: None, name="outside")
+    outside.succeed(a)
+    g.validate()  # must notice `outside` through the successor edge
+    assert any(t.name == "outside" for t in g.tasks)

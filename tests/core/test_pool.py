@@ -1,0 +1,227 @@
+"""Behaviour tests for the work-stealing thread pool (paper §2, §4)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    CancelledError,
+    ChaseLevDeque,
+    FastDeque,
+    NaiveThreadPool,
+    Task,
+    TaskGraph,
+    ThreadPool,
+)
+
+POOLS = [
+    lambda n: ThreadPool(n),
+    lambda n: ThreadPool(n, deque_cls=ChaseLevDeque),
+    lambda n: NaiveThreadPool(n),
+]
+POOL_IDS = ["ws-fast", "ws-chaselev", "naive-baseline"]
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_submit_callable(make):
+    with make(4) as pool:
+        hits = []
+        pool.run(lambda: hits.append(1))
+        assert hits == [1]
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_paper_arithmetic_example(make):
+    """The (a+b)*(c+d) task graph from paper §4.2."""
+    with make(4) as pool:
+        vals = {}
+        g = TaskGraph("arith")
+        get_a = g.emplace_back(lambda: vals.__setitem__("a", 1))
+        get_b = g.emplace_back(lambda: vals.__setitem__("b", 2))
+        get_c = g.emplace_back(lambda: vals.__setitem__("c", 3))
+        get_d = g.emplace_back(lambda: vals.__setitem__("d", 4))
+        get_sum_ab = g.emplace_back(lambda: vals.__setitem__("ab", vals["a"] + vals["b"]))
+        get_sum_cd = g.emplace_back(lambda: vals.__setitem__("cd", vals["c"] + vals["d"]))
+        get_product = g.emplace_back(lambda: vals.__setitem__("p", vals["ab"] * vals["cd"]))
+        get_sum_ab.Succeed(get_a, get_b)
+        get_sum_cd.Succeed(get_c, get_d)
+        get_product.Succeed(get_sum_ab, get_sum_cd)
+        pool.run(g)
+        assert vals["p"] == (1 + 2) * (3 + 4)
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_graph_resubmission(make):
+    """Counters re-arm on submit: the same graph object runs repeatedly."""
+    with make(2) as pool:
+        order = []
+        g = TaskGraph()
+        first = g.add(lambda: order.append("first"))
+        second = g.add(lambda: order.append("second"))
+        second.succeed(first)
+        for _ in range(5):
+            pool.run(g)
+        assert order == ["first", "second"] * 5
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_dependency_ordering_diamond_stress(make):
+    """Many diamonds: successors must never observe unfinished predecessors."""
+    with make(4) as pool:
+        violations = []
+        g = TaskGraph()
+        done = [False] * 400
+        for base in range(0, 400, 4):
+            def mk_leaf(i=base):
+                def fn():
+                    done[i] = True
+                return fn
+
+            def mk_mid(i=base):
+                def fn():
+                    if not done[i]:
+                        violations.append(i)
+                    done[i + 1] = True
+                    done[i + 2] = True
+                return fn
+
+            def mk_join(i=base):
+                def fn():
+                    if not (done[i + 1] and done[i + 2]):
+                        violations.append(i)
+                    done[i + 3] = True
+                return fn
+
+            leaf = g.add(mk_leaf())
+            m1 = g.add(mk_mid()).succeed(leaf)
+            m2 = g.add(mk_mid()).succeed(leaf)
+            g.add(mk_join()).succeed(m1, m2)
+        pool.run(g)
+        assert not violations
+        assert all(done)
+
+
+def test_submit_from_worker_uses_own_deque():
+    """The paper's thread-local fast path: tasks spawned inside a worker are
+    pushed to that worker's own deque and (with one worker) run before the
+    parent returns to stealing."""
+    with ThreadPool(1) as pool:
+        order = []
+
+        def parent():
+            order.append("parent")
+            pool.submit(lambda: order.append("child"))
+
+        pool.run(parent)
+        assert order == ["parent", "child"]
+
+
+def test_continuation_runs_on_same_thread():
+    """Exactly one newly-ready successor continues on the finishing worker."""
+    with ThreadPool(2) as pool:
+        tids = {}
+        g = TaskGraph()
+        a = g.add(lambda: tids.__setitem__("a", threading.get_ident()))
+        b = g.add(lambda: tids.__setitem__("b", threading.get_ident()))
+        b.succeed(a)
+        pool.run(g)
+        assert tids["a"] == tids["b"]
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_exception_propagates_on_wait(make):
+    with make(2) as pool:
+        def boom():
+            raise ValueError("boom")
+
+        pool.submit(boom)
+        with pytest.raises(ValueError, match="boom"):
+            pool.wait_idle(timeout=10)
+        # pool stays usable afterwards
+        ok = []
+        pool.run(lambda: ok.append(1))
+        assert ok == [1]
+
+
+def test_failed_predecessor_cancels_successors_but_drains():
+    with ThreadPool(2) as pool:
+        ran = []
+        g = TaskGraph()
+        a = g.add(lambda: (_ for _ in ()).throw(RuntimeError("fail")))
+        b = g.add(lambda: ran.append("b"))
+        b.succeed(a)
+        with pytest.raises(RuntimeError):
+            pool.run(g)
+        # b was cancelled, not executed, and the pool drained (no hang)
+        assert ran == [] and isinstance(b.exception, (CancelledError, type(None)))
+
+
+def test_future_result_and_exception():
+    with ThreadPool(2) as pool:
+        assert pool.submit_future(lambda: 7 * 6).result(5) == 42
+        f = pool.submit_future(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            f.result(5)
+        pool.wait_idle()  # future errors do not poison the pool
+
+
+def test_wait_idle_timeout():
+    with ThreadPool(1) as pool:
+        pool.submit(lambda: time.sleep(0.5))
+        with pytest.raises(TimeoutError):
+            pool.wait_idle(timeout=0.01)
+        pool.wait_idle(timeout=10)
+
+
+def build_fib_graph(g: TaskGraph, n: int, results: dict, key: str):
+    """The paper's benchmark workload: the full recursion DAG of fib(n)
+    without memoization (one task per call site)."""
+    if n < 2:
+        return g.add(lambda k=key, v=n: results.__setitem__(k, v))
+    left = build_fib_graph(g, n - 1, results, key + "l")
+    right = build_fib_graph(g, n - 2, results, key + "r")
+    join = g.add(lambda k=key: results.__setitem__(k, results[k + "l"] + results[k + "r"]))
+    return join.succeed(left, right)
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_recursive_fibonacci_task_graph(make):
+    with make(4) as pool:
+        results = {}
+        g = TaskGraph("fib")
+        build_fib_graph(g, 12, results, "r")
+        assert len(g) == 465  # 2*fib(13)-1 call sites
+        pool.run(g)
+        assert results["r"] == 144
+
+
+@pytest.mark.parametrize("make", POOLS, ids=POOL_IDS)
+def test_many_independent_tasks_stress(make):
+    with make(4) as pool:
+        counter = [0]
+        lock = threading.Lock()
+
+        def bump():
+            with lock:
+                counter[0] += 1
+
+        for _ in range(2000):
+            pool.submit(bump)
+        pool.wait_idle(timeout=60)
+        assert counter[0] == 2000
+
+
+def test_default_thread_count_is_hardware_concurrency():
+    import os
+
+    with ThreadPool() as pool:
+        assert pool.num_threads == (os.cpu_count() or 1)
+
+
+def test_stats_and_close_idempotent():
+    pool = ThreadPool(2)
+    pool.run(lambda: None)
+    s = pool.stats()
+    assert s["executed"] >= 1
+    pool.close()
+    pool.close()  # idempotent

@@ -1,0 +1,97 @@
+"""Data pipeline tests: determinism, ordering, resume, overlap."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ThreadPool
+from repro.data import MemmapTokens, Prefetcher, SyntheticTokens
+
+
+def test_synthetic_deterministic_per_step():
+    src = SyntheticTokens(101, 16, 4, seed=3)
+    a, b = src.batch(7), src.batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = src.batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(a["targets"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_synthetic_learnable_structure():
+    """Consecutive tokens are deterministically related (low entropy given
+    previous token) — the smoke-training signal."""
+    src = SyntheticTokens(101, 64, 8, seed=0)
+    t = src.batch(0)["tokens"]
+    # same previous token -> mostly same next token (7 noise values)
+    from collections import defaultdict
+
+    nxt = defaultdict(set)
+    for row in t:
+        for a, b in zip(row[:-1], row[1:]):
+            nxt[int(a)].add(int(b))
+    sizes = [len(v) for v in nxt.values() if len(v) > 0]
+    assert np.mean(sizes) <= 7.5
+
+
+def test_host_sharding_disjoint():
+    a = SyntheticTokens(101, 8, 8, seed=1, host_id=0, num_hosts=2)
+    b = SyntheticTokens(101, 8, 8, seed=1, host_id=1, num_hosts=2)
+    assert a.local_batch == 4
+    assert not np.array_equal(a.batch(0)["tokens"], b.batch(0)["tokens"])
+
+
+def test_prefetcher_orders_and_resumes():
+    src = SyntheticTokens(101, 8, 4, seed=2)
+    with Prefetcher(src, depth=3) as pf:
+        b0 = pf.get()
+        b1 = pf.get()
+        cursor = pf.cursor
+    assert cursor == 2
+    # resuming from the cursor reproduces the stream
+    with Prefetcher(src, depth=2, start_step=cursor) as pf2:
+        b2 = pf2.get()
+    np.testing.assert_array_equal(np.asarray(b2["tokens"]), src.batch(2)["tokens"])
+    np.testing.assert_array_equal(np.asarray(b0["tokens"]), src.batch(0)["tokens"])
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), src.batch(1)["tokens"])
+
+
+def test_prefetcher_overlaps_slow_source():
+    class SlowSource:
+        def batch(self, step):
+            time.sleep(0.02)
+            return {"x": np.full((2,), step)}
+
+    with ThreadPool(4) as pool:
+        with Prefetcher(SlowSource(), pool=pool, depth=4) as pf:
+            pf.get()  # warm
+            t0 = time.perf_counter()
+            for _ in range(8):
+                pf.get()
+            elapsed = time.perf_counter() - t0
+    # serial would be >= 8*0.02 = 0.16s; overlapped should be well under
+    assert elapsed < 0.15, elapsed
+
+
+def test_memmap_tokens(tmp_path):
+    from repro.data.synthetic import write_token_file
+
+    data = np.arange(1000, dtype=np.int32) % 50
+    path = tmp_path / "toks.bin"
+    write_token_file(path, data)
+    src = MemmapTokens(path, seq_len=16, global_batch=4)
+    b = src.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+    # deterministic
+    np.testing.assert_array_equal(src.batch(3)["tokens"], src.batch(3)["tokens"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 8))
+def test_synthetic_tokens_in_range(step, batch):
+    src = SyntheticTokens(97, 8, batch, seed=5)
+    t = src.batch(step)["tokens"]
+    assert t.min() >= 0 and t.max() < 97

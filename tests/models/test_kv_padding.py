@@ -1,0 +1,80 @@
+"""Zero-padded KV heads (beyond-paper TP optimization) must be EXACT:
+same logits as the unpadded model, zero pads preserved by a train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def cfgs():
+    base = dict(
+        name="padtest", family="dense", num_layers=2, d_model=64,
+        num_heads=6, num_kv_heads=2, d_ff=128, vocab_size=128,
+        dtype="float32", remat="none", qkv_bias=True,
+    )
+    return ModelConfig(**base), ModelConfig(**base, kv_pad_to=4)
+
+
+def _copy_real_into_padded(p_ref, p_pad):
+    """Copy unpadded weights into the padded tree (pads stay zero)."""
+
+    def one(ref, pad):
+        if ref.shape == pad.shape:
+            return ref
+        out = jnp.zeros_like(pad)
+        sl = tuple(slice(0, s) for s in ref.shape)
+        return out.at[sl].set(ref)
+
+    return jax.tree.map(one, p_ref, jax.tree.map(jnp.zeros_like, p_pad))
+
+
+def test_padded_model_matches_unpadded_exactly():
+    cfg, cfg_pad = cfgs()
+    m, mp = build_model(cfg), build_model(cfg_pad)
+    params = m.init(jax.random.PRNGKey(0))
+    params_pad = _copy_real_into_padded(params, mp.init(jax.random.PRNGKey(1)))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+    l0, _ = jax.jit(m.loss)(params, batch)
+    l1, _ = jax.jit(mp.loss)(params_pad, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+    # prefill logits identical too
+    g0, _ = jax.jit(m.prefill)(params, {"tokens": tokens})
+    g1, _ = jax.jit(mp.prefill)(params_pad, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), atol=1e-5)
+
+
+def test_zero_pads_stay_zero_after_train_step():
+    _, cfg_pad = cfgs()
+    mp = build_model(cfg_pad)
+    params = mp.init(jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-2, weight_decay=0.1)
+    opt = adamw_init(ocfg, params)
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg_pad.vocab_size)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+
+    @jax.jit
+    def step(params, opt):
+        (_, _), grads = jax.value_and_grad(
+            lambda p: mp.loss(p, batch), has_aux=True
+        )(params)
+        p2, o2, _ = adamw_update(ocfg, jnp.asarray(1e-2), params, grads, opt)
+        return p2, o2
+
+    for _ in range(3):
+        params, opt = step(params, opt)
+
+    KV, KVp = cfg_pad.num_kv_heads, cfg_pad.kv_heads_padded
+    H, Hp = cfg_pad.num_heads, cfg_pad.heads_padded
+    for grp in ("s0",):
+        attn = params["layers"][grp]["attn"]
+        assert attn["wq"].shape[-2] == Hp and attn["wk"].shape[-2] == KVp
+        np.testing.assert_array_equal(np.asarray(attn["wq"][..., H:, :]), 0.0)
+        np.testing.assert_array_equal(np.asarray(attn["wk"][..., KV:, :]), 0.0)
+        np.testing.assert_array_equal(np.asarray(attn["wv"][..., KV:, :]), 0.0)
+        np.testing.assert_array_equal(np.asarray(attn["wo"][..., H:, :, :]), 0.0)
