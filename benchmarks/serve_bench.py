@@ -1,0 +1,244 @@
+"""Serving benchmark: continuous batching vs static batching, Poisson trace.
+
+Replays one arrival trace (Poisson interarrivals, per-request token budgets)
+through two servers over the same model and params:
+
+* **static**  — the classic batch server (what examples/serve_lm.py used to
+  be): wait until ``batch`` requests have arrived, prefill them together,
+  decode the whole batch in lockstep until the *longest* member finishes,
+  repeat. Slots of finished sequences burn compute; late arrivals wait for
+  the next batch to form.
+* **continuous** — ``repro.serve.ServeEngine``: iteration-level batching on
+  the work-stealing pool (low-priority prefill tasks, high-priority decode
+  ticks, join/retire between ticks).
+
+Both count only each request's own budgeted tokens, so the tokens/s ratio
+isolates scheduling quality. A verification pass checks the engine's output
+for every request is bit-identical (token-for-token) to sequential
+single-request decode.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--arch tinyllama-1.1b]
+        [--requests 24] [--slots 8] [--out benchmarks/artifacts/serve_bench.json]
+
+Runs on CPU with the arch's reduced config in ~a minute; emits a JSON report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_reduced
+from repro.models import build_model
+from repro.models.lm import extend_caches
+from repro.serve import ServeEngine
+
+
+def make_trace(rng, n, prompt_len, min_new, max_new, mean_gap_s):
+    """(prompts, budgets, arrival_times) — Poisson arrivals, varied budgets."""
+    prompts = [rng.integers(0, 2**31 - 1, size=prompt_len) for _ in range(n)]
+    budgets = [int(rng.integers(min_new, max_new + 1)) for _ in range(n)]
+    gaps = rng.exponential(mean_gap_s, size=n)
+    arrivals = np.cumsum(gaps)
+    return prompts, budgets, arrivals
+
+
+def clip_vocab(prompts, vocab):
+    return [np.asarray(p % vocab, np.int32) for p in prompts]
+
+
+# ---------------------------------------------------------------------------
+# static-batch baseline
+# ---------------------------------------------------------------------------
+
+
+class StaticBatchServer:
+    """Batched prefill + lockstep decode until the longest member finishes."""
+
+    def __init__(self, model, params, batch, prompt_len, max_new):
+        self.model, self.params, self.batch = model, params, batch
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self.prompt_len, self.max_new = prompt_len, max_new
+
+    def run_group(self, prompts, budgets):
+        """Decode one full batch; returns per-request generated ids."""
+        B = len(prompts)
+        toks = jnp.asarray(np.stack(prompts))  # (B, S) — equal lengths
+        logits, caches = self._prefill(self.params, {"tokens": toks})
+        caches = extend_caches(caches, self.max_new)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        outs = [[int(tok[i, 0])] for i in range(B)]
+        ticks = max(budgets)
+        for i in range(ticks - 1):  # static: everyone decodes to the longest
+            logits, caches = self._decode(
+                self.params, tok, caches, jnp.asarray(self.prompt_len + i, jnp.int32)
+            )
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            for b in range(B):
+                if len(outs[b]) < budgets[b]:  # budget reached -> discard
+                    outs[b].append(int(tok[b, 0]))
+        jax.block_until_ready(tok)
+        return outs
+
+    def serve(self, prompts, budgets, arrivals, t0):
+        """Replay the trace: form full batches in arrival order."""
+        outs = [None] * len(prompts)
+        for g0 in range(0, len(prompts), self.batch):
+            idx = list(range(g0, min(g0 + self.batch, len(prompts))))
+            # batch formation: wait for the last member to arrive
+            wait = t0 + arrivals[idx[-1]] - time.perf_counter()
+            if wait > 0:
+                time.sleep(wait)
+            group = self.run_group([prompts[i] for i in idx], [budgets[i] for i in idx])
+            for i, o in zip(idx, group):
+                outs[i] = o
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# sequential single-request reference (bit-identity oracle)
+# ---------------------------------------------------------------------------
+
+
+def sequential_reference(model, params, prompts, budgets, width=None):
+    """Decode each request alone, one token at a time.
+
+    ``width``: KV capacity to provision (default: exactly prompt+budget).
+    The bit-identity check passes the engine's ``max_len`` so both programs
+    attend over equally-sized (identically masked) caches — in bf16, the
+    reduction tiling over differently-padded cache widths can flip greedy
+    argmax at a near-tie, which is numerics, not scheduling.
+    """
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    outs = []
+    for prompt, budget in zip(prompts, budgets):
+        logits, caches = prefill(params, {"tokens": jnp.asarray(prompt[None, :])})
+        extra = (width - int(prompt.size)) if width is not None else budget
+        caches = extend_caches(caches, extra)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [int(tok[0, 0])]
+        for i in range(budget - 1):
+            logits, caches = decode(
+                params, tok, caches, jnp.asarray(prompt.size + i, jnp.int32)
+            )
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+        outs.append(out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# continuous engine client
+# ---------------------------------------------------------------------------
+
+
+def serve_continuous(engine, prompts, budgets, arrivals, t0):
+    handles = [None] * len(prompts)
+
+    def feeder():
+        for i, (p, n) in enumerate(zip(prompts, budgets)):
+            wait = t0 + arrivals[i] - time.perf_counter()
+            if wait > 0:
+                time.sleep(wait)
+            handles[i] = engine.submit(p, n)
+
+    th = threading.Thread(target=feeder)
+    th.start()
+    th.join()
+    return [list(map(int, h.result(600))) for h in handles]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_NAMES)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--min-new", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--mean-gap-ms", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+    prompts, budgets, arrivals = make_trace(
+        rng, args.requests, args.prompt_len, args.min_new, args.max_new,
+        args.mean_gap_ms / 1e3,
+    )
+    prompts = clip_vocab(prompts, cfg.vocab_size)
+    total_tokens = sum(budgets)
+    max_len = args.prompt_len + args.max_new + 1
+    buckets = (args.prompt_len,) if ServeEngine._padding_safe(cfg) else None
+
+    # -- static baseline (warmup compiles, then timed replay) ---------------
+    static = StaticBatchServer(model, params, args.slots, args.prompt_len, args.max_new)
+    static.run_group(prompts[: args.slots], [2] * args.slots)  # warmup
+    t0 = time.perf_counter()
+    static_outs = static.serve(prompts, budgets, arrivals, t0)
+    static_wall = time.perf_counter() - t0
+
+    # -- continuous engine (same warmup treatment, same trace) --------------
+    engine = ServeEngine(
+        model, params, max_slots=args.slots, max_len=max_len, prefill_buckets=buckets
+    )
+    engine.generate(prompts[: args.slots], 2)  # warmup
+    pre_stats = engine.stats()
+    t0 = time.perf_counter()
+    cont_outs = serve_continuous(engine, prompts, budgets, arrivals, t0)
+    engine.drain(600)
+    cont_wall = time.perf_counter() - t0
+    stats = engine.stats()
+    engine.close()
+
+    assert all(len(o) == b for o, b in zip(static_outs, budgets))
+    assert all(len(o) == b for o, b in zip(cont_outs, budgets))
+
+    identical = None
+    if not args.no_verify:
+        refs = sequential_reference(model, params, prompts, budgets, width=max_len)
+        identical = all(r == c for r, c in zip(refs, cont_outs))
+
+    report = {
+        "arch": cfg.name,
+        "requests": args.requests,
+        "slots": args.slots,
+        "prompt_len": args.prompt_len,
+        "budgets": {"min": args.min_new, "max": args.max_new, "total_tokens": total_tokens},
+        "mean_gap_ms": args.mean_gap_ms,
+        "static": {
+            "wall_s": round(static_wall, 4),
+            "tokens_per_s": round(total_tokens / static_wall, 2),
+        },
+        "continuous": {
+            "wall_s": round(cont_wall, 4),
+            "tokens_per_s": round(total_tokens / cont_wall, 2),
+            "ticks": stats["ticks"] - pre_stats["ticks"],
+            "mean_occupancy": round(stats["mean_occupancy"], 3),
+            "pool_steals": stats["pool"]["steals"],
+        },
+        "speedup": round(static_wall / cont_wall, 3),
+        "outputs_match_sequential_decode": identical,
+    }
+    print(json.dumps(report, indent=2))
+    if args.out:
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=2))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
-"""Serving example: batched prefill + greedy decode with a KV cache.
+"""Serving example: a thin client of the continuous-batching engine.
 
-Demonstrates the inference path of every family: dense GQA cache, MLA
-compressed cache, SSM recurrent state, sliding-window ring buffers.
+Submits a handful of prompts with different lengths and token budgets to
+``repro.serve.ServeEngine`` — prefill runs as low-priority tasks on the
+work-stealing pool, decode ticks at high priority, and sequences join/retire
+between ticks (iteration-level batching).
 
     PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b] [--new 16]
 
@@ -12,19 +14,26 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.models import build_model
-from repro.models.lm import extend_caches
+from repro.serve import ServeEngine
+
+# the engine serves text-prompt families; encdec/vlm need non-token inputs
+SERVABLE = tuple(
+    n for n in ARCH_NAMES
+    if not get_config(n).is_encdec and get_config(n).family != "vlm"
+)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_NAMES)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=SERVABLE)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -33,41 +42,33 @@ def main() -> None:
     print(f"arch={cfg.name} family={cfg.family}")
     params = model.init(jax.random.PRNGKey(0))
 
-    B, S = args.batch, args.prompt_len
-    batch = {
-        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
-    }
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.zeros((B, cfg.num_image_tokens, cfg.vision_dim), jnp.bfloat16)
-    if cfg.is_encdec:
-        batch["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    rng = np.random.default_rng(1)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)))
+        for _ in range(args.requests)
+    ]
+    budgets = [int(rng.integers(max(2, args.new // 2), args.new + 1)) for _ in range(args.requests)]
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    max_len = args.prompt_len + args.new + 1
+    buckets = None
+    if ServeEngine._padding_safe(cfg):
+        buckets = (args.prompt_len // 2, args.prompt_len)
 
     t0 = time.perf_counter()
-    logits, caches = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-    caches = extend_caches(caches, args.new)
+    with ServeEngine(
+        model, params, max_slots=args.slots, max_len=max_len, prefill_buckets=buckets
+    ) as engine:
+        handles = [engine.submit(p, n) for p, n in zip(prompts, budgets)]
+        outs = [h.result(600) for h in handles]
+        wall = time.perf_counter() - t0
+        stats = engine.stats()
 
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    pos = S + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
-    t0 = time.perf_counter()
-    for i in range(args.new - 1):
-        logits, caches = decode(params, tok, caches, jnp.asarray(pos + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"prefill: {B}x{S} tokens in {t_prefill * 1e3:.1f} ms "
-          f"(incl. compile)")
-    print(f"decode:  {args.new - 1} steps x {B} seqs in {t_decode * 1e3:.1f} ms "
-          f"-> {B * (args.new - 1) / max(t_decode, 1e-9):,.0f} tok/s")
-    print("generated token ids (first sequence):", gen[0].tolist())
+    total = sum(len(o) for o in outs)
+    print(f"{len(outs)} requests, {total} tokens in {wall * 1e3:.1f} ms "
+          f"(incl. compile) -> {total / max(wall, 1e-9):,.0f} tok/s")
+    print(f"ticks={stats['ticks']} mean_occupancy={stats['mean_occupancy']:.2f} "
+          f"pool_steals={stats['pool']['steals']}")
+    print("generated token ids (first request):", list(map(int, outs[0])))
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 of running task graphs (Puyda 2024), plus the trace-time schedule simulator
 that adapts its execution policy to statically-scheduled TPU programs."""
 from .baseline import NaiveThreadPool, SerialExecutor
-from .deque import EMPTY, ChaseLevDeque, FastDeque
+from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
 from .graph import CycleError, TaskGraph
 from .pool import Future, ThreadPool
 from .schedule import (
@@ -24,6 +24,7 @@ __all__ = [
     "EMPTY",
     "ChaseLevDeque",
     "FastDeque",
+    "PriorityDeque",
     "CycleError",
     "TaskGraph",
     "Future",

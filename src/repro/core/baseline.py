@@ -104,9 +104,15 @@ class NaiveThreadPool:
                 task.run()
             except BaseException as exc:  # noqa: BLE001
                 task.exception = exc
-                with self._cond:
-                    if self._first_error is None:
-                        self._first_error = exc
+                if task.propagate_errors:
+                    with self._cond:
+                        if self._first_error is None:
+                            self._first_error = exc
+            if task.on_done is not None:
+                try:
+                    task.on_done(task)
+                except BaseException:  # noqa: BLE001 - observer errors dropped
+                    pass
             ready = [s for s in task.successors if s.decrement()]
             with self._cond:
                 for s in ready:
@@ -136,6 +142,11 @@ class SerialExecutor:
         while stack:
             t = stack.pop()
             t.run()
+            if t.on_done is not None:
+                try:
+                    t.on_done(t)
+                except BaseException:  # noqa: BLE001 - observer errors dropped
+                    pass
             for s in t.successors:
                 if s.decrement():
                     stack.append(s)

@@ -30,14 +30,21 @@ when nothing was taken, allowing ``None`` payloads. Chase-Lev deques are
 single-producer, so non-worker submissions go through the pool's shared MPMC
 inbox (a :class:`FastDeque`, whose every op is GIL-atomic) rather than into a
 worker's deque — see ``pool.py``.
+
+:class:`PriorityDeque` layers task priorities on top (DESIGN.md §3): one
+inner deque per distinct priority value ("band"), scanned highest-first.
+Within a band the owner still pops LIFO and thieves steal FIFO, so the
+pool's policy matches the schedule simulator's ``(-priority, -recency)``
+ready key exactly. Most workloads use a single band (priority 0.0), in
+which case the fast path is one dict lookup on top of the plain deque.
 """
 from __future__ import annotations
 
 import threading
 from collections import deque as _pydeque
-from typing import Any
+from typing import Any, Callable
 
-__all__ = ["EMPTY", "FastDeque", "ChaseLevDeque"]
+__all__ = ["EMPTY", "FastDeque", "ChaseLevDeque", "PriorityDeque"]
 
 
 class _Empty:
@@ -193,3 +200,73 @@ class ChaseLevDeque:
 
     def __len__(self) -> int:
         return max(0, self._bottom - self._top)
+
+
+class PriorityDeque:
+    """Priority-banded work-stealing deque.
+
+    Items are routed to an inner deque per ``item.priority`` (items without
+    the attribute land in band 0.0). ``pop``/``steal`` scan bands from the
+    highest priority down; within a band the usual deque discipline applies
+    (owner LIFO at the bottom, thieves FIFO at the top), reproducing the
+    simulator's max-heap-on-(priority, recency) ready queue.
+
+    Concurrency: the band map only ever grows. Creating a band takes a lock;
+    ``_order`` is then *replaced* (never mutated) with a freshly sorted list,
+    so readers iterating a stale snapshot miss at most a band created after
+    their scan began — the same transient under-observation any thief has
+    against a concurrent push, and the next scan sees it. All per-band
+    operations inherit the inner deque's lock-free/GIL-atomic guarantees.
+    """
+
+    __slots__ = ("_deque_cls", "_bands", "_order", "_lock")
+
+    def __init__(self, deque_cls: Callable[[], Any] = None) -> None:
+        self._deque_cls = deque_cls or FastDeque
+        self._bands: dict[float, Any] = {}
+        self._order: list[float] = []  # priorities, descending
+        self._lock = threading.Lock()
+
+    def _band(self, priority: float) -> Any:
+        band = self._bands.get(priority)
+        if band is None:
+            with self._lock:
+                band = self._bands.get(priority)
+                if band is None:
+                    band = self._deque_cls()
+                    self._bands[priority] = band
+                    self._order = sorted(self._bands, reverse=True)
+        return band
+
+    def push(self, item: Any) -> None:
+        """Push at the bottom of the item's priority band.
+
+        Combined with band-scanning ``steal`` this also gives the MPMC
+        inbox priority-then-FIFO ordering (higher bands drain first, arrival
+        order within a band), so the external-submission path is the same
+        operation.
+        """
+        self._band(getattr(item, "priority", 0.0)).push(item)
+
+    push_external = push
+
+    def pop(self) -> Any:
+        """Owner-side pop: highest band first, LIFO within the band."""
+        for pr in self._order:
+            item = self._bands[pr].pop()
+            if item is not EMPTY:
+                return item
+        return EMPTY
+
+    def steal(self) -> Any:
+        """Thief-side steal: highest band first, FIFO within the band."""
+        for pr in self._order:
+            item = self._bands[pr].steal()
+            if item is not EMPTY:
+                return item
+        return EMPTY
+
+    def __len__(self) -> int:
+        # iterate the _order snapshot, not the dict: a concurrent first push
+        # to a new band may grow _bands mid-iteration
+        return sum(len(self._bands[p]) for p in self._order)

@@ -11,7 +11,7 @@ from __future__ import annotations
 from collections import deque as _pydeque
 from typing import Any, Callable, Iterator, Optional, Sequence
 
-from .task import Task
+from .task import CancelledError, Task
 
 __all__ = ["TaskGraph", "CycleError"]
 
@@ -24,11 +24,19 @@ class TaskGraph:
     def __init__(self, name: str = "") -> None:
         self.name = name
         self.tasks: list[Task] = []
+        self._fin: Optional[Task] = None  # hidden as_future completion task
+        self._fin_pred_ids: set[int] = set()  # tasks already wired into _fin
 
     # -- construction -----------------------------------------------------------
 
-    def add(self, fn: Optional[Callable[[], Any]] = None, *, name: str = "") -> Task:
-        t = Task(fn, name=name or f"t{len(self.tasks)}")
+    def add(
+        self,
+        fn: Optional[Callable[[], Any]] = None,
+        *,
+        name: str = "",
+        priority: float = 0.0,
+    ) -> Task:
+        t = Task(fn, name=name or f"t{len(self.tasks)}", priority=priority)
         self.tasks.append(t)
         return t
 
@@ -58,6 +66,60 @@ class TaskGraph:
                 t.succeed(out[-1])
             out.append(t)
         return out
+
+    # -- execution ----------------------------------------------------------------
+
+    def as_future(self, pool) -> "Future":  # noqa: F821 - forward ref (pool.py)
+        """Submit the whole graph and return a :class:`~repro.core.Future`.
+
+        The future resolves to ``None`` when every task has completed, or to
+        the first task exception if the graph failed. ``future.cancel()``
+        cooperatively cancels every task that has not started yet (running
+        bodies finish; dependencies still drain so the pool stays clean).
+
+        One hidden completion task is kept per graph and re-wired as sinks
+        change, so build-once / ``as_future``-per-round submission does not
+        accumulate bookkeeping. Rounds must be sequential (task state is
+        shared across submissions, as with plain ``submit``).
+        """
+        from .pool import Future  # local import: graph.py must not cycle
+
+        if self._fin is None:
+            self._fin = Task(name=f"{self.name or 'graph'}::done", priority=float("inf"))
+            self._fin.propagate_errors = False
+        fin = self._fin
+        new_sinks = [
+            t
+            for t in self.tasks
+            if id(t) not in self._fin_pred_ids
+            and all(s is fin for s in t.successors)
+        ]
+        if new_sinks:
+            fin.succeed(*new_sinks)
+            self._fin_pred_ids.update(id(t) for t in new_sinks)
+        graph_tasks = list(self.tasks)
+
+        def _canceller() -> bool:
+            won = fin.cancel()
+            for t in graph_tasks:
+                t.cancel()
+            return won
+
+        fut = Future(canceller=_canceller)
+
+        def _resolve(_t: Task) -> None:
+            for t in graph_tasks:
+                if t.exception is not None and not isinstance(t.exception, CancelledError):
+                    fut.set_exception(t.exception)
+                    return
+            if any(t.cancelled for t in graph_tasks):
+                fut.set_exception(CancelledError("task graph cancelled"))
+                return
+            fut.set_result(None)
+
+        fin.on_done = _resolve
+        pool.submit(list(self.tasks) + [fin])
+        return fut
 
     # -- inspection ---------------------------------------------------------------
 

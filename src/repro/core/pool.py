@@ -15,6 +15,15 @@ Faithful Python adaptation of the paper's C++ design:
   **one** newly-ready successor is executed inline on the same worker
   (continuation passing), the others are pushed.
 
+Beyond the paper (DESIGN.md §3): task **priorities** — own-deque pops, inbox
+draining, steals and the inline-continuation pick are all priority-aware
+(highest band first; LIFO within a band on the owner's side, FIFO on the
+thief/inbox side), the same ready-key the schedule simulator uses — and
+**cooperative cancellation** surfaced through :class:`Future` and
+``TaskGraph.as_future``. Both exist for the serving engine: decode ticks run
+at high priority, speculative prefills at low priority, and aborted requests
+cancel their in-flight work.
+
 Differences from the C++ original are documented in DESIGN.md §2.1.
 """
 from __future__ import annotations
@@ -23,7 +32,7 @@ import os
 import threading
 from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
-from .deque import EMPTY, ChaseLevDeque, FastDeque
+from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
 from .task import CancelledError, Task, iter_graph
 
 __all__ = ["ThreadPool", "Future"]
@@ -32,25 +41,74 @@ _PARK_TIMEOUT_S = 0.05  # bounded park: robust against missed wakeups
 
 
 class Future:
-    """Minimal completion handle for ``ThreadPool.submit_future``."""
+    """Completion handle: result/exception delivery plus cooperative cancel.
 
-    __slots__ = ("_event", "_result", "_exception")
+    ``canceller`` (when attached by ``submit_future`` / ``as_future``) is a
+    nullary callable returning True if the underlying work was prevented
+    from starting. A bare ``Future()`` has no producer to stop, so
+    :meth:`cancel` simply resolves it with :class:`CancelledError`.
+    Resolution is first-write-wins: a producer completing after a successful
+    cancel is ignored.
+    """
 
-    def __init__(self) -> None:
+    __slots__ = ("_event", "_result", "_exception", "_lock", "_canceller", "_cancelled")
+
+    def __init__(self, canceller: Optional[Callable[[], bool]] = None) -> None:
         self._event = threading.Event()
         self._result: Any = None
         self._exception: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._canceller = canceller
+        self._cancelled = False
 
     def set_result(self, value: Any) -> None:
-        self._result = value
-        self._event.set()
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._result = value
+            self._event.set()
 
     def set_exception(self, exc: BaseException) -> None:
-        self._exception = exc
-        self._event.set()
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._exception = exc
+            self._event.set()
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Try to cancel. True iff the body was prevented from running.
+
+        Already-completed futures and tasks that already started return
+        False (cooperative semantics: a running body is never interrupted).
+        The canceller's verdict is authoritative: if it won, this returns
+        True even when the skipped task's completion callback resolved the
+        future (with CancelledError) concurrently.
+        """
+        with self._lock:
+            if self._event.is_set() and not self._cancelled:
+                return False
+        if self._canceller is not None:
+            if not self._canceller():
+                return False
+            with self._lock:
+                self._cancelled = True
+                if not self._event.is_set():
+                    self._exception = CancelledError("future cancelled")
+                    self._event.set()
+            return True
+        with self._lock:
+            if self._event.is_set():
+                return self._cancelled
+            self._cancelled = True
+            self._exception = CancelledError("future cancelled")
+            self._event.set()
+        return True
 
     def result(self, timeout: Optional[float] = None) -> Any:
         if not self._event.wait(timeout):
@@ -70,7 +128,9 @@ class ThreadPool:
         paper's ``std::thread::hardware_concurrency()`` default.
     deque_cls:
         ``FastDeque`` (default, GIL-atomic / fence-free analogue) or
-        ``ChaseLevDeque`` (faithful structural port; used in tests).
+        ``ChaseLevDeque`` (faithful structural port; used in tests). Each
+        worker's deque and the shared inbox are priority-banded instances
+        of this class (``PriorityDeque``).
     """
 
     def __init__(
@@ -83,15 +143,18 @@ class ThreadPool:
         n = num_threads if num_threads is not None else (os.cpu_count() or 1)
         if n < 1:
             raise ValueError("num_threads must be >= 1")
-        self._deques = [deque_cls() for _ in range(n)]
-        self._inbox = FastDeque()  # MPMC under the GIL
+        self._deques = [PriorityDeque(deque_cls) for _ in range(n)]
+        self._inbox = PriorityDeque(FastDeque)  # MPMC under the GIL
         self._tls = threading.local()
         self._cond = threading.Condition()
         self._unfinished = 0  # tasks claimed but not yet completed
         self._stop = False
         self._first_error: Optional[BaseException] = None
-        self._executed = 0  # statistics (approximate across threads)
-        self._steals = 0
+        # Per-worker statistic cells (satellite fix: no cross-thread
+        # increments; each worker owns one slot, stats() sums on read).
+        # Slot n is for increments from non-worker threads (none today).
+        self._executed = [0] * (n + 1)
+        self._steals = [0] * (n + 1)
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), name=f"{name}-{i}", daemon=True)
             for i in range(n)
@@ -105,17 +168,26 @@ class ThreadPool:
     def num_threads(self) -> int:
         return len(self._deques)
 
-    def submit(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+    def submit(
+        self,
+        work: Union[Task, Callable[[], Any], Iterable[Task]],
+        *,
+        priority: Optional[float] = None,
+    ) -> None:
         """Submit a callable, a single Task, or a task graph (iterable).
 
         Graph submission mirrors the paper: counters of every task reachable
         from the collection are re-armed, then all roots (tasks with no
-        predecessors) are scheduled.
+        predecessors) are scheduled. ``priority`` (when given) overrides the
+        priority of a callable/single-task submission; graph tasks keep
+        their own per-task priorities.
         """
         if isinstance(work, Task):
+            if priority is not None:
+                work.priority = priority
             self._schedule(work)
         elif callable(work):
-            self._schedule(Task(work))
+            self._schedule(Task(work, priority=priority or 0.0))
         else:
             tasks = list(work)
             graph = iter_graph(tasks)
@@ -130,17 +202,25 @@ class ThreadPool:
     # paper-style alias
     Submit = submit
 
-    def submit_future(self, fn: Callable[[], Any]) -> Future:
-        """Submit a callable and get a :class:`Future` for its result."""
-        fut = Future()
+    def submit_future(self, fn: Callable[[], Any], *, priority: float = 0.0) -> Future:
+        """Submit a callable and get a :class:`Future` for its result.
 
-        def body() -> None:
-            try:
-                fut.set_result(fn())
-            except BaseException as exc:  # noqa: BLE001 - delivered via the
-                fut.set_exception(exc)  # future only; does not poison the pool
+        The future supports cooperative :meth:`Future.cancel`; exceptions
+        from ``fn`` are delivered via the future only and do not poison the
+        pool.
+        """
+        task = Task(fn, priority=priority)
+        task.propagate_errors = False
+        fut = Future(canceller=task.cancel)
 
-        self._schedule(Task(body))
+        def _resolve(t: Task) -> None:
+            if t.exception is not None:
+                fut.set_exception(t.exception)
+            else:
+                fut.set_result(t.result)
+
+        task.on_done = _resolve
+        self._schedule(task)
         return fut
 
     def wait_idle(self, timeout: Optional[float] = None) -> None:
@@ -171,7 +251,13 @@ class ThreadPool:
             t.join()
 
     def stats(self) -> dict[str, int]:
-        return {"executed": self._executed, "steals": self._steals}
+        """Execution statistics, summed over the per-worker counters.
+
+        Each worker increments only its own cell, so reads race at worst
+        with a single in-flight increment per cell — the sum is exact for
+        any quiesced pool and monotonically consistent for a live one.
+        """
+        return {"executed": sum(self._executed), "steals": sum(self._steals)}
 
     def __enter__(self) -> "ThreadPool":
         return self
@@ -191,7 +277,8 @@ class ThreadPool:
         """Claim ``task`` (+1 unfinished) and enqueue it.
 
         From a worker thread: push to the worker's own deque, found through
-        the thread-local variable (paper §2.1). Otherwise: shared inbox.
+        the thread-local variable (paper §2.1). Otherwise: shared inbox
+        (priority-banded FIFO).
         """
         with self._cond:
             self._unfinished += 1
@@ -218,31 +305,40 @@ class ThreadPool:
                 with self._cond:
                     self._cond.wait(_PARK_TIMEOUT_S)
             else:
-                self._execute(task)
+                self._execute(task, index)
 
     def _next_task(self, index: int, own: Any, n: int) -> Any:
-        # 1. own deque, bottom (LIFO depth-first)
+        # 1. own deque: highest priority band, LIFO (depth-first) within it
         task = own.pop()
         if task is not EMPTY:
             return task
-        # 2. shared inbox (external submissions), FIFO
+        # 2. shared inbox (external submissions): highest band, FIFO within
         task = self._inbox.steal()
         if task is not EMPTY:
             return task
-        # 3. sweep victims, stealing from the top (FIFO)
+        # 3. sweep victims, stealing from the top (highest band, FIFO)
         for k in range(1, n):
             task = self._deques[(index + k) % n].steal()
             if task is not EMPTY:
-                self._steals += 1
+                self._steals[index] += 1
                 return task
         return EMPTY
 
-    def _execute(self, first: Task) -> None:
+    def _complete(self, task: Task) -> None:
+        """Fire the task's completion callback (never poisons the pool)."""
+        cb = task.on_done
+        if cb is not None:
+            try:
+                cb(task)
+            except BaseException:  # noqa: BLE001 - observer errors are dropped
+                pass
+
+    def _execute(self, first: Task, index: int) -> None:
         """Run a task, then its ready successors via continuation passing."""
         task: Optional[Task] = first
         while task is not None:
             try:
-                if self._first_error is not None:
+                if self._first_error is not None and task.propagate_errors:
                     # fail-fast: skip bodies once the graph is poisoned, but
                     # keep draining dependencies so waiters unblock.
                     task.exception = CancelledError("predecessor failed")
@@ -251,20 +347,23 @@ class ThreadPool:
                     task.run()
             except BaseException as exc:  # noqa: BLE001 - recorded + re-raised in wait
                 task.exception = exc
-                with self._cond:
-                    if self._first_error is None:
-                        self._first_error = exc
-            self._executed += 1
+                if task.propagate_errors:
+                    with self._cond:
+                        if self._first_error is None:
+                            self._first_error = exc
+            self._executed[index] += 1
+            self._complete(task)
             # Fan out (paper §2.2): decrement successors; run ONE newly-ready
-            # successor inline, push the rest.
+            # successor inline — the highest-priority one, matching the
+            # simulator's ready key — and push the rest.
             inline: Optional[Task] = None
-            for s in task.successors:
-                if s.decrement():
-                    if inline is None:
-                        with self._cond:
-                            self._unfinished += 1
-                        inline = s
-                    else:
+            ready = [s for s in task.successors if s.decrement()]
+            if ready:
+                inline = max(ready, key=lambda s: s.priority)
+                with self._cond:
+                    self._unfinished += 1
+                for s in ready:
+                    if s is not inline:
                         self._schedule(s)
             with self._cond:
                 self._unfinished -= 1

@@ -30,6 +30,7 @@ __all__ = [
     "pipeline_schedule",
     "gpipe_schedule",
     "schedule_to_table",
+    "peak_activation_buffers",
 ]
 
 

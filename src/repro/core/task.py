@@ -19,10 +19,18 @@ The public API mirrors the paper::
 
 ``Succeed`` is kept as an alias for drop-in similarity with the C++ API.
 
+Beyond the paper, tasks carry a ``priority`` (larger runs first among ready
+tasks — the same key the schedule simulator uses, DESIGN.md §3) and support
+*cooperative cancellation*: :meth:`cancel` marks a task so its body is
+skipped if it has not started yet; a task already running completes
+normally. Both are what the serving engine builds on (prefill at low
+priority, decode ticks at high priority, request abortion).
+
 The C++ implementation uses ``std::atomic<int>`` for the predecessor counter.
 CPython's ``x -= 1`` is three bytecodes (load/sub/store) and *not* atomic, so
 each task carries a tiny lock guarding the decrement — the direct analogue of
-``fetch_sub`` (contended only at the instant a join point completes).
+``fetch_sub`` (contended only at the instant a join point completes). The
+same lock arbitrates the cancel-vs-start race (the run/cancel "claim").
 """
 from __future__ import annotations
 
@@ -33,7 +41,8 @@ __all__ = ["Task", "CancelledError"]
 
 
 class CancelledError(RuntimeError):
-    """Raised for tasks skipped because a predecessor failed."""
+    """Raised for tasks skipped because a predecessor failed or the task
+    (or its future) was cancelled before it started."""
 
 
 class Task:
@@ -42,33 +51,63 @@ class Task:
     Attributes
     ----------
     fn:
-        The wrapped callable (no arguments, return value ignored — use
-        closures/captures for data flow, as in the paper).
+        The wrapped callable (no arguments; the return value is stored on
+        ``task.result`` — use closures/captures for richer data flow, as in
+        the paper).
     successors:
         Tasks that depend on this one.
     num_predecessors:
         Static in-degree, set up via :meth:`succeed`.
+    priority:
+        Larger runs first among ready tasks (own-deque bands, inbox bands
+        and the inline-continuation pick — see pool.py). Default 0.0.
+    propagate_errors:
+        When False, an exception from ``fn`` is recorded on the task (and
+        delivered through any attached future / ``on_done``) but does not
+        poison the pool. ``submit_future`` uses this.
+    on_done:
+        Optional callback ``fn(task)`` invoked by the executor exactly once
+        after the task completes — whether it ran, failed, or was skipped
+        (cancelled / poisoned graph). This is how futures observe tasks.
     """
 
     __slots__ = (
         "fn",
         "name",
+        "priority",
         "successors",
         "num_predecessors",
+        "result",
+        "propagate_errors",
+        "on_done",
         "_pending",
         "_lock",
         "_done",
+        "_started",
+        "_cancelled",
         "exception",
     )
 
-    def __init__(self, fn: Optional[Callable[[], Any]] = None, name: str = "") -> None:
+    def __init__(
+        self,
+        fn: Optional[Callable[[], Any]] = None,
+        name: str = "",
+        *,
+        priority: float = 0.0,
+    ) -> None:
         self.fn = fn
         self.name = name
+        self.priority = priority
         self.successors: list[Task] = []
         self.num_predecessors = 0
+        self.result: Any = None
+        self.propagate_errors = True
+        self.on_done: Optional[Callable[["Task"], None]] = None
         self._pending = 0  # runtime countdown; reset() restores it
         self._lock = threading.Lock()
         self._done = False
+        self._started = False
+        self._cancelled = False
         self.exception: Optional[BaseException] = None
 
     # -- graph wiring ---------------------------------------------------------
@@ -101,6 +140,8 @@ class Task:
         """Re-arm the countdown so the same graph can be resubmitted."""
         self._pending = self.num_predecessors
         self._done = False
+        self._started = False
+        self._cancelled = False
         self.exception = None
 
     def decrement(self) -> bool:
@@ -112,6 +153,24 @@ class Task:
             self._pending -= 1
             return self._pending == 0
 
+    def cancel(self) -> bool:
+        """Cooperatively cancel: skip the body if it has not started yet.
+
+        Returns True if the cancellation won the race (the body will never
+        run); False if the task already started or finished. Dependency
+        bookkeeping is unaffected either way — a cancelled task still
+        completes (with :class:`CancelledError`) and releases successors.
+        """
+        with self._lock:
+            if self._started or self._done:
+                return False
+            self._cancelled = True
+            return True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
     @property
     def is_ready(self) -> bool:
         return self._pending == 0 and not self._done
@@ -121,9 +180,20 @@ class Task:
         return self._done
 
     def run(self) -> None:
-        """Execute the wrapped callable (exceptions handled by the pool)."""
+        """Execute the wrapped callable (exceptions handled by the pool).
+
+        A task cancelled before this point records :class:`CancelledError`
+        and completes without calling ``fn``.
+        """
+        with self._lock:
+            if self._cancelled:
+                if self.exception is None:
+                    self.exception = CancelledError("task cancelled")
+                self._done = True
+                return
+            self._started = True
         if self.fn is not None:
-            self.fn()
+            self.result = self.fn()
         self._done = True
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

@@ -67,7 +67,22 @@ class Prefetcher:
         """Checkpointable resume point (first unconsumed step)."""
         return self._next_read
 
-    def close(self) -> None:
+    def close(self, timeout: float = 30.0) -> None:
+        """Cancel or drain every in-flight batch, then release the pool.
+
+        Futures whose produce task has not started are cancelled (the
+        source never sees those steps); tasks already running are drained —
+        abandoning them would leave produce() racing a closed pool, and on
+        a shared pool it would leak tasks into the next user.
+        """
+        # cancel pass first (stops everything not yet started), then drain
+        # the stragglers — cancelling before draining minimizes wasted work
+        running = [fut for fut in self._inflight.values() if not fut.cancel()]
+        for fut in running:
+            try:
+                fut.result(timeout)
+            except BaseException:  # noqa: BLE001 - drain only; result unused
+                pass
         self._inflight.clear()
         if self._own_pool:
             self.pool.close()

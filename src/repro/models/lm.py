@@ -409,7 +409,15 @@ class Model:
 
     # -- serving ------------------------------------------------------------------
 
-    def prefill(self, p, batch, ctx=None) -> Tuple[jax.Array, dict]:
+    def prefill(self, p, batch, ctx=None, *, last_pos=None) -> Tuple[jax.Array, dict]:
+        """Fill the KV cache for a prompt; logits for the next-token position.
+
+        ``last_pos`` (scalar int, optional) selects which position's logits
+        to return; default is the final one. The serving engine uses this to
+        prefill right-padded prompt buckets: the pad tokens fill cache slots
+        beyond ``last_pos`` but are causally invisible to it, and decode
+        masks them via ``valid_len`` before they are ever attended.
+        """
         cfg = self.cfg
         enc_out = None
         if cfg.is_encdec:
@@ -422,7 +430,11 @@ class Model:
             unroll=self.scan_unroll,
         )
         x = _norm(cfg, p["final_norm"], x)
-        logits = self._head(p, x[:, -1:])
+        if last_pos is None:
+            x_last = x[:, -1:]
+        else:
+            x_last = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        logits = self._head(p, x_last)
         return logits, caches
 
     def decode_step(self, p, tokens, caches, index, ctx=None) -> Tuple[jax.Array, dict]:
@@ -484,38 +496,28 @@ class Model:
         return out
 
 
-def extend_caches(caches: dict, extra: int) -> dict:
+def extend_caches(caches: dict, extra: int, *, window: Optional[int] = None) -> dict:
     """Pad attention caches by ``extra`` positions (decode continuation).
 
-    Attn k/v grow along the sequence axis; ring-buffer (windowed) and SSM
-    caches are fixed-size and pass through. Handles scan-stacked leaves.
+    Thin wrapper kept for API stability: the per-family cache-layout walk
+    now lives in ``repro.serve.kv`` (imported lazily — models must not
+    depend on the serving layer at import time), which also powers the
+    slot-based serving cache.
+
+    ``window``: when given, sliding-window ring buffers are re-laid out to
+    the full ``min(window, prompt + extra)`` modulus. Without it a ring
+    prefilled from a prompt shorter than the window keeps its undersized
+    modulus and evicts keys that are still inside the attention window —
+    the historical behavior, preserved for callers that don't pass cfg.
     """
+    from repro.serve.kv import pad_caches_to, ring_modulus
 
-    def walk(node):
-        if isinstance(node, dict) and "k" in node and "v" in node:
-            if "pos" in node:  # ring buffer: fixed size
-                return node
-            ax = node["k"].ndim - 3  # (…, B, S, KV, Dh): seq axis
-            pad = [(0, 0)] * node["k"].ndim
-            pad[ax] = (0, extra)
-            return {
-                "k": jnp.pad(node["k"], pad),
-                "v": jnp.pad(node["v"], pad),
-            }
-        if isinstance(node, dict) and "ckv" in node:  # MLA compressed cache
-            ax = node["ckv"].ndim - 2
-            pad = [(0, 0)] * node["ckv"].ndim
-            pad[ax] = (0, extra)
-            return {
-                "ckv": jnp.pad(node["ckv"], pad),
-                "krope": jnp.pad(node["krope"], pad),
-            }
-        if isinstance(node, dict):
-            # cross-attn caches hold static encoder K/V: never grown
-            return {k: (v if k == "cross" else walk(v)) for k, v in node.items()}
-        return node
-
-    return walk(caches)
+    ring_w = None
+    if window is not None:
+        w0 = ring_modulus(caches)
+        if w0 is not None:
+            ring_w = min(window, w0 + extra)
+    return pad_caches_to(caches, extra, ring_w=ring_w)
 
 
 def build_model(cfg, scan_probe: Optional[int] = None, scan_unroll: bool = False) -> Model:

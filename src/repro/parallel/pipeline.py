@@ -31,6 +31,9 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.schedule import pipeline_task_graph, schedule_to_table, simulate
+from repro.parallel.ctx import shard_map
+
+_HAS_PUBLIC_SHARD_MAP = hasattr(jax, "shard_map")
 
 
 def forward_tick_table(num_stages: int, num_microbatches: int) -> np.ndarray:
@@ -114,8 +117,10 @@ def build_pipelined_loss(
             nxt = jax.lax.ppermute(out, axis, [(i, (i + 1) % S) for i in range(S)])
             return (nxt, acc + contrib), None
 
+        # acc is carried as (1,), not a scalar: the legacy (0.4.x) shard_map
+        # transpose rule mis-specs scalar scan-carry residuals
         buf0 = jnp.zeros(mb_shape, x_mb.dtype)
-        acc0 = jnp.zeros((), jnp.float32)
+        acc0 = jnp.zeros((1,), jnp.float32)
         # the carry becomes device-varying after the first ppermute; mark the
         # initial values as varying so the scan carry types are stable
         if hasattr(jax.lax, "pcast"):
@@ -123,19 +128,24 @@ def build_pipelined_loss(
             acc0 = jax.lax.pcast(acc0, (axis,), to="varying")
         (buf, acc), _ = jax.lax.scan(tick, (buf0, acc0), jnp.arange(ticks))
         # mean over microbatches, summed across stages (only last contributes)
-        total = jax.lax.psum(acc, axis) / num_microbatches
-        return total
+        total = jax.lax.psum(acc, axis) / num_microbatches  # (1,)
+        # legacy jax: return a per-stage copy (mapped out spec) because the
+        # 0.4.x replication checker cannot track the ppermute-varying carry
+        return total[0] if _HAS_PUBLIC_SHARD_MAP else total
 
     # loss must come back identical on every rank: psum above handles it.
     other_axes = [a for a in mesh.axis_names if a != axis]
 
     def loss(params_stacked, x_mb, y_mb):
-        out = jax.shard_map(
+        out = shard_map(
             body,
             mesh=mesh,
             in_specs=(P(axis), P(), P()),
-            out_specs=P(),
+            out_specs=P() if _HAS_PUBLIC_SHARD_MAP else P(axis),
+            check_rep=_HAS_PUBLIC_SHARD_MAP,
         )(params_stacked, x_mb, y_mb)
-        return out
+        # legacy: (S,) identical psum'ed copies — mean is value- and
+        # gradient-identical to the replicated scalar
+        return out if _HAS_PUBLIC_SHARD_MAP else out.mean()
 
     return loss, table

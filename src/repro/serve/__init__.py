@@ -1,0 +1,12 @@
+"""repro.serve — continuous-batching inference engine on the task-graph
+thread pool (DESIGN.md §7).
+
+``kv.py`` owns the per-family KV-cache layout knowledge (GQA append, MLA
+compressed latents, SSM recurrent state, sliding-window rings) as a
+slot-based cache pool; ``engine.py`` schedules prefill/decode as prioritized
+tasks on the work-stealing pool and batches sequences at iteration level.
+"""
+from .engine import GenRequest, RequestHandle, ServeEngine
+from .kv import SlotKVCache, pad_caches_to
+
+__all__ = ["ServeEngine", "GenRequest", "RequestHandle", "SlotKVCache", "pad_caches_to"]

@@ -1,0 +1,430 @@
+"""Continuous-batching inference engine on the work-stealing pool.
+
+The serving path is expressed as prioritized tasks on the paper's thread
+pool (DESIGN.md §7):
+
+* **prefill** tasks run at LOW priority — they are pure (compute a batch-1
+  cache + first token, touch no shared buffers) and arbitrarily parallel, so
+  they soak up idle workers without ever delaying a decode step;
+* **decode ticks** run at HIGH priority — the same B-before-F idea that
+  makes the schedule simulator reproduce 1F1B: drain work that frees
+  resources (finishing sequences release cache slots) before admitting more.
+
+The engine batches at *iteration level*: between two decode ticks it joins
+freshly prefilled sequences into free cache slots and retires finished ones,
+so the padded decode batch tracks live traffic instead of a static batch
+running to the longest member. One tick is one jitted
+``vmap(model.decode_step)`` over the slot axis with a per-slot write index —
+sequences of different lengths share one decode computation.
+
+Ticks form a chain (a tick reschedules itself while work remains), which
+serializes all mutation of the shared slot buffers; admission and queue
+bookkeeping are lock-protected and may run from any thread.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Future, Task, ThreadPool
+
+from .kv import SlotKVCache
+
+__all__ = ["ServeEngine", "GenRequest", "RequestHandle", "PREFILL_PRIORITY", "DECODE_PRIORITY"]
+
+PREFILL_PRIORITY = -1.0
+DECODE_PRIORITY = 1.0
+
+
+@dataclass(frozen=True)
+class GenRequest:
+    """One generation request: prompt token ids + greedy-decode budget."""
+
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+
+
+class RequestHandle:
+    """Client-side handle: a cancellable future over the generated tokens.
+
+    ``result()`` returns the generated token ids as a 1-D int32 array (the
+    prompt is not echoed). ``cancel()`` succeeds only while the request is
+    still queued (cooperative semantics — in-flight work runs to
+    completion). ``truncated`` is set when the sequence was evicted at cache
+    capacity before reaching its token budget.
+    """
+
+    def __init__(self, rid: int, prompt_len: int, canceller) -> None:
+        self.rid = rid
+        self.prompt_len = prompt_len
+        self.truncated = False
+        self.future = Future(canceller=canceller)
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        return self.future.result(timeout)
+
+    def cancel(self) -> bool:
+        return self.future.cancel()
+
+    def done(self) -> bool:
+        return self.future.done()
+
+
+class _Seq:
+    """A live sequence occupying one cache slot."""
+
+    __slots__ = ("handle", "tokens", "feed_index", "remaining", "slot")
+
+    def __init__(self, handle: RequestHandle, first_token: int, prompt_len: int, budget: int, slot: int) -> None:
+        self.handle = handle
+        self.tokens = [first_token]
+        self.feed_index = prompt_len  # position of the token fed next tick
+        self.remaining = budget - 1  # first token came from prefill
+        self.slot = slot
+
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine.
+
+    Parameters
+    ----------
+    model, params:
+        A ``repro.models.Model`` and its parameter tree. Encoder-decoder and
+        VLM families are not supported (their prefill inputs are not plain
+        token prompts).
+    max_slots:
+        Decode batch width = number of resident sequences.
+    max_len:
+        Per-slot cache capacity (prompt + generated). Sequences reaching it
+        are evicted (``handle.truncated``).
+    pool:
+        Shared :class:`ThreadPool`; the engine owns a 2-worker pool if None.
+    prefill_buckets:
+        Optional ascending prompt-length buckets. Prompts are right-padded to
+        the smallest fitting bucket so prefill compiles once per bucket
+        instead of once per length. Only valid for full-attention families
+        (pad tokens are causally invisible and masked by ``valid_len`` during
+        decode); SSM/hybrid state and sliding-window rings would absorb the
+        pad tokens, so bucketing is rejected there.
+    prefill_lookahead:
+        How many prefills may run/wait beyond free slot capacity (default:
+        ``max_slots``). Speculative prefills keep the join queue warm so a
+        retiring sequence is replaced at the very next tick; each waiting
+        join holds one batch-1 cache of bucket length, which bounds the
+        extra memory.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_slots: int = 8,
+        max_len: int = 256,
+        pool: Optional[ThreadPool] = None,
+        prefill_buckets: Optional[Sequence[int]] = None,
+        prefill_lookahead: Optional[int] = None,
+    ) -> None:
+        cfg = model.cfg
+        if cfg.is_encdec or cfg.family == "vlm":
+            raise NotImplementedError(
+                f"ServeEngine supports text-prompt families only, got {cfg.family!r}"
+            )
+        if prefill_buckets is not None and not self._padding_safe(cfg):
+            raise ValueError(
+                "prefill_buckets requires a full-attention family (no SSM state, "
+                f"no sliding window); {cfg.name} would absorb pad tokens"
+            )
+        self.model = model
+        self.params = params
+        self.kv = SlotKVCache(model, max_slots, max_len)
+        self.pool = pool or ThreadPool(2, name="serve")
+        self._own_pool = pool is None
+        self._buckets = tuple(sorted(prefill_buckets)) if prefill_buckets else None
+        self._lookahead = max_slots if prefill_lookahead is None else prefill_lookahead
+        self._prefill_jit = jax.jit(model.prefill)
+
+        def _step(p, tok, cache, idx):
+            logits, cache = model.decode_step(p, tok, cache, idx)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+        self._tick_jit = jax.jit(
+            jax.vmap(_step, in_axes=(None, 0, 0, 0)), donate_argnums=(2,)
+        )
+
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._waiting: deque = deque()  # (handle, GenRequest)
+        self._inflight = 0  # prefill tasks in flight
+        self._joinq: deque = deque()  # (handle, req, cache, first_token, pad_len)
+        self._active: dict[int, _Seq] = {}
+        self._tick_scheduled = False
+        self._closed = False
+        self._broken: Optional[BaseException] = None
+        self._rid = itertools.count()
+        self._requests = 0
+        self._completed = 0
+        self._truncations = 0
+        self._tokens_out = 0
+        self._ticks = 0
+        self._occupancy_sum = 0
+
+    # -- client API -----------------------------------------------------------
+
+    @staticmethod
+    def _padding_safe(cfg) -> bool:
+        return (
+            cfg.window is None
+            and cfg.family in ("dense", "moe")
+            and cfg.attention in ("gqa", "mla")
+        )
+
+    def _bucket(self, prompt_len: int) -> int:
+        if self._buckets is None:
+            return prompt_len
+        for b in self._buckets:
+            if b >= prompt_len:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds largest bucket {self._buckets[-1]}")
+
+    def submit(self, prompt: Union[np.ndarray, Sequence[int]], max_new_tokens: int) -> RequestHandle:
+        """Queue one request; returns immediately with a handle."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        pad = self._bucket(int(prompt.size))
+        if pad >= self.kv.max_len:
+            raise ValueError(
+                f"padded prompt ({pad}) leaves no decode room in max_len={self.kv.max_len}"
+            )
+        rid = next(self._rid)
+        handle = RequestHandle(rid, int(prompt.size), canceller=lambda: self._cancel(rid))
+        req = GenRequest(prompt, int(max_new_tokens))
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            self._requests += 1
+            self._waiting.append((handle, req))
+            self._pump_locked()
+        return handle
+
+    def generate(self, prompts, max_new_tokens, timeout: float = 300.0) -> list:
+        """Submit many prompts and wait: returns per-prompt generated ids."""
+        if isinstance(max_new_tokens, int):
+            max_new_tokens = [max_new_tokens] * len(prompts)
+        handles = [self.submit(p, n) for p, n in zip(prompts, max_new_tokens)]
+        return [h.result(timeout) for h in handles]
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has completed."""
+        with self._idle:
+            if not self._idle.wait_for(
+                lambda: not (self._waiting or self._inflight or self._joinq or self._active),
+                timeout,
+            ):
+                raise TimeoutError("engine did not drain within timeout")
+
+    def close(self, drain: bool = True) -> None:
+        if drain:
+            self.drain()
+        with self._lock:
+            self._closed = True
+        if self._own_pool:
+            self.pool.close()
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.close(drain=not any(exc))
+
+    def stats(self) -> dict:
+        with self._lock:
+            occ = self._occupancy_sum / self._ticks if self._ticks else 0.0
+            return {
+                "requests": self._requests,
+                "completed": self._completed,
+                "truncations": self._truncations,
+                "tokens_out": self._tokens_out,
+                "ticks": self._ticks,
+                "mean_occupancy": occ,
+                "kv": self.kv.stats(),
+                "pool": self.pool.stats(),
+            }
+
+    # -- scheduling internals ---------------------------------------------------
+
+    def _cancel(self, rid: int) -> bool:
+        with self._lock:
+            for i, (handle, _req) in enumerate(self._waiting):
+                if handle.rid == rid:
+                    del self._waiting[i]
+                    self._requests -= 1
+                    self._idle.notify_all()
+                    return True
+        return False
+
+    def _pump_locked(self) -> None:
+        """Admission: start prefills while capacity (+ lookahead) allows."""
+        while self._waiting and (
+            self.kv.num_live + self._inflight + len(self._joinq)
+            < self.kv.max_slots + self._lookahead
+        ):
+            handle, req = self._waiting.popleft()
+            self._inflight += 1
+            t = Task(
+                lambda h=handle, r=req: self._prefill_one(h, r),
+                name=f"prefill:{handle.rid}",
+                priority=PREFILL_PRIORITY,
+            )
+            t.propagate_errors = False
+            self.pool.submit(t)
+
+    def _prefill_one(self, handle: RequestHandle, req: GenRequest) -> None:
+        try:
+            plen = int(req.prompt.size)
+            pad = self._bucket(plen)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :plen] = req.prompt
+            logits, cache = self._prefill_jit(
+                self.params,
+                {"tokens": jnp.asarray(toks)},
+                last_pos=jnp.asarray(plen - 1, jnp.int32),
+            )
+            first = int(jnp.argmax(logits[0, -1]))
+        except BaseException as exc:  # noqa: BLE001 - delivered via the handle
+            with self._lock:
+                self._inflight -= 1
+                self._idle.notify_all()
+            handle.future.set_exception(exc)
+            return
+        with self._lock:
+            self._inflight -= 1
+            if self._broken is not None:  # engine died while we prefilled
+                self._idle.notify_all()
+                exc = self._broken
+            else:
+                self._joinq.append((handle, req, cache, first, pad))
+                self._schedule_tick_locked()
+                return
+        handle.future.set_exception(exc)
+
+    def _schedule_tick_locked(self) -> None:
+        if self._tick_scheduled:
+            return
+        self._tick_scheduled = True
+        t = Task(self._tick, name="decode-tick", priority=DECODE_PRIORITY)
+        t.propagate_errors = False
+        self.pool.submit(t)
+
+    def _tick(self) -> None:
+        try:
+            self._tick_body()
+        except BaseException as exc:  # noqa: BLE001 - fail every request and
+            # brick the engine: the donated kv buffers may be invalid now
+            with self._lock:
+                self._broken = exc
+                self._closed = True  # reject new submissions
+                victims = [s.handle for s in self._active.values()]
+                victims += [h for h, *_ in self._joinq]
+                victims += [h for h, _req in self._waiting]
+                for s in self._active.values():
+                    self.kv.free(s.slot)
+                self._active.clear()
+                self._joinq.clear()
+                self._waiting.clear()
+                self._tick_scheduled = False
+                self._idle.notify_all()
+            for h in victims:
+                h.future.set_exception(exc)
+
+    def _tick_body(self) -> None:
+        # 1. join freshly prefilled sequences into free slots
+        with self._lock:
+            joins = []
+            while self._joinq:
+                slot = self.kv.alloc()
+                if slot is None:  # lookahead prefills wait for a free slot
+                    break
+                handle, req, cache, first, pad = self._joinq.popleft()
+                seq = _Seq(handle, first, handle.prompt_len, req.max_new_tokens, slot)
+                self._active[slot] = seq
+                self._tokens_out += 1  # the prefill-produced first token
+                joins.append((slot, cache, pad))
+        for slot, cache, pad in joins:
+            self.kv.write(slot, cache, pad)  # tick chain serializes buffers
+
+        retired: list = []
+        with self._lock:
+            self._retire_locked(retired)  # max_new_tokens == 1 finishes at join
+            if not self._active:
+                resched = bool(self._joinq)
+                self._tick_scheduled = resched
+                if resched:
+                    self._schedule_after_clear_locked()
+                self._pump_locked()
+                self._idle.notify_all()
+                self._resolve(retired)
+                return
+            tok_np = np.zeros((self.kv.max_slots, 1, 1), np.int32)
+            idx_np = np.zeros((self.kv.max_slots,), np.int32)
+            for slot, seq in self._active.items():
+                tok_np[slot, 0, 0] = seq.tokens[-1]
+                idx_np[slot] = seq.feed_index
+            self._ticks += 1
+            self._occupancy_sum += len(self._active)
+
+        # 2. one decode step over the padded slot batch (outside the lock)
+        next_toks, self.kv.buffers = self._tick_jit(
+            self.params, jnp.asarray(tok_np), self.kv.buffers, jnp.asarray(idx_np)
+        )
+        next_np = np.asarray(next_toks)  # (slots, 1)
+
+        # 3. apply results, retire finished/evicted, admit more work
+        with self._lock:
+            for slot, seq in list(self._active.items()):
+                seq.tokens.append(int(next_np[slot, 0]))
+                seq.feed_index += 1
+                seq.remaining -= 1
+                self._tokens_out += 1
+            self._retire_locked(retired)
+            self._pump_locked()
+            resched = bool(self._active or self._joinq)
+            self._tick_scheduled = resched
+            if resched:
+                self._schedule_after_clear_locked()
+            self._idle.notify_all()
+        self._resolve(retired)
+
+    def _schedule_after_clear_locked(self) -> None:
+        t = Task(self._tick, name="decode-tick", priority=DECODE_PRIORITY)
+        t.propagate_errors = False
+        self.pool.submit(t)
+
+    def _retire_locked(self, retired: list) -> None:
+        for slot, seq in list(self._active.items()):
+            finished = seq.remaining <= 0
+            evicted = not finished and seq.feed_index >= self.kv.max_len
+            if finished or evicted:
+                del self._active[slot]
+                if evicted:
+                    self.kv.evict(slot)
+                    self._truncations += 1
+                else:
+                    self.kv.free(slot)
+                self._completed += 1
+                retired.append((seq, evicted))
+
+    def _resolve(self, retired: list) -> None:
+        for seq, evicted in retired:
+            seq.handle.truncated = evicted
+            seq.handle.future.set_result(np.asarray(seq.tokens, np.int32))

@@ -1,0 +1,248 @@
+"""Slot-based KV-cache pool for continuous batching (DESIGN.md §7).
+
+The per-family cache-layout knowledge that used to live inside
+``models/lm.py`` (``extend_caches``) is concentrated here: how each cache
+kind grows along its sequence axis, and how the kinds that *don't* grow
+(sliding-window rings, SSM recurrent state, static cross-attention K/V)
+pass through. ``models.lm.extend_caches`` now delegates to
+:func:`pad_caches_to`.
+
+Cache kinds, by leaf signature:
+
+* ``{"k", "v"}``            GQA append cache — pad along the seq axis.
+* ``{"k", "v", "pos"}``     sliding-window ring — fixed modulus ``W``; a
+                            smaller prefill ring is re-laid-out into the
+                            target ring by the ``slot = pos % W`` invariant.
+* ``{"ckv", "krope"}``      MLA compressed latents — pad along seq.
+* anything else             SSM state / conv stream / static encoder K/V —
+                            fixed size, pass through.
+
+:class:`SlotKVCache` pools these per-sequence caches: one big buffer tree
+whose leading axis is the *slot* index, each slot holding a batch-1 cache of
+length ``max_len``. Sequences of different lengths then share one padded
+decode batch — the engine vmaps the model's single-token ``decode_step``
+over the slot axis with a per-slot write index.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# per-family cache walks (pure, traceable)
+# ---------------------------------------------------------------------------
+
+
+def _is_gqa(node: Any) -> bool:
+    return isinstance(node, dict) and "k" in node and "v" in node
+
+
+def _is_mla(node: Any) -> bool:
+    return isinstance(node, dict) and "ckv" in node
+
+
+def _pad_seq(arr: jax.Array, axis: int, extra: int) -> jax.Array:
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, extra)
+    return jnp.pad(arr, pad)
+
+
+def _scatter_seq(dst: jax.Array, src: jax.Array, idx: jax.Array, axis: int) -> jax.Array:
+    """``dst`` with ``src`` scattered at positions ``idx`` along ``axis``."""
+    dst_m = jnp.moveaxis(dst, axis, 0)
+    src_m = jnp.moveaxis(src, axis, 0)
+    return jnp.moveaxis(dst_m.at[idx].set(src_m), 0, axis)
+
+
+def _grow_ring(node: dict, target_w: int) -> dict:
+    """Re-lay a ring cache of modulus ``W0`` into modulus ``target_w``.
+
+    The ring invariant is "absolute position p lives at slot p % W". A
+    prefill over a prompt shorter than the window returns a ring of modulus
+    ``W0 = S < W``; re-scatter each entry to ``pos % W`` and mark empty
+    slots with pos = -1 (masked by the decode bias). The stored positions
+    are a contiguous run of length W0 <= W, hence distinct mod W.
+    """
+    pos = node["pos"]
+    w0 = pos.shape[-1]
+    if w0 == target_w:
+        return node
+    if w0 > target_w:
+        raise ValueError(f"ring cache modulus {w0} exceeds slot capacity {target_w}")
+    # positions are identical across any stacked (layers) prefix
+    flat_pos = pos.reshape(-1, w0)[0].astype(jnp.int32)
+    idx = jnp.mod(flat_pos, target_w)
+    out = {}
+    for key in ("k", "v"):
+        arr = node[key]
+        ax = arr.ndim - 3  # (..., B, W, KV, Dh)
+        dst = jnp.zeros(arr.shape[:ax] + (target_w,) + arr.shape[ax + 1 :], arr.dtype)
+        out[key] = _scatter_seq(dst, arr, idx, ax)
+    dst_pos = jnp.full(pos.shape[:-1] + (target_w,), -1, pos.dtype)
+    out["pos"] = _scatter_seq(dst_pos, pos, idx, pos.ndim - 1)
+    return out
+
+
+def pad_caches_to(caches: dict, extra: int, *, ring_w: Optional[int] = None) -> dict:
+    """Grow every growable cache leaf by ``extra`` positions.
+
+    Attention K/V and MLA latents are zero-padded along their sequence axis;
+    ring buffers are re-laid to modulus ``ring_w`` when given (else passed
+    through); SSM state, conv streams and static cross-attention K/V pass
+    through untouched. Handles scan-stacked leaves (leading layers dim).
+    """
+
+    def walk(node):
+        if _is_gqa(node):
+            if "pos" in node:  # ring buffer: fixed modulus
+                return _grow_ring(node, ring_w) if ring_w is not None else node
+            ax = node["k"].ndim - 3  # (..., B, S, KV, Dh): seq axis
+            return {
+                "k": _pad_seq(node["k"], ax, extra),
+                "v": _pad_seq(node["v"], ax, extra),
+            }
+        if _is_mla(node):
+            ax = node["ckv"].ndim - 2  # (..., B, S, L): seq axis
+            return {
+                "ckv": _pad_seq(node["ckv"], ax, extra),
+                "krope": _pad_seq(node["krope"], ax, extra),
+            }
+        if isinstance(node, dict):
+            # cross-attn caches hold static encoder K/V: never grown
+            return {k: (v if k == "cross" else walk(v)) for k, v in node.items()}
+        return node  # SSM state / conv stream: fixed size
+
+    return walk(caches)
+
+
+def _ring_modulus(node: Any, acc: list) -> None:
+    if _is_gqa(node) and "pos" in node:
+        acc.append(node["pos"].shape[-1])
+    elif isinstance(node, dict):
+        for v in node.values():
+            _ring_modulus(v, acc)
+
+
+def ring_modulus(caches: dict) -> Optional[int]:
+    """Modulus of the sliding-window ring leaves, or None if there are none."""
+    acc: list = []
+    _ring_modulus(caches, acc)
+    return acc[0] if acc else None
+
+
+# ---------------------------------------------------------------------------
+# slot pool
+# ---------------------------------------------------------------------------
+
+
+class SlotKVCache:
+    """A pool of ``max_slots`` per-sequence caches sharing one buffer tree.
+
+    Every leaf of ``buffers`` has shape ``(max_slots, *leaf_b1)`` where
+    ``leaf_b1`` is the model's batch-1 cache shape at length ``max_len``
+    (from ``model.cache_shapes(1, max_len)``). Allocation is a free-list;
+    ``write`` pads a freshly prefilled batch-1 cache out to ``max_len`` and
+    overwrites one slot in a single donated jit (no host round-trip).
+
+    Thread safety: alloc/free/evict are lock-protected; ``write`` and the
+    engine's decode tick mutate ``buffers`` and must be serialized by the
+    caller (the engine's tick chain does this).
+    """
+
+    def __init__(self, model, max_slots: int, max_len: int) -> None:
+        if max_slots < 1 or max_len < 1:
+            raise ValueError("max_slots and max_len must be >= 1")
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self._slot_shapes = model.cache_shapes(1, max_len)
+        self.buffers = jax.tree.map(
+            lambda s: jnp.zeros((max_slots, *s.shape), s.dtype), self._slot_shapes
+        )
+        rings: list = []
+        _ring_modulus(self._slot_shapes, rings)
+        self._ring_w = rings[0] if rings else None
+        self._lock = threading.Lock()
+        self._free = list(range(max_slots - 1, -1, -1))  # pop() -> lowest slot
+        self._live: set[int] = set()
+        self.allocs = 0
+        self.evictions = 0
+        self.peak_live = 0
+
+        def _write(buffers, new_cache, slot, prefill_len):
+            padded = pad_caches_to(
+                new_cache, self.max_len - prefill_len, ring_w=self._ring_w
+            )
+            return jax.tree.map(lambda b, n: b.at[slot].set(n), buffers, padded)
+
+        # one jit; retraces per distinct prefill length (bucketed upstream)
+        self._write_jit = jax.jit(_write, donate_argnums=(0,), static_argnums=(3,))
+
+    # -- slot lifecycle -------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a slot, or None when the pool is exhausted."""
+        with self._lock:
+            if not self._free:
+                return None
+            slot = self._free.pop()
+            self._live.add(slot)
+            self.allocs += 1
+            self.peak_live = max(self.peak_live, len(self._live))
+            return slot
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the pool (retired sequence)."""
+        with self._lock:
+            if slot not in self._live:
+                raise ValueError(f"slot {slot} is not live")
+            self._live.remove(slot)
+            self._free.append(slot)
+
+    def evict(self, slot: int) -> None:
+        """Forcibly free a live slot (capacity eviction); counted separately."""
+        self.free(slot)
+        with self._lock:
+            self.evictions += 1
+
+    # -- data movement --------------------------------------------------------
+
+    def write(self, slot: int, cache: dict, prefill_len: int) -> None:
+        """Install a batch-1 prefill cache (length ``prefill_len``) into ``slot``.
+
+        Caller must hold the engine's tick serialization (buffers are
+        donated). The cache is padded/re-laid out to ``max_len`` on device.
+        """
+        if slot not in self._live:
+            raise ValueError(f"slot {slot} is not live")
+        if prefill_len > self.max_len:
+            raise ValueError(f"prefill length {prefill_len} exceeds max_len {self.max_len}")
+        self.buffers = self._write_jit(
+            self.buffers, cache, jnp.asarray(slot, jnp.int32), prefill_len
+        )
+
+    def read_slot(self, slot: int) -> dict:
+        """The batch-1 cache tree currently stored in ``slot`` (for tests)."""
+        return jax.tree.map(lambda b: b[slot], self.buffers)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "max_slots": self.max_slots,
+                "live": len(self._live),
+                "free": len(self._free),
+                "allocs": self.allocs,
+                "evictions": self.evictions,
+                "peak_live": self.peak_live,
+            }

@@ -2,8 +2,11 @@
 import threading
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fallback shim; requirements-dev.txt pins the real one
+    from repro.testing import given, settings, st
 
 from repro.core import EMPTY, ChaseLevDeque, FastDeque
 

@@ -225,3 +225,165 @@ def test_stats_and_close_idempotent():
     assert s["executed"] >= 1
     pool.close()
     pool.close()  # idempotent
+
+
+def test_stats_exact_after_quiesce():
+    """Per-worker counters: the summed count is exact once idle."""
+    with ThreadPool(4) as pool:
+        for _ in range(500):
+            pool.submit(lambda: None)
+        pool.wait_idle(timeout=60)
+        assert pool.stats()["executed"] == 500
+
+
+# ---------------------------------------------------------------------------
+# priorities (DESIGN.md §3: same ready-key as the schedule simulator)
+# ---------------------------------------------------------------------------
+
+
+def _gated_pool(n=1):
+    """Pool whose single worker is parked on a gate, so submissions queue."""
+    pool = ThreadPool(n)
+    gate = threading.Event()
+    pool.submit(lambda: gate.wait(10))
+    time.sleep(0.05)  # let the worker claim the gate task
+    return pool, gate
+
+
+def test_priority_orders_inbox():
+    """Higher-priority external submissions run first; FIFO within a band."""
+    pool, gate = _gated_pool()
+    order = []
+    pool.submit(lambda: order.append("low-a"), priority=-1.0)
+    pool.submit(lambda: order.append("mid"), priority=0.0)
+    pool.submit(lambda: order.append("low-b"), priority=-1.0)
+    pool.submit(lambda: order.append("high"), priority=5.0)
+    gate.set()
+    pool.wait_idle(10)
+    pool.close()
+    assert order == ["high", "mid", "low-a", "low-b"]
+
+
+def test_priority_inline_continuation_prefers_high():
+    """Among newly-ready successors, the highest-priority one continues on
+    the finishing worker (the B-before-F rule)."""
+    with ThreadPool(1) as pool:
+        order = []
+        g = TaskGraph()
+        root = g.add(lambda: order.append("root"))
+        lo = g.add(lambda: order.append("lo"), priority=-1.0).succeed(root)
+        hi = g.add(lambda: order.append("hi"), priority=1.0).succeed(root)
+        pool.run(g)
+        assert order == ["root", "hi", "lo"]
+
+
+def test_priority_deque_unit():
+    from repro.core import EMPTY, PriorityDeque
+
+    class Item:
+        def __init__(self, tag, priority):
+            self.tag, self.priority = tag, priority
+
+    dq = PriorityDeque()
+    for tag, pr in [("a0", 0.0), ("b0", 0.0), ("hi", 2.0), ("lo", -2.0)]:
+        dq.push(Item(tag, pr))
+    assert len(dq) == 4
+    assert dq.pop().tag == "hi"  # highest band first
+    assert dq.pop().tag == "b0"  # LIFO within the band (owner side)
+    assert dq.steal().tag == "a0"  # FIFO within the band (thief side)
+    assert dq.steal().tag == "lo"
+    assert dq.pop() is EMPTY and dq.steal() is EMPTY
+
+
+# ---------------------------------------------------------------------------
+# cooperative cancellation + graph futures
+# ---------------------------------------------------------------------------
+
+
+def test_future_cancel_before_start():
+    pool, gate = _gated_pool()
+    fut = pool.submit_future(lambda: 42)
+    assert fut.cancel() is True
+    assert fut.cancelled()
+    gate.set()
+    pool.wait_idle(10)
+    with pytest.raises(CancelledError):
+        fut.result(5)
+    pool.close()
+
+
+def test_future_cancel_after_completion_fails():
+    with ThreadPool(2) as pool:
+        fut = pool.submit_future(lambda: 7)
+        assert fut.result(10) == 7
+        assert fut.cancel() is False
+
+
+def test_future_cancel_while_running_fails():
+    with ThreadPool(2) as pool:
+        started = threading.Event()
+        release = threading.Event()
+
+        def body():
+            started.set()
+            release.wait(10)
+            return "done"
+
+        fut = pool.submit_future(body)
+        assert started.wait(10)
+        assert fut.cancel() is False  # running bodies are never interrupted
+        release.set()
+        assert fut.result(10) == "done"
+
+
+def test_cancelled_task_releases_successors():
+    """A cancelled task completes (CancelledError) and its successors run."""
+    pool, gate = _gated_pool()
+    ran = []
+    g = TaskGraph()
+    a = g.add(lambda: ran.append("a"))
+    b = g.add(lambda: ran.append("b")).succeed(a)
+    pool.submit(g)
+    assert a.cancel() is True
+    gate.set()
+    pool.wait_idle(10)
+    pool.close()
+    assert ran == ["b"]  # dependency drained despite the skipped body
+    assert isinstance(a.exception, CancelledError)
+
+
+def test_graph_as_future_result_and_resubmission():
+    with ThreadPool(2) as pool:
+        order = []
+        g = TaskGraph("g")
+        first = g.add(lambda: order.append("first"))
+        g.add(lambda: order.append("second")).succeed(first)
+        assert g.as_future(pool).result(10) is None
+        assert g.as_future(pool).result(10) is None  # graph is reusable
+        assert order == ["first", "second"] * 2
+
+
+def test_graph_as_future_delivers_exception():
+    with ThreadPool(2) as pool:
+        g = TaskGraph()
+        g.add(lambda: (_ for _ in ()).throw(ValueError("boom")))
+        fut = g.as_future(pool)
+        with pytest.raises(ValueError, match="boom"):
+            fut.result(10)
+        with pytest.raises(ValueError):
+            pool.wait_idle(10)  # pool error state drains as before
+
+
+def test_graph_as_future_cancel():
+    pool, gate = _gated_pool()
+    ran = []
+    g = TaskGraph()
+    g.add(lambda: ran.append(1))
+    fut = g.as_future(pool)
+    assert fut.cancel() is True
+    gate.set()
+    pool.wait_idle(10)
+    pool.close()
+    assert ran == []  # body never ran
+    with pytest.raises(CancelledError):
+        fut.result(5)

@@ -7,8 +7,11 @@ pipeline parallelism the policy reproduces canonical 1F1B (makespan and the
 S-s activation-memory bound).
 """
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fallback shim; requirements-dev.txt pins the real one
+    from repro.testing import given, settings, st
 
 from repro.core import (
     SimTask,

@@ -3,8 +3,11 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fallback shim; requirements-dev.txt pins the real one
+    from repro.testing import given, settings, st
 
 from repro.core import ThreadPool
 from repro.data import MemmapTokens, Prefetcher, SyntheticTokens
@@ -95,3 +98,55 @@ def test_synthetic_tokens_in_range(step, batch):
     src = SyntheticTokens(97, 8, batch, seed=5)
     t = src.batch(step)["tokens"]
     assert t.min() >= 0 and t.max() < 97
+
+
+def test_prefetcher_close_cancels_and_drains():
+    """Regression: close() must not abandon in-flight futures — unstarted
+    produce tasks are cancelled (never touching the source), running ones
+    are drained, and a shared pool comes back clean and reusable."""
+    import threading
+
+    calls = []
+    release = threading.Event()
+
+    class SlowSource:
+        def batch(self, step):
+            calls.append(step)
+            release.wait(5)
+            return {"x": np.full((2,), step)}
+
+    with ThreadPool(1) as pool:
+        pf = Prefetcher(SlowSource(), pool=pool, depth=4)
+        # one produce task is running (holding the worker); 3 are queued
+        for _ in range(100):
+            if calls:
+                break
+            time.sleep(0.005)
+        assert calls == [0]
+        # close() while step 0 is mid-body: the cancel pass stops steps 1-3
+        # before the worker frees up; the drain pass waits for step 0
+        threading.Timer(0.1, release.set).start()
+        pf.close()
+        # queued steps were cancelled before their bodies ran
+        assert calls == [0]
+        assert not pf._inflight
+        pool.wait_idle(timeout=10)  # nothing leaked into the shared pool
+        ok = []
+        pool.run(lambda: ok.append(1))  # pool still usable
+        assert ok == [1]
+
+
+def test_prefetcher_close_waits_for_running_task():
+    """A produce task that already started is drained, not abandoned."""
+    done = []
+
+    class Source:
+        def batch(self, step):
+            time.sleep(0.05)
+            done.append(step)
+            return {"x": np.full((2,), step)}
+
+    pf = Prefetcher(Source(), depth=2)
+    time.sleep(0.01)  # let at least one produce start
+    pf.close()
+    assert done, "running produce was abandoned instead of drained"

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fallback shim; requirements-dev.txt pins the real one
+    from repro.testing import given, settings, st
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm
 

@@ -1,0 +1,129 @@
+"""End-to-end engine tests: continuous-batched greedy decode must equal
+sequential single-request decode token-for-token; eviction, cancellation and
+input validation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import CancelledError, ThreadPool
+from repro.models import build_model
+from repro.models.lm import extend_caches
+from repro.serve import ServeEngine
+
+
+def _build(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def sequential_decode(model, params, prompt, budget, width):
+    """The pre-existing single-request path, provisioned at ``width`` KV
+    capacity (the engine's max_len) so both programs mask identically."""
+    logits, caches = jax.jit(model.prefill)(params, {"tokens": jnp.asarray(prompt[None, :])})
+    caches = extend_caches(caches, width - int(prompt.size))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    decode = jax.jit(model.decode_step)
+    for i in range(budget - 1):
+        logits, caches = decode(params, tok, caches, jnp.asarray(prompt.size + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def test_continuous_batching_matches_single_request_decode():
+    cfg, model, params = _build("tinyllama-1.1b")
+    MAX_LEN = 28
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+        for n in rng.integers(3, 13, size=6)
+    ]
+    budgets = [int(b) for b in rng.integers(2, 9, size=6)]
+    refs = [
+        sequential_decode(model, params, p, b, MAX_LEN) for p, b in zip(prompts, budgets)
+    ]
+    with ServeEngine(
+        model, params, max_slots=3, max_len=MAX_LEN, prefill_buckets=(8, 16)
+    ) as engine:
+        outs = engine.generate(prompts, budgets, timeout=300)
+        stats = engine.stats()
+    for ref, out in zip(refs, outs):
+        assert list(map(int, out)) == ref  # token-for-token
+    assert stats["completed"] == 6
+    assert stats["kv"]["peak_live"] <= 3  # never exceeded the slot pool
+
+
+def test_ssm_family_matches_single_request_decode():
+    """Recurrent-state caches (no bucketing) through the same engine."""
+    cfg, model, params = _build("mamba2-1.3b")
+    MAX_LEN = 16
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32) for _ in range(2)]
+    refs = [sequential_decode(model, params, p, 4, MAX_LEN) for p in prompts]
+    with ServeEngine(model, params, max_slots=2, max_len=MAX_LEN) as engine:
+        outs = engine.generate(prompts, 4, timeout=300)
+    for ref, out in zip(refs, outs):
+        assert list(map(int, out)) == ref
+
+
+def test_capacity_eviction_truncates():
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ServeEngine(model, params, max_slots=1, max_len=10) as engine:
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        h = engine.submit(prompt, max_new_tokens=50)  # cannot fit in 10
+        out = h.result(300)
+    assert h.truncated
+    # feeds at positions 4..9 -> prefill token + 6 decode outputs
+    assert len(out) == 7
+    assert engine.stats()["truncations"] == 1
+    assert engine.stats()["kv"]["evictions"] == 1
+
+
+def test_cancel_waiting_request():
+    cfg, model, params = _build("tinyllama-1.1b")
+    engine = ServeEngine(model, params, max_slots=1, max_len=16, prefill_lookahead=0)
+    try:
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        handles = [engine.submit(prompt, 6) for _ in range(4)]
+        # the tail of the queue has not been admitted yet; cancel it
+        cancelled = [h for h in reversed(handles) if h.cancel()]
+        assert cancelled, "expected at least one still-waiting request"
+        with pytest.raises(CancelledError):
+            cancelled[0].result(5)
+        # everyone else still completes
+        done = [h for h in handles if h not in cancelled]
+        for h in done:
+            assert len(h.result(300)) == 6
+        assert engine.stats()["completed"] == len(done)
+    finally:
+        engine.close(drain=False)
+
+
+def test_rejects_unsupported_configs():
+    cfg, model, params = _build("mamba2-1.3b")
+    with pytest.raises(ValueError):  # SSM state would absorb pad tokens
+        ServeEngine(model, params, prefill_buckets=(16,))
+    cfg_e, model_e, _ = _build("whisper-medium")
+    with pytest.raises(NotImplementedError):
+        ServeEngine(model_e, None)
+
+
+def test_validates_requests_and_shares_pool():
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ThreadPool(2) as pool:
+        engine = ServeEngine(model, params, max_slots=1, max_len=8, pool=pool)
+        with pytest.raises(ValueError):
+            engine.submit(np.zeros(0, np.int32), 2)  # empty prompt
+        with pytest.raises(ValueError):
+            engine.submit(np.zeros(4, np.int32), 0)  # no budget
+        with pytest.raises(ValueError):
+            engine.submit(np.zeros(8, np.int32), 2)  # prompt fills max_len
+        out = engine.generate([np.arange(3, dtype=np.int32)], 2, timeout=300)
+        assert len(out[0]) == 2
+        engine.close()  # must not close the shared pool
+        pool.run(lambda: None)  # still alive

@@ -1,0 +1,131 @@
+"""Slot cache tests: alloc/free/evict lifecycle, per-family pad walks,
+ring re-layout, and write/read roundtrips through a real model prefill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve.kv import SlotKVCache, pad_caches_to, ring_modulus
+
+
+def _tiny_model(arch="tinyllama-1.1b"):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_free_exhaustion():
+    _cfg, model, _params = _tiny_model()
+    kv = SlotKVCache(model, max_slots=3, max_len=8)
+    slots = [kv.alloc() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2]
+    assert kv.alloc() is None  # exhausted
+    assert kv.num_free == 0 and kv.num_live == 3
+    kv.free(1)
+    assert kv.alloc() == 1  # freed slot is reused
+    with pytest.raises(ValueError):
+        kv.free(7)  # never allocated
+
+
+def test_eviction_is_counted_and_reusable():
+    _cfg, model, _params = _tiny_model()
+    kv = SlotKVCache(model, max_slots=2, max_len=8)
+    a = kv.alloc()
+    kv.evict(a)
+    assert kv.stats()["evictions"] == 1
+    assert kv.alloc() == a  # evicted slot back in the pool
+    assert kv.stats()["allocs"] == 2
+    assert kv.stats()["peak_live"] == 1
+
+
+# ---------------------------------------------------------------------------
+# pad walks (per-family cache layout knowledge)
+# ---------------------------------------------------------------------------
+
+
+def test_pad_gqa_and_passthrough():
+    node = {
+        "attn": {"k": jnp.ones((2, 1, 4, 2, 3)), "v": jnp.ones((2, 1, 4, 2, 3))},
+        "ssm": {"state": jnp.ones((1, 2, 3, 4)), "conv": jnp.ones((1, 8, 4))},
+        "cross": {"k": jnp.ones((1, 5, 2, 3)), "v": jnp.ones((1, 5, 2, 3))},
+    }
+    out = pad_caches_to(node, 3)
+    assert out["attn"]["k"].shape == (2, 1, 7, 2, 3)  # scan-stacked seq pad
+    assert out["ssm"]["state"].shape == (1, 2, 3, 4)  # fixed-size passthrough
+    assert out["cross"]["k"].shape == (1, 5, 2, 3)  # static encoder K/V
+
+
+def test_pad_mla():
+    node = {"attn": {"ckv": jnp.ones((1, 4, 6)), "krope": jnp.ones((1, 4, 2))}}
+    out = pad_caches_to(node, 2)
+    assert out["attn"]["ckv"].shape == (1, 6, 6)
+    assert out["attn"]["krope"].shape == (1, 6, 2)
+    # pad region is zero; original values preserved
+    np.testing.assert_array_equal(np.asarray(out["attn"]["ckv"])[:, 4:], 0.0)
+    np.testing.assert_array_equal(np.asarray(out["attn"]["ckv"])[:, :4], 1.0)
+
+
+def test_ring_growth_relayout():
+    # ring of modulus 3 holding positions [0, 1, 2] grows to modulus 5:
+    # entry at position p must land at slot p % 5, empty slots pos == -1
+    k = jnp.arange(3, dtype=jnp.float32).reshape(1, 3, 1, 1)
+    node = {"attn": {"k": k, "v": k + 10, "pos": jnp.asarray([0, 1, 2], jnp.int32)}}
+    out = pad_caches_to(node, 0, ring_w=5)["attn"]
+    assert ring_modulus({"attn": out}) == 5
+    np.testing.assert_array_equal(np.asarray(out["pos"]), [0, 1, 2, -1, -1])
+    np.testing.assert_array_equal(np.asarray(out["k"]).ravel(), [0, 1, 2, 0, 0])
+    np.testing.assert_array_equal(np.asarray(out["v"]).ravel(), [10, 11, 12, 0, 0])
+    with pytest.raises(ValueError):
+        pad_caches_to(node, 0, ring_w=2)  # shrink is invalid
+
+
+# ---------------------------------------------------------------------------
+# write/read roundtrip through a real prefill
+# ---------------------------------------------------------------------------
+
+
+def test_write_roundtrip_matches_prefill():
+    cfg, model, params = _tiny_model()
+    S, MAX = 6, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    _logits, cache = jax.jit(model.prefill)(params, {"tokens": tokens})
+
+    kv = SlotKVCache(model, max_slots=2, max_len=MAX)
+    slot = kv.alloc()
+    kv.write(slot, cache, S)
+    got = kv.read_slot(slot)
+
+    def check(path_cache, path_got):
+        if isinstance(path_cache, dict):
+            for k in path_cache:
+                check(path_cache[k], path_got[k])
+            return
+        a, b = np.asarray(path_cache), np.asarray(path_got)
+        # seq axis was padded out to MAX; prefix must match exactly
+        sl = [slice(None)] * b.ndim
+        for ax in range(b.ndim):
+            if a.shape[ax] != b.shape[ax]:
+                sl[ax] = slice(0, a.shape[ax])
+        np.testing.assert_array_equal(a, b[tuple(sl)])
+
+    check(cache, got)
+
+
+def test_write_rejects_dead_slot_and_overflow():
+    cfg, model, params = _tiny_model()
+    tokens = jnp.zeros((1, 4), jnp.int32)
+    _logits, cache = jax.jit(model.prefill)(params, {"tokens": tokens})
+    kv = SlotKVCache(model, max_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        kv.write(0, cache, 4)  # not allocated
+    slot = kv.alloc()
+    with pytest.raises(ValueError):
+        kv.write(slot, cache, 9)  # exceeds max_len
