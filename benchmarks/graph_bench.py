@@ -1,0 +1,210 @@
+"""Task-graph microbenchmarks (paper §3 shapes) with a JSON perf record.
+
+Reproduces the paper's microbenchmark setup on three canonical graph
+shapes — **linear chain**, **random DAG**, **wavefront** — plus a
+value-passing chain that measures the dataflow runtime's argument-delivery
+overhead (DESIGN.md §8). Each shape runs on:
+
+  ws-fast   the paper's work-stealing pool (FastDeque)
+  stdlib    concurrent.futures.ThreadPoolExecutor driving the same graphs
+  serial    topological execution on one thread (zero-overhead floor)
+
+The discriminating figure is **dependency-counting overhead per task**:
+(wall − serial wall of the same shape) / tasks, in µs — what the scheduler
+costs on top of the bodies. Results land in ``BENCH_graph.json`` so the
+perf trajectory is diffable across PRs.
+
+    PYTHONPATH=src python benchmarks/graph_bench.py [--quick] \
+        [--out BENCH_graph.json] [--trace trace.json]
+
+``--trace`` additionally records one wavefront run through the
+Chrome-trace observer (open the file in chrome://tracing).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import random
+import sys
+import time
+from typing import Callable
+
+from repro.core import ChromeTraceObserver, SerialExecutor, TaskGraph, ThreadPool
+
+try:
+    from benchmarks.paper_bench import StdlibExecutor
+except ImportError:  # run as a plain script: benchmarks/ is on sys.path
+    from paper_bench import StdlibExecutor
+
+NUM_THREADS = 4
+
+
+# -- graph builders -------------------------------------------------------------
+
+
+def build_chain(g: TaskGraph, n: int) -> None:
+    g.chain([lambda: None] * n)
+
+
+def build_chain_dataflow(g: TaskGraph, n: int) -> None:
+    """Value-passing chain: each task increments its predecessor's result —
+    measures argument delivery on top of plain dependency counting."""
+    t = g.add(lambda: 0, name="head")
+    for _ in range(n - 1):
+        t = t.then(lambda x: x + 1)
+
+
+def build_random_dag(g: TaskGraph, n: int, *, seed: int = 0, max_preds: int = 3) -> None:
+    """Seeded random DAG: task i depends on up to ``max_preds`` earlier
+    tasks (always at least one once the graph is non-empty), giving an
+    irregular mix of chains, joins and fan-outs."""
+    rng = random.Random(seed)
+    tasks = []
+    for i in range(n):
+        t = g.add(lambda: None, name=f"r{i}")
+        if tasks:
+            k = rng.randint(1, min(max_preds, len(tasks)))
+            preds = rng.sample(tasks, k)
+            t.after(*preds)
+        tasks.append(t)
+
+
+def build_wavefront(g: TaskGraph, n: int) -> None:
+    """n×n wavefront: cell (i,j) depends on (i-1,j) and (i,j-1)."""
+    tasks: dict = {}
+    for i in range(n):
+        for j in range(n):
+            t = g.add(lambda: None, name=f"c{i}_{j}")
+            deps = []
+            if i > 0:
+                deps.append(tasks[(i - 1, j)])
+            if j > 0:
+                deps.append(tasks[(i, j - 1)])
+            if deps:
+                t.after(*deps)
+            tasks[(i, j)] = t
+
+
+def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], None]]:
+    chain_n = 1024 if quick else 8192
+    dag_n = 1024 if quick else 8192
+    wf_n = 24 if quick else 64
+    return {
+        f"chain({chain_n})": lambda g: build_chain(g, chain_n),
+        f"chain-dataflow({chain_n})": lambda g: build_chain_dataflow(g, chain_n),
+        f"random-dag({dag_n})": lambda g: build_random_dag(g, dag_n),
+        f"wavefront({wf_n}x{wf_n})": lambda g: build_wavefront(g, wf_n),
+    }
+
+
+EXECUTORS: dict[str, Callable[[], object]] = {
+    "ws-fast": lambda: ThreadPool(NUM_THREADS),
+    "stdlib": lambda: StdlibExecutor(NUM_THREADS),
+    "serial": lambda: SerialExecutor(),
+}
+
+
+# -- measurement ----------------------------------------------------------------
+
+
+def _time_graph(make_executor, build, repeats: int) -> tuple[float, float, int]:
+    """Best-of-N wall/CPU seconds; the graph is built once and *re-run*
+    each repeat (the re-runnable lifecycle the runtime guarantees)."""
+    g = TaskGraph()
+    build(g)
+    ntasks = len(g)
+    best_wall, best_cpu = float("inf"), float("inf")
+    with make_executor() as ex:
+        for _ in range(repeats):
+            g.reset()
+            w0, c0 = time.perf_counter(), time.process_time()
+            ex.run(g)
+            w1, c1 = time.perf_counter(), time.process_time()
+            best_wall = min(best_wall, w1 - w0)
+            best_cpu = min(best_cpu, c1 - c0)
+    return best_wall, best_cpu, ntasks
+
+
+def run_bench(quick: bool) -> list[dict]:
+    repeats = 2 if quick else 3
+    rows: list[dict] = []
+    serial_wall: dict[str, float] = {}
+    for shape, build in shapes(quick).items():
+        for name, make in EXECUTORS.items():
+            wall, cpu, ntasks = _time_graph(make, build, repeats)
+            if name == "serial":
+                serial_wall[shape] = wall
+            rows.append(
+                dict(
+                    bench=shape,
+                    executor=name,
+                    tasks=ntasks,
+                    wall_ms=wall * 1e3,
+                    cpu_ms=cpu * 1e3,
+                    us_per_task=wall * 1e6 / ntasks,
+                )
+            )
+    # dependency-counting overhead: scheduler cost over the serial floor
+    for r in rows:
+        floor = serial_wall.get(r["bench"])
+        if floor is not None:
+            r["overhead_us_per_task"] = (r["wall_ms"] / 1e3 - floor) * 1e6 / r["tasks"]
+    return rows
+
+
+def record_trace(path: pathlib.Path, quick: bool) -> None:
+    """One traced wavefront run on the work-stealing pool."""
+    tracer = ChromeTraceObserver()
+    n = 16 if quick else 32
+    g = TaskGraph("wavefront-trace")
+    build_wavefront(g, n)
+    with ThreadPool(NUM_THREADS, observers=[tracer]) as pool:
+        pool.run(g)
+    tracer.save(path, num_workers=NUM_THREADS)
+    print(f"wrote {path} ({n}x{n} wavefront; open in chrome://tracing)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small sizes / fewer repeats (CI)")
+    ap.add_argument("--out", default=str(pathlib.Path(__file__).parent.parent / "BENCH_graph.json"))
+    ap.add_argument("--trace", default=None, help="also write a Chrome trace of a wavefront run")
+    args = ap.parse_args()
+
+    rows = run_bench(args.quick)
+
+    print(f"{'bench':<24}{'executor':<10}{'tasks':>7}{'wall_ms':>10}{'us/task':>9}{'ovh us/task':>13}")
+    for r in rows:
+        print(
+            f"{r['bench']:<24}{r['executor']:<10}{r['tasks']:>7}"
+            f"{r['wall_ms']:>10.2f}{r['us_per_task']:>9.2f}"
+            f"{r.get('overhead_us_per_task', 0.0):>13.2f}"
+        )
+
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(
+        json.dumps(
+            {
+                "meta": {
+                    "bench": "graph_bench",
+                    "quick": args.quick,
+                    "num_threads": NUM_THREADS,
+                    "cpu_count": os.cpu_count(),
+                    "timestamp": time.time(),
+                },
+                "rows": rows,
+            },
+            indent=1,
+        )
+    )
+    print(f"wrote {out}")
+
+    if args.trace:
+        record_trace(pathlib.Path(args.trace), args.quick)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

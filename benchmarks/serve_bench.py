@@ -181,7 +181,7 @@ def main() -> None:
     prompts = clip_vocab(prompts, cfg.vocab_size)
     total_tokens = sum(budgets)
     max_len = args.prompt_len + args.max_new + 1
-    buckets = (args.prompt_len,) if ServeEngine._padding_safe(cfg) else None
+    buckets = (args.prompt_len,) if ServeEngine.supports_prefill_buckets(cfg) else None
 
     # -- static baseline (warmup compiles, then timed replay) ---------------
     static = StaticBatchServer(model, params, args.slots, args.prompt_len, args.max_new)
@@ -226,7 +226,15 @@ def main() -> None:
             "wall_s": round(cont_wall, 4),
             "tokens_per_s": round(total_tokens / cont_wall, 2),
             "ticks": stats["ticks"] - pre_stats["ticks"],
-            "mean_occupancy": round(stats["mean_occupancy"], 3),
+            # occupancy over the timed replay only (warmup ticks excluded)
+            "mean_occupancy": round(
+                (
+                    stats["mean_occupancy"] * stats["ticks"]
+                    - pre_stats["mean_occupancy"] * pre_stats["ticks"]
+                )
+                / max(stats["ticks"] - pre_stats["ticks"], 1),
+                3,
+            ),
             "pool_steals": stats["pool"]["steals"],
         },
         "speedup": round(static_wall / cont_wall, 3),

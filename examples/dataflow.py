@@ -1,0 +1,55 @@
+"""Dataflow runtime tour (DESIGN.md §8): value-passing graphs, composition,
+re-running, and Chrome-trace observation.
+
+    PYTHONPATH=src python examples/dataflow.py [trace.json]
+
+Pass a path to also write a chrome://tracing-loadable trace of the run.
+"""
+import sys
+
+from repro.core import ChromeTraceObserver, StatsObserver, TaskGraph, ThreadPool
+
+
+def diamond_demo(pool: ThreadPool) -> None:
+    # results flow along edges as ordered arguments — no captured dicts
+    g = TaskGraph("diamond")
+    a = g.add(lambda: 2, name="a")
+    b = g.then(a, lambda x: x + 1, name="b")  # b(a())
+    c = g.then(a, lambda x: x * 10, name="c")  # c(a())
+    d = g.gather([b, c], lambda bx, cx: bx + cx, name="d")  # d(b(), c())
+    for round_idx in range(3):  # build once, run N times
+        g.as_future(pool).result(10)
+        print(f"run {round_idx}: (2+1) + (2*10) = {d.result}")
+    assert g.run_count == 3
+
+
+def compose_demo(pool: ThreadPool) -> None:
+    # a subgraph embeds as a module behind source/sink boundary tasks;
+    # the sink gathers the subgraph's results as a list
+    shards = TaskGraph("shards")
+    for i in range(4):
+        shards.add(lambda i=i: i * i, name=f"shard{i}")
+    outer = TaskGraph("outer")
+    prep = outer.add(lambda: print("prepare"), name="prepare")
+    m = outer.compose(shards)
+    m.source.after(prep)
+    total = outer.then(m.sink, sum, name="total")
+    outer.as_future(pool).result(10)
+    print(f"sum of squares via composed module: {total.result}")
+
+
+def main() -> None:
+    stats = StatsObserver()
+    tracer = ChromeTraceObserver()
+    with ThreadPool(4, observers=[stats, tracer]) as pool:
+        diamond_demo(pool)
+        compose_demo(pool)
+        num_workers = pool.num_threads
+    print("pool stats:", stats.summary())
+    if len(sys.argv) > 1:
+        tracer.save(sys.argv[1], num_workers=num_workers)
+        print(f"wrote {sys.argv[1]} — open in chrome://tracing")
+
+
+if __name__ == "__main__":
+    main()

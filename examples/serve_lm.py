@@ -51,7 +51,7 @@ def main() -> None:
 
     max_len = args.prompt_len + args.new + 1
     buckets = None
-    if ServeEngine._padding_safe(cfg):
+    if ServeEngine.supports_prefill_buckets(cfg):
         buckets = (args.prompt_len // 2, args.prompt_len)
 
     t0 = time.perf_counter()

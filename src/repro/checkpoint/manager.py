@@ -6,11 +6,14 @@ Format: one directory per step —
         <leaf-path>.bin         raw little-endian bytes per leaf
     step_000042/                (atomic rename on commit)
 
-Async saves run as a task graph on the work-stealing pool:
+Async saves run as a *dataflow* task graph on the work-stealing pool
+(DESIGN.md §8): the per-leaf shard writers live in their own subgraph,
+composed behind source/sink boundary tasks, and each writer *returns* its
+manifest entry — the composed sink gathers the entries and passes them to
+the commit task as a value, so no shared manifest dict is mutated from
+worker threads:
 
-    snapshot (device->host, per leaf) --\
-    snapshot ...                     ----+--> manifest+commit --> gc
-    snapshot ...                     ---/
+    prepare -> [shards::src -> w:leaf... -> shards::sink] -> commit(+gc)
 
 so serialization and IO overlap training. Restore is elastic: leaves are
 loaded as numpy and ``jax.device_put`` re-shards them onto WHATEVER mesh the
@@ -128,32 +131,33 @@ class CheckpointManager:
         # writer's leftovers) can never corrupt each other; commit is a rename
         tmp = self.root / f"step_{step:08d}.tmp{id(tree) & 0xffff:x}{int(time.time() * 1e3) & 0xffff:x}"
 
-        g = TaskGraph(f"ckpt-{step}")
-
         def prepare():
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
 
-        prep = g.add(prepare, name="prepare")
-        manifest: dict[str, Any] = {"leaves": {}, "meta": {**(meta or {}), "step": step}}
-
-        def write_leaf(key: str, arr: np.ndarray):
+        def write_leaf(key: str, arr: np.ndarray) -> tuple[str, dict]:
             fname = key.replace("/", "_") + ".bin"
             (tmp / fname).write_bytes(arr.tobytes())
-            manifest["leaves"][key] = {
+            return key, {
                 "file": fname,
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
             }
 
-        writers = []
+        # Shard writers as their own subgraph; each returns its manifest
+        # entry, delivered to commit through the composed sink's gather.
+        shards = TaskGraph(f"ckpt-{step}-shards")
         for key, arr in flat.items():
-            t = g.add(lambda k=key, a=arr: write_leaf(k, a), name=f"w:{key[:24]}")
-            t.succeed(prep)
-            writers.append(t)
+            shards.add(lambda k=key, a=arr: write_leaf(k, a), name=f"w:{key[:24]}")
 
-        def commit():
+        g = TaskGraph(f"ckpt-{step}")
+        prep = g.add(prepare, name="prepare")
+        module = g.compose(shards, name="shards")
+        module.source.after(prep)
+
+        def commit(entries: list) -> None:
+            manifest = {"leaves": dict(entries), "meta": {**(meta or {}), "step": step}}
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             if directory.exists():
                 shutil.rmtree(directory)
@@ -163,8 +167,8 @@ class CheckpointManager:
                 shutil.rmtree(tmp, ignore_errors=True)  # lost a same-step race
             self._gc()
 
-        g.add(commit, name="commit").succeed(*writers)
-        self.pool.submit(g.tasks)
+        g.then(module.sink, commit, name="commit")
+        self.pool.submit(g)
         self._pending.append(g)
 
     def wait(self, timeout: float = 600.0) -> None:

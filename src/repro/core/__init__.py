@@ -3,7 +3,8 @@ of running task graphs (Puyda 2024), plus the trace-time schedule simulator
 that adapts its execution policy to statically-scheduled TPU programs."""
 from .baseline import NaiveThreadPool, SerialExecutor
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
-from .graph import CycleError, TaskGraph
+from .graph import CycleError, Module, TaskGraph
+from .observer import ChromeTraceObserver, PoolObserver, StatsObserver
 from .pool import Future, ThreadPool
 from .schedule import (
     PipelineOp,
@@ -26,9 +27,13 @@ __all__ = [
     "FastDeque",
     "PriorityDeque",
     "CycleError",
+    "Module",
     "TaskGraph",
     "Future",
     "ThreadPool",
+    "PoolObserver",
+    "StatsObserver",
+    "ChromeTraceObserver",
     "CancelledError",
     "Task",
     "iter_graph",

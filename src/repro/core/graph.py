@@ -5,6 +5,20 @@ The paper's API works on any iterable of ``Task`` objects;
 creation, cycle validation (Kahn), root discovery, DOT export, and
 helpers to build common shapes (map/reduce, wavefronts) used by the data
 pipeline, checkpointing and benchmarks.
+
+Beyond the container (DESIGN.md §8), a ``TaskGraph`` is the unit of the
+*dataflow runtime*:
+
+* **value-passing pipelines** via :meth:`then` / :meth:`gather` — results
+  flow along edges as ordered arguments instead of through captured
+  closures (``task.py`` docs);
+* **composition** via :meth:`compose` — a whole subgraph embeds as a
+  module behind source/sink boundary tasks, with the sink gathering the
+  subgraph's sink results as a list;
+* **re-runnable lifecycle** — results are per-run state; :meth:`reset`
+  re-arms every task (counters, results, cancellation), ``run_count``
+  tracks submissions, and each :meth:`as_future` call returns a fresh
+  future for that run. Build once, run N times.
 """
 from __future__ import annotations
 
@@ -13,11 +27,35 @@ from typing import Any, Callable, Iterator, Optional, Sequence
 
 from .task import CancelledError, Task
 
-__all__ = ["TaskGraph", "CycleError"]
+__all__ = ["TaskGraph", "Module", "CycleError"]
 
 
 class CycleError(ValueError):
     """The task graph contains a dependency cycle."""
+
+
+class Module:
+    """Handle to a composed subgraph (see :meth:`TaskGraph.compose`).
+
+    ``source`` runs before every root of the subgraph; ``sink`` runs after
+    every sink of the subgraph and its *result* is the list of the
+    subgraph sinks' results (in ``sub.tasks`` order). Wire the module into
+    the outer graph through these two boundary tasks::
+
+        m = outer.compose(sub)
+        m.source.after(prepare)          # sub starts after `prepare`
+        commit = outer.then(m.sink, fn)  # fn receives the gathered results
+    """
+
+    __slots__ = ("source", "sink", "sub")
+
+    def __init__(self, source: Task, sink: Task, sub: "TaskGraph") -> None:
+        self.source = source
+        self.sink = sink
+        self.sub = sub
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Module({self.sub.name!r}, tasks={len(self.sub)})"
 
 
 class TaskGraph:
@@ -25,24 +63,39 @@ class TaskGraph:
         self.name = name
         self.tasks: list[Task] = []
         self._fin: Optional[Task] = None  # hidden as_future completion task
-        self._fin_pred_ids: set[int] = set()  # tasks already wired into _fin
+        self._sinks: dict[int, Task] = {}  # tasks currently wired into _fin
+        self._run_count = 0
 
     # -- construction -----------------------------------------------------------
 
     def add(
         self,
-        fn: Optional[Callable[[], Any]] = None,
+        fn: Optional[Callable[..., Any]] = None,
         *,
         name: str = "",
         priority: float = 0.0,
+        takes_inputs: bool = False,
     ) -> Task:
-        t = Task(fn, name=name or f"t{len(self.tasks)}", priority=priority)
+        t = Task(
+            fn,
+            name=name or f"t{len(self.tasks)}",
+            priority=priority,
+            takes_inputs=takes_inputs,
+        )
+        t.graph = self
         self.tasks.append(t)
         return t
 
     def emplace_back(self, fn: Optional[Callable[[], Any]] = None) -> Task:
         """Paper-style alias (``tasks.emplace_back([...])``)."""
         return self.add(fn)
+
+    def adopt(self, *tasks: Task) -> None:
+        """Explicitly take ownership of externally-created tasks."""
+        for t in tasks:
+            if t.graph is not self:
+                t.graph = self
+            self.tasks.append(t)
 
     def map_reduce(
         self,
@@ -67,7 +120,86 @@ class TaskGraph:
             out.append(t)
         return out
 
+    # -- dataflow combinators ------------------------------------------------------
+
+    def then(
+        self,
+        predecessor: Task,
+        fn: Callable[..., Any],
+        *,
+        name: str = "",
+        priority: float = 0.0,
+    ) -> Task:
+        """A new task receiving ``predecessor``'s result as its argument."""
+        t = self.add(fn, name=name, priority=priority, takes_inputs=True)
+        t.succeed(predecessor)
+        return t
+
+    def gather(
+        self,
+        predecessors: Sequence[Task],
+        fn: Optional[Callable[..., Any]] = None,
+        *,
+        name: str = "gather",
+        priority: float = 0.0,
+    ) -> Task:
+        """Join: a task receiving every predecessor's result, in order.
+
+        With no ``fn`` the task simply collects the results into a list —
+        the dataflow analogue of ``asyncio.gather``.
+        """
+        collect = fn if fn is not None else (lambda *vs: list(vs))
+        t = self.add(collect, name=name, priority=priority, takes_inputs=True)
+        t.succeed(*predecessors)
+        return t
+
+    def compose(self, sub: "TaskGraph", *, name: str = "") -> Module:
+        """Embed ``sub`` as a module with source/sink boundary tasks.
+
+        The subgraph's tasks are adopted into this graph (they run, reset
+        and cancel with it — do not submit ``sub`` separately afterwards).
+        The boundary source precedes every root of ``sub`` with an
+        ordering-only edge; the boundary sink gathers the results of every
+        sink of ``sub`` as a list, so a composed module participates in
+        value-passing like a single task.
+        """
+        label = name or sub.name or "sub"
+        src = self.add(None, name=f"{label}::src")
+        roots = sub.roots()
+        sinks = [t for t in sub.tasks if not t.successors]
+        for r in roots:
+            r.after(src)
+        self.adopt(*sub.tasks)
+        snk = self.gather(sinks, name=f"{label}::sink")
+        # sink > source even when `sub` is empty, so downstream consumers
+        # can never overtake the module's upstream ordering edges
+        snk.after(src)
+        return Module(src, snk, sub)
+
     # -- execution ----------------------------------------------------------------
+
+    @property
+    def run_count(self) -> int:
+        """How many times this graph has been submitted (``as_future`` or
+        ``ThreadPool.submit``)."""
+        return self._run_count
+
+    def reset(self) -> None:
+        """Re-arm every task (and the hidden completion task) for a fresh
+        run: counters, per-run results/exceptions and cancellation flags.
+
+        ``ThreadPool.submit`` re-arms counters itself; explicit ``reset``
+        exists so a partially-cancelled or failed graph can be returned to
+        a clean slate before resubmission.
+        """
+        for t in self.tasks:
+            t.reset()
+        if self._fin is not None:
+            self._fin.reset()
+
+    def _notify_submitted(self) -> None:
+        """Called by ``ThreadPool.submit`` when the graph is submitted."""
+        self._run_count += 1
 
     def as_future(self, pool) -> "Future":  # noqa: F821 - forward ref (pool.py)
         """Submit the whole graph and return a :class:`~repro.core.Future`.
@@ -77,10 +209,13 @@ class TaskGraph:
         cooperatively cancels every task that has not started yet (running
         bodies finish; dependencies still drain so the pool stays clean).
 
-        One hidden completion task is kept per graph and re-wired as sinks
-        change, so build-once / ``as_future``-per-round submission does not
-        accumulate bookkeeping. Rounds must be sequential (task state is
-        shared across submissions, as with plain ``submit``).
+        One hidden completion task is kept per graph; sink membership is
+        *tracked* across calls — a task that gains a real successor after a
+        previous round is unwired from the completion task, and new sinks
+        are wired in — so build-once / ``as_future``-per-round submission
+        neither accumulates bookkeeping nor retires on stale edges. Rounds
+        must be sequential (task state is shared across submissions, as
+        with plain ``submit``).
         """
         from .pool import Future  # local import: graph.py must not cycle
 
@@ -88,15 +223,21 @@ class TaskGraph:
             self._fin = Task(name=f"{self.name or 'graph'}::done", priority=float("inf"))
             self._fin.propagate_errors = False
         fin = self._fin
-        new_sinks = [
-            t
+        # Reconcile tracked sink membership with the current topology.
+        current = {
+            id(t): t
             for t in self.tasks
-            if id(t) not in self._fin_pred_ids
-            and all(s is fin for s in t.successors)
-        ]
-        if new_sinks:
-            fin.succeed(*new_sinks)
-            self._fin_pred_ids.update(id(t) for t in new_sinks)
+            if not any(s is not fin for s in t.successors)
+        }
+        for tid, t in list(self._sinks.items()):
+            if tid not in current:  # gained a real successor since last round
+                t.successors.remove(fin)
+                fin.num_predecessors -= 1
+                del self._sinks[tid]
+        for tid, t in current.items():
+            if tid not in self._sinks:
+                fin.after(t)
+                self._sinks[tid] = t
         graph_tasks = list(self.tasks)
 
         def _canceller() -> bool:
@@ -108,17 +249,24 @@ class TaskGraph:
         fut = Future(canceller=_canceller)
 
         def _resolve(_t: Task) -> None:
+            cancelled_exc: Optional[BaseException] = None
             for t in graph_tasks:
-                if t.exception is not None and not isinstance(t.exception, CancelledError):
-                    fut.set_exception(t.exception)
-                    return
-            if any(t.cancelled for t in graph_tasks):
-                fut.set_exception(CancelledError("task graph cancelled"))
+                if t.exception is not None:
+                    if not isinstance(t.exception, CancelledError):
+                        fut.set_exception(t.exception)
+                        return
+                    # Explicit cancel OR a body skipped because the pool was
+                    # poisoned by an unrelated failure — either way the graph
+                    # did not run; never report success.
+                    cancelled_exc = t.exception
+            if cancelled_exc is not None or any(t.cancelled for t in graph_tasks):
+                fut.set_exception(cancelled_exc or CancelledError("task graph cancelled"))
                 return
             fut.set_result(None)
 
         fin.on_done = _resolve
         pool.submit(list(self.tasks) + [fin])
+        self._run_count += 1
         return fut
 
     # -- inspection ---------------------------------------------------------------
@@ -127,19 +275,37 @@ class TaskGraph:
         return [t for t in self.tasks if t.num_predecessors == 0]
 
     def validate(self) -> None:
-        """Raise :class:`CycleError` unless the graph is a DAG (Kahn)."""
+        """Raise :class:`CycleError` unless the graph is a DAG (Kahn).
+
+        Tasks reachable through successor edges but missing from the
+        container are first collected, then adopted explicitly via
+        :meth:`adopt` *before* the Kahn walk — validation never mutates
+        ``self.tasks`` mid-iteration (the hidden ``as_future`` completion
+        task is exempt: it is bookkeeping, not part of the user's graph).
+        """
+        fin = self._fin
+        known = {id(t) for t in self.tasks}
+        externals: list[Task] = []
+        stack = list(self.tasks)
+        while stack:
+            t = stack.pop()
+            for s in t.successors:
+                if s is fin or id(s) in known:
+                    continue
+                known.add(id(s))
+                externals.append(s)
+                stack.append(s)
+        if externals:
+            self.adopt(*externals)
         indeg = {id(t): t.num_predecessors for t in self.tasks}
-        known = set(indeg)
         q = _pydeque(t for t in self.tasks if t.num_predecessors == 0)
         visited = 0
         while q:
             t = q.popleft()
             visited += 1
             for s in t.successors:
-                if id(s) not in known:  # successor outside this container
-                    known.add(id(s))
-                    indeg[id(s)] = s.num_predecessors
-                    self.tasks.append(s)
+                if id(s) not in indeg:  # hidden completion task
+                    continue
                 indeg[id(s)] -= 1
                 if indeg[id(s)] == 0:
                     q.append(s)
@@ -168,6 +334,8 @@ class TaskGraph:
             t = q.popleft()
             order.append(t)
             for s in t.successors:
+                if id(s) not in indeg:
+                    continue
                 indeg[id(s)] -= 1
                 if indeg[id(s)] == 0:
                     q.append(s)

@@ -24,6 +24,11 @@ thief/inbox side), the same ready-key the schedule simulator uses — and
 at high priority, speculative prefills at low priority, and aborted requests
 cancel their in-flight work.
 
+Also beyond the paper (DESIGN.md §8): an **observer layer**. Attached
+observers (``core/observer.py``) see submit/start/finish/steal lifecycle
+events, which is how the aggregate-stats and Chrome-trace exporters watch a
+run without the pool knowing about either.
+
 Differences from the C++ original are documented in DESIGN.md §2.1.
 """
 from __future__ import annotations
@@ -131,6 +136,10 @@ class ThreadPool:
         ``ChaseLevDeque`` (faithful structural port; used in tests). Each
         worker's deque and the shared inbox are priority-banded instances
         of this class (``PriorityDeque``).
+    observers:
+        Initial observers (``core/observer.py`` protocol: on_submit /
+        on_start / on_finish / on_steal). With no observers attached the
+        hot path pays one falsy-list check per event site.
     """
 
     def __init__(
@@ -139,6 +148,7 @@ class ThreadPool:
         *,
         deque_cls: type = FastDeque,
         name: str = "repro-pool",
+        observers: Sequence[Any] = (),
     ) -> None:
         n = num_threads if num_threads is not None else (os.cpu_count() or 1)
         if n < 1:
@@ -155,6 +165,7 @@ class ThreadPool:
         # Slot n is for increments from non-worker threads (none today).
         self._executed = [0] * (n + 1)
         self._steals = [0] * (n + 1)
+        self._observers: list[Any] = list(observers)
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), name=f"{name}-{i}", daemon=True)
             for i in range(n)
@@ -167,6 +178,29 @@ class ThreadPool:
     @property
     def num_threads(self) -> int:
         return len(self._deques)
+
+    def add_observer(self, observer: Any) -> None:
+        """Attach a lifecycle observer (``core/observer.py`` protocol).
+
+        Attach/detach are not synchronized against in-flight events: an
+        observer attached mid-run may miss events already dispatched, which
+        is fine for telemetry.
+        """
+        self._observers.append(observer)
+
+    def remove_observer(self, observer: Any) -> None:
+        """Detach a previously attached observer (no-op if absent)."""
+        try:
+            self._observers.remove(observer)
+        except ValueError:
+            pass
+
+    def _notify(self, method: str, *args: Any) -> None:
+        for obs in self._observers:
+            try:
+                getattr(obs, method)(*args)
+            except BaseException:  # noqa: BLE001 - telemetry never poisons the pool
+                pass
 
     def submit(
         self,
@@ -189,6 +223,9 @@ class ThreadPool:
         elif callable(work):
             self._schedule(Task(work, priority=priority or 0.0))
         else:
+            notify = getattr(work, "_notify_submitted", None)
+            if notify is not None:  # TaskGraph bumps its run_count
+                notify()
             tasks = list(work)
             graph = iter_graph(tasks)
             for t in graph:
@@ -283,6 +320,8 @@ class ThreadPool:
         with self._cond:
             self._unfinished += 1
             self._cond.notify()
+        if self._observers:
+            self._notify("on_submit", task)
         idx = getattr(self._tls, "index", None)
         if idx is not None:
             self._deques[idx].push(task)
@@ -318,9 +357,12 @@ class ThreadPool:
             return task
         # 3. sweep victims, stealing from the top (highest band, FIFO)
         for k in range(1, n):
-            task = self._deques[(index + k) % n].steal()
+            victim = (index + k) % n
+            task = self._deques[victim].steal()
             if task is not EMPTY:
                 self._steals[index] += 1
+                if self._observers:
+                    self._notify("on_steal", task, index, victim)
                 return task
         return EMPTY
 
@@ -337,6 +379,8 @@ class ThreadPool:
         """Run a task, then its ready successors via continuation passing."""
         task: Optional[Task] = first
         while task is not None:
+            if self._observers:
+                self._notify("on_start", task, index)
             try:
                 if self._first_error is not None and task.propagate_errors:
                     # fail-fast: skip bodies once the graph is poisoned, but
@@ -352,6 +396,8 @@ class ThreadPool:
                         if self._first_error is None:
                             self._first_error = exc
             self._executed[index] += 1
+            if self._observers:
+                self._notify("on_finish", task, index)
             self._complete(task)
             # Fan out (paper §2.2): decrement successors; run ONE newly-ready
             # successor inline — the highest-priority one, matching the

@@ -26,6 +26,18 @@ skipped if it has not started yet; a task already running completes
 normally. Both are what the serving engine builds on (prefill at low
 priority, decode ticks at high priority, request abortion).
 
+**Value-passing (dataflow) edges — DESIGN.md §8.** Every :meth:`succeed`
+call records the predecessor in an ordered ``inputs`` list — the edge's
+argument slot. A task constructed with ``takes_inputs=True`` consumes those
+slots: its body is called as ``fn(pred_a.result, pred_b.result, ...)`` in
+``succeed`` order, so results flow along edges instead of through captured
+closures. Nullary tasks (the paper's model, and the default) ignore their
+slots entirely, so ordering-only graphs are unchanged. :meth:`after` wires
+an ordering-only edge that records no slot, for mixing control dependencies
+into dataflow pipelines. A dataflow task whose input failed (exception or
+cancellation) skips its body and propagates the *first* failed input's
+exception — failure flows along the same edges as data.
+
 The C++ implementation uses ``std::atomic<int>`` for the predecessor counter.
 CPython's ``x -= 1`` is three bytecodes (load/sub/store) and *not* atomic, so
 each task carries a tiny lock guarding the decrement — the direct analogue of
@@ -57,7 +69,14 @@ class Task:
     successors:
         Tasks that depend on this one.
     num_predecessors:
-        Static in-degree, set up via :meth:`succeed`.
+        Static in-degree, set up via :meth:`succeed` / :meth:`after`.
+    inputs:
+        Ordered argument slots: the predecessors wired via :meth:`succeed`,
+        in wiring order. Consumed only when ``takes_inputs`` is True.
+    takes_inputs:
+        When True the body is called with the recorded inputs' results as
+        positional arguments (dataflow mode); when False (default) the body
+        is nullary, as in the paper.
     priority:
         Larger runs first among ready tasks (own-deque bands, inbox bands
         and the inline-continuation pick — see pool.py). Default 0.0.
@@ -77,6 +96,9 @@ class Task:
         "priority",
         "successors",
         "num_predecessors",
+        "inputs",
+        "takes_inputs",
+        "graph",
         "result",
         "propagate_errors",
         "on_done",
@@ -90,16 +112,20 @@ class Task:
 
     def __init__(
         self,
-        fn: Optional[Callable[[], Any]] = None,
+        fn: Optional[Callable[..., Any]] = None,
         name: str = "",
         *,
         priority: float = 0.0,
+        takes_inputs: bool = False,
     ) -> None:
         self.fn = fn
         self.name = name
         self.priority = priority
         self.successors: list[Task] = []
         self.num_predecessors = 0
+        self.inputs: list[Task] = []  # ordered argument slots (succeed order)
+        self.takes_inputs = takes_inputs
+        self.graph: Any = None  # back-ref set by TaskGraph.add (for .then())
         self.result: Any = None
         self.propagate_errors = True
         self.on_done: Optional[Callable[["Task"], None]] = None
@@ -115,9 +141,23 @@ class Task:
     def succeed(self, *predecessors: "Task") -> "Task":
         """Declare that ``self`` runs after every task in ``predecessors``.
 
-        Matches the paper's ``task.Succeed(&a, &b)``. Returns ``self`` so
+        Matches the paper's ``task.Succeed(&a, &b)``. Each predecessor is
+        also recorded as the next argument slot: a ``takes_inputs`` task
+        receives the predecessors' results as positional arguments in
+        wiring order (nullary tasks ignore the slots). Returns ``self`` so
         calls can be chained.
         """
+        for p in predecessors:
+            p.successors.append(self)
+            self.num_predecessors += 1
+            self.inputs.append(p)
+        self._pending = self.num_predecessors
+        return self
+
+    def after(self, *predecessors: "Task") -> "Task":
+        """Ordering-only edge: run after ``predecessors`` without recording
+        an argument slot. Use for control dependencies (e.g. "the directory
+        must exist") feeding into dataflow tasks."""
         for p in predecessors:
             p.successors.append(self)
             self.num_predecessors += 1
@@ -130,6 +170,26 @@ class Task:
             s.succeed(self)
         return self
 
+    def then(
+        self,
+        fn: Callable[..., Any],
+        *,
+        name: str = "",
+        priority: float = 0.0,
+    ) -> "Task":
+        """Dataflow combinator: a new task consuming this task's result.
+
+        Requires the task to belong to a :class:`~repro.core.TaskGraph`
+        (``graph`` back-ref, set by ``TaskGraph.add``); the new task is
+        added to the same graph. ``a.then(f).then(g)`` builds ``g(f(a()))``
+        as a three-task pipeline.
+        """
+        if self.graph is None:
+            raise ValueError("then() requires a task created via TaskGraph.add")
+        t = self.graph.add(fn, name=name, priority=priority, takes_inputs=True)
+        t.succeed(self)
+        return t
+
     # C++-style aliases
     Succeed = succeed
     Precede = precede
@@ -137,11 +197,17 @@ class Task:
     # -- runtime ---------------------------------------------------------------
 
     def reset(self) -> None:
-        """Re-arm the countdown so the same graph can be resubmitted."""
+        """Re-arm the countdown so the same graph can be resubmitted.
+
+        Clears the previous run's ``result``/``exception`` — results are
+        per-run state, so a re-run can never observe a stale value through
+        a dataflow edge.
+        """
         self._pending = self.num_predecessors
         self._done = False
         self._started = False
         self._cancelled = False
+        self.result = None
         self.exception = None
 
     def decrement(self) -> bool:
@@ -172,6 +238,10 @@ class Task:
         return self._cancelled
 
     @property
+    def started(self) -> bool:
+        return self._started
+
+    @property
     def is_ready(self) -> bool:
         return self._pending == 0 and not self._done
 
@@ -183,7 +253,10 @@ class Task:
         """Execute the wrapped callable (exceptions handled by the pool).
 
         A task cancelled before this point records :class:`CancelledError`
-        and completes without calling ``fn``.
+        and completes without calling ``fn``. A ``takes_inputs`` task whose
+        input failed (or was cancelled) skips its body and adopts the first
+        failed input's exception, so failure propagates along dataflow
+        edges without poisoning the pool when ``propagate_errors`` is off.
         """
         with self._lock:
             if self._cancelled:
@@ -192,7 +265,15 @@ class Task:
                 self._done = True
                 return
             self._started = True
-        if self.fn is not None:
+        if self.takes_inputs:
+            for p in self.inputs:
+                if p.exception is not None:
+                    self.exception = p.exception
+                    self._done = True
+                    return
+            if self.fn is not None:
+                self.result = self.fn(*(p.result for p in self.inputs))
+        elif self.fn is not None:
             self.result = self.fn()
         self._done = True
 

@@ -1,13 +1,20 @@
-"""ThreadPool-driven input pipeline: the paper's scheduler in production.
+"""ThreadPool-driven input pipeline: the dataflow runtime in production.
 
-Each batch is a small task graph
-    generate (CPU, numpy)  ->  device_put (transfer)
-submitted ``depth`` steps ahead on the work-stealing pool, so host-side data
-work overlaps device steps (the GIL-releasing regime the pool targets —
-DESIGN.md §2). The pipeline cursor is just the step index: checkpointable
-and restorable with no draining protocol. Straggler mitigation falls out of
-work stealing: a slow generate task gets picked up by whichever worker goes
-idle first, and ``depth`` bounds how far ahead we buffer.
+Each prefetch lane is one **re-runnable dataflow graph** (DESIGN.md §8)
+
+    produce (CPU, numpy)  ->  transform (device_put)  ->  deliver
+
+built once and re-run every ``depth`` steps: the produce task's return
+value (the host batch) flows along the edge into the transform task as its
+argument, and the transform's device batch flows into the deliver task,
+whose completion resolves that round's future — no closure capture, no
+side-channel dicts. ``depth`` lanes run concurrently on the work-stealing
+pool, so host-side data work overlaps device steps (the GIL-releasing
+regime the pool targets — DESIGN.md §2). The pipeline cursor is just the
+step index: checkpointable and restorable with no draining protocol.
+Straggler mitigation falls out of work stealing: a slow produce task gets
+picked up by whichever worker goes idle first, and ``depth`` bounds how far
+ahead we buffer.
 """
 from __future__ import annotations
 
@@ -15,7 +22,59 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core import Future, TaskGraph, ThreadPool
+from repro.core import Future, Task, TaskGraph, ThreadPool
+
+
+class _Lane:
+    """One produce→transform→deliver graph, re-run once per assigned step.
+
+    Rounds are sequential per lane (step k and step k+depth share the lane),
+    so the mutable ``step`` cell and the per-round ``future`` swap are safe:
+    a lane is resubmitted only after its previous round was consumed or
+    cancelled.
+    """
+
+    __slots__ = ("graph", "produce", "transform", "deliver", "step", "future", "_source")
+
+    def __init__(self, index: int, source: Any, put_fn: Callable[[dict], Any]) -> None:
+        self._source = source
+        self.step = -1
+        self.future: Optional[Future] = None
+        g = TaskGraph(f"prefetch-lane{index}")
+        self.produce = g.add(self._produce, name=f"produce:{index}")
+        self.transform = g.then(self.produce, put_fn, name=f"transform:{index}")
+        self.deliver = self.transform.then(lambda b: b, name=f"deliver:{index}")
+        for t in (self.produce, self.transform, self.deliver):
+            t.propagate_errors = False  # lane errors go to the future only
+        self.deliver.on_done = self._resolve
+        self.graph = g
+
+    def _produce(self) -> dict:
+        return self._source.batch(self.step)
+
+    def _resolve(self, task: Task) -> None:
+        fut = self.future
+        if fut is None:  # pragma: no cover - resolve before first submit
+            return
+        if task.exception is not None:
+            fut.set_exception(task.exception)
+        else:
+            fut.set_result(task.result)
+
+    def submit(self, pool: ThreadPool, step: int) -> Future:
+        self.step = step
+        self.future = Future(canceller=self._cancel)
+        pool.submit(self.graph)  # re-arms counters + per-run results
+        return self.future
+
+    def _cancel(self) -> bool:
+        won = self.produce.cancel()
+        if won:
+            # produce never started: skip the whole lane round. A produce
+            # already running completes normally and the round delivers.
+            self.transform.cancel()
+            self.deliver.cancel()
+        return won
 
 
 class Prefetcher:
@@ -33,7 +92,8 @@ class Prefetcher:
         self._own_pool = pool is None
         self.depth = max(1, depth)
         self.put_fn = put_fn or (lambda b: jax.tree.map(jax.numpy.asarray, b))
-        self._inflight: dict[int, Future] = {}
+        self._lanes = [_Lane(i, source, self.put_fn) for i in range(self.depth)]
+        self._inflight: dict[int, _Lane] = {}
         self._next_submit = start_step
         self._next_read = start_step
         for _ in range(self.depth):
@@ -44,12 +104,9 @@ class Prefetcher:
     def _submit_one(self) -> None:
         step = self._next_submit
         self._next_submit += 1
-
-        def produce():
-            host_batch = self.source.batch(step)  # numpy work
-            return self.put_fn(host_batch)  # transfer (GIL-releasing)
-
-        self._inflight[step] = self.pool.submit_future(produce)
+        lane = self._lanes[step % self.depth]
+        lane.submit(self.pool, step)
+        self._inflight[step] = lane
 
     # -- public ------------------------------------------------------------------
 
@@ -57,8 +114,8 @@ class Prefetcher:
         """Next batch, in order; refills the prefetch window."""
         step = self._next_read
         self._next_read += 1
-        fut = self._inflight.pop(step)
-        batch = fut.result(timeout)
+        lane = self._inflight.pop(step)
+        batch = lane.future.result(timeout)
         self._submit_one()
         return batch
 
@@ -68,19 +125,19 @@ class Prefetcher:
         return self._next_read
 
     def close(self, timeout: float = 30.0) -> None:
-        """Cancel or drain every in-flight batch, then release the pool.
+        """Cancel or drain every in-flight lane, then release the pool.
 
-        Futures whose produce task has not started are cancelled (the
-        source never sees those steps); tasks already running are drained —
+        Lanes whose produce task has not started are cancelled (the source
+        never sees those steps); rounds already producing are drained —
         abandoning them would leave produce() racing a closed pool, and on
         a shared pool it would leak tasks into the next user.
         """
         # cancel pass first (stops everything not yet started), then drain
         # the stragglers — cancelling before draining minimizes wasted work
-        running = [fut for fut in self._inflight.values() if not fut.cancel()]
-        for fut in running:
+        running = [lane for lane in self._inflight.values() if not lane.future.cancel()]
+        for lane in running:
             try:
-                fut.result(timeout)
+                lane.future.result(timeout)
             except BaseException:  # noqa: BLE001 - drain only; result unused
                 pass
         self._inflight.clear()

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Future, Task, ThreadPool
+from repro.core import ChromeTraceObserver, Future, Task, ThreadPool
 
 from .kv import SlotKVCache
 
@@ -119,6 +119,14 @@ class ServeEngine:
         retiring sequence is replaced at the very next tick; each waiting
         join holds one batch-1 cache of bucket length, which bounds the
         extra memory.
+    trace_path:
+        When set, a :class:`~repro.core.ChromeTraceObserver` is attached to
+        the pool for the engine's lifetime and the trace (every prefill
+        task, decode tick and steal, per worker lane) is written there on
+        ``close()`` — load it in ``chrome://tracing``. Exposed as
+        ``self.tracer`` for mid-run snapshots (``tracer.to_trace()``). On a
+        shared pool the trace includes the other users' tasks too, which is
+        usually what you want when diagnosing interference.
     """
 
     def __init__(
@@ -131,13 +139,14 @@ class ServeEngine:
         pool: Optional[ThreadPool] = None,
         prefill_buckets: Optional[Sequence[int]] = None,
         prefill_lookahead: Optional[int] = None,
+        trace_path: Optional[str] = None,
     ) -> None:
         cfg = model.cfg
         if cfg.is_encdec or cfg.family == "vlm":
             raise NotImplementedError(
                 f"ServeEngine supports text-prompt families only, got {cfg.family!r}"
             )
-        if prefill_buckets is not None and not self._padding_safe(cfg):
+        if prefill_buckets is not None and not self.supports_prefill_buckets(cfg):
             raise ValueError(
                 "prefill_buckets requires a full-attention family (no SSM state, "
                 f"no sliding window); {cfg.name} would absorb pad tokens"
@@ -147,6 +156,11 @@ class ServeEngine:
         self.kv = SlotKVCache(model, max_slots, max_len)
         self.pool = pool or ThreadPool(2, name="serve")
         self._own_pool = pool is None
+        self._trace_path = trace_path
+        self.tracer: Optional[ChromeTraceObserver] = None
+        if trace_path is not None:
+            self.tracer = ChromeTraceObserver()
+            self.pool.add_observer(self.tracer)
         self._buckets = tuple(sorted(prefill_buckets)) if prefill_buckets else None
         self._lookahead = max_slots if prefill_lookahead is None else prefill_lookahead
         self._prefill_jit = jax.jit(model.prefill)
@@ -179,7 +193,10 @@ class ServeEngine:
     # -- client API -----------------------------------------------------------
 
     @staticmethod
-    def _padding_safe(cfg) -> bool:
+    def supports_prefill_buckets(cfg) -> bool:
+        """Whether ``prefill_buckets`` is legal for this config: pad tokens
+        must be causally invisible (full-attention families only — SSM
+        state and sliding-window rings would absorb them)."""
         return (
             cfg.window is None
             and cfg.family in ("dense", "moe")
@@ -238,6 +255,10 @@ class ServeEngine:
             self.drain()
         with self._lock:
             self._closed = True
+        if self.tracer is not None:
+            tracer, self.tracer = self.tracer, None  # idempotent close
+            self.pool.remove_observer(tracer)
+            tracer.save(self._trace_path, num_workers=self.pool.num_threads)
         if self._own_pool:
             self.pool.close()
 
@@ -304,6 +325,7 @@ class ServeEngine:
         except BaseException as exc:  # noqa: BLE001 - delivered via the handle
             with self._lock:
                 self._inflight -= 1
+                self._pump_locked()  # freed admission capacity: re-admit waiters
                 self._idle.notify_all()
             handle.future.set_exception(exc)
             return
@@ -367,10 +389,9 @@ class ServeEngine:
         with self._lock:
             self._retire_locked(retired)  # max_new_tokens == 1 finishes at join
             if not self._active:
-                resched = bool(self._joinq)
-                self._tick_scheduled = resched
-                if resched:
-                    self._schedule_after_clear_locked()
+                self._tick_scheduled = False
+                if self._joinq:
+                    self._schedule_tick_locked()
                 self._pump_locked()
                 self._idle.notify_all()
                 self._resolve(retired)
@@ -398,17 +419,11 @@ class ServeEngine:
                 self._tokens_out += 1
             self._retire_locked(retired)
             self._pump_locked()
-            resched = bool(self._active or self._joinq)
-            self._tick_scheduled = resched
-            if resched:
-                self._schedule_after_clear_locked()
+            self._tick_scheduled = False
+            if self._active or self._joinq:
+                self._schedule_tick_locked()
             self._idle.notify_all()
         self._resolve(retired)
-
-    def _schedule_after_clear_locked(self) -> None:
-        t = Task(self._tick, name="decode-tick", priority=DECODE_PRIORITY)
-        t.propagate_errors = False
-        self.pool.submit(t)
 
     def _retire_locked(self, retired: list) -> None:
         for slot, seq in list(self._active.items()):

@@ -1,0 +1,322 @@
+"""Dataflow runtime tests (DESIGN.md §8): value-passing edges, re-runnable
+graphs, composition, combinators, and the as_future sink-membership fix."""
+import threading
+
+import pytest
+
+from repro.core import CancelledError, Task, TaskGraph, ThreadPool
+
+
+# ---------------------------------------------------------------------------
+# value-passing
+# ---------------------------------------------------------------------------
+
+
+def test_diamond_value_passing_rerun_identical():
+    """Acceptance: a diamond run twice via as_future produces identical,
+    correctly-ordered results with no manual state reset beyond
+    TaskGraph.reset()."""
+    g = TaskGraph("diamond")
+    a = g.add(lambda: 2, name="a")
+    b = g.then(a, lambda x: x + 1, name="b")
+    c = g.then(a, lambda x: x * 10, name="c")
+    d = g.gather([b, c], lambda bx, cx: (bx, cx), name="d")
+    with ThreadPool(4) as pool:
+        assert g.as_future(pool).result(10) is None
+        first = d.result
+        g.reset()
+        assert g.as_future(pool).result(10) is None
+        second = d.result
+    # argument order is the succeed order (b then c), both runs identical
+    assert first == second == (3, 20)
+    assert g.run_count == 2
+
+
+def test_value_passing_argument_order_is_wiring_order():
+    g = TaskGraph()
+    srcs = [g.add(lambda i=i: i, name=f"s{i}") for i in range(6)]
+    out = g.gather(srcs, name="collect")
+    with ThreadPool(4) as pool:
+        g.as_future(pool).result(10)
+    assert out.result == [0, 1, 2, 3, 4, 5]
+
+
+def test_then_chain_on_task():
+    g = TaskGraph()
+    last = g.add(lambda: 5).then(lambda x: x * x).then(lambda x: x + 1)
+    with ThreadPool(2) as pool:
+        g.as_future(pool).result(10)
+    assert last.result == 26
+
+
+def test_then_requires_graph_membership():
+    t = Task(lambda: 1)
+    with pytest.raises(ValueError, match="TaskGraph.add"):
+        t.then(lambda x: x)
+
+
+def test_after_is_ordering_only():
+    """after() wires a dependency without recording an argument slot."""
+    g = TaskGraph()
+    order = []
+    gate = g.add(lambda: order.append("gate"), name="gate")
+    val = g.add(lambda: 7, name="val")
+    consumer = g.add(lambda x: (order.append("consumer"), x * 2)[1], takes_inputs=True)
+    consumer.succeed(val)  # one argument slot
+    consumer.after(gate)  # ordering only — no slot
+    with ThreadPool(2) as pool:
+        g.as_future(pool).result(10)
+    assert consumer.result == 14
+    assert order == ["gate", "consumer"]
+
+
+def test_dataflow_failure_propagates_along_edges():
+    """A failed input skips downstream bodies and delivers the original
+    exception through the edges (propagate_errors=False: pool stays clean)."""
+    g = TaskGraph()
+    boom = g.add(lambda: (_ for _ in ()).throw(ValueError("boom")), name="boom")
+    mid = g.then(boom, lambda x: x + 1, name="mid")
+    ran = []
+    out = g.then(mid, lambda x: ran.append(x), name="out")
+    for t in g.tasks:
+        t.propagate_errors = False
+    with ThreadPool(2) as pool:
+        with pytest.raises(ValueError, match="boom"):
+            g.as_future(pool).result(10)
+        assert ran == []
+        assert isinstance(out.exception, ValueError)
+        pool.wait_idle(10)  # not poisoned
+        ok = []
+        pool.run(lambda: ok.append(1))
+        assert ok == [1]
+
+
+def test_reset_clears_per_run_results():
+    g = TaskGraph()
+    t = g.add(lambda: 42)
+    with ThreadPool(2) as pool:
+        g.as_future(pool).result(10)
+    assert t.result == 42
+    g.reset()
+    assert t.result is None and t.exception is None
+
+
+# ---------------------------------------------------------------------------
+# re-run lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_build_once_run_many_as_future():
+    g = TaskGraph("loop")
+    acc = []
+    counter = g.add(lambda: acc.append(len(acc)) or len(acc), name="count")
+    sq = g.then(counter, lambda n: n * n, name="sq")
+    with ThreadPool(2) as pool:
+        results = []
+        for _ in range(5):
+            g.as_future(pool).result(10)
+            results.append(sq.result)
+    assert results == [1, 4, 9, 16, 25]
+    assert g.run_count == 5
+
+
+def test_run_count_tracks_plain_submission():
+    g = TaskGraph()
+    g.add(lambda: None)
+    with ThreadPool(2) as pool:
+        pool.run(g)
+        pool.run(g)
+    assert g.run_count == 2
+
+
+def test_cancel_then_resubmit():
+    """A cancelled round leaves no residue: reset() + as_future runs clean."""
+    pool = ThreadPool(1)
+    gate = threading.Event()
+    pool.submit(lambda: gate.wait(10))
+    import time
+
+    time.sleep(0.05)  # worker parked on the gate; graph tasks queue behind it
+    ran = []
+    g = TaskGraph()
+    a = g.add(lambda: ran.append("a"))
+    g.then(a, lambda _x: ran.append("b"))
+    fut = g.as_future(pool)
+    assert fut.cancel() is True
+    gate.set()
+    pool.wait_idle(10)
+    with pytest.raises(CancelledError):
+        fut.result(5)
+    assert ran == []
+    # resubmit after an explicit reset: the graph runs normally
+    g.reset()
+    assert g.as_future(pool).result(10) is None
+    assert ran == ["a", "b"]
+    assert g.run_count == 2
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# as_future sink membership (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def _fin_preds(g):
+    """Tasks currently wired into the hidden completion task."""
+    fin = g._fin
+    return {t.name for t in g.tasks if fin in t.successors}
+
+
+def test_sink_rewiring_tracks_membership():
+    """A task that gains a real successor after being wired as a sink is
+    unwired from the completion task on the next round."""
+    g = TaskGraph("grow")
+    order = []
+    a = g.add(lambda: order.append("a"), name="a")
+    with ThreadPool(2) as pool:
+        g.as_future(pool).result(10)
+        assert _fin_preds(g) == {"a"}
+        # a gains a real successor between rounds
+        b = g.add(lambda: order.append("b"), name="b")
+        b.after(a)
+        g.as_future(pool).result(10)
+        # a is no longer a sink: only b holds the graph open
+        assert _fin_preds(g) == {"b"}
+        assert g._fin.num_predecessors == 1
+        assert order == ["a", "a", "b"]
+
+
+def test_sink_rewiring_no_accumulation_over_rounds():
+    g = TaskGraph()
+    t = g.add(lambda: None, name="only")
+    with ThreadPool(2) as pool:
+        for _ in range(4):
+            g.as_future(pool).result(10)
+    assert g._fin.num_predecessors == 1
+    assert t.successors.count(g._fin) == 1
+
+
+# ---------------------------------------------------------------------------
+# composition
+# ---------------------------------------------------------------------------
+
+
+def test_compose_gathers_subgraph_results():
+    outer = TaskGraph("outer")
+    sub = TaskGraph("sub")
+    sub.add(lambda: 1, name="one")
+    sub.add(lambda: 2, name="two")
+    prep = outer.add(lambda: None, name="prep")
+    m = outer.compose(sub)
+    m.source.after(prep)
+    total = outer.then(m.sink, lambda vals: sum(vals), name="total")
+    with ThreadPool(4) as pool:
+        outer.as_future(pool).result(10)
+    assert total.result == 3
+    # adopted tasks belong to the outer graph now
+    assert all(t.graph is outer for t in sub.tasks)
+
+
+def test_compose_respects_boundary_ordering():
+    outer = TaskGraph()
+    events = []
+    sub = TaskGraph("sub")
+    sub.chain([lambda: events.append("s0"), lambda: events.append("s1")])
+    before = outer.add(lambda: events.append("before"))
+    m = outer.compose(sub)
+    m.source.after(before)
+    outer.then(m.sink, lambda _vals: events.append("after"))
+    with ThreadPool(4) as pool:
+        outer.as_future(pool).result(10)
+    assert events == ["before", "s0", "s1", "after"]
+
+
+def test_composed_graph_is_rerunnable():
+    outer = TaskGraph()
+    sub = TaskGraph("sub")
+    sub.add(lambda: 10, name="x")
+    m = outer.compose(sub)
+    out = outer.then(m.sink, lambda vals: vals[0] + 1)
+    with ThreadPool(2) as pool:
+        results = []
+        for _ in range(3):
+            outer.as_future(pool).result(10)
+            results.append(out.result)
+    assert results == [11, 11, 11]
+
+
+# ---------------------------------------------------------------------------
+# validate (satellite fix: no mid-iteration mutation)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_adopts_externals_after_walk():
+    g = TaskGraph()
+    a = g.add(lambda: None, name="a")
+    outside1 = Task(lambda: None, name="out1")
+    outside2 = Task(lambda: None, name="out2")
+    outside1.succeed(a)
+    outside2.succeed(outside1)  # two levels deep
+    g.validate()
+    assert {t.name for t in g.tasks} == {"a", "out1", "out2"}
+    # adopted exactly once; a second validate is a no-op
+    g.validate()
+    assert len(g.tasks) == 3
+
+
+def test_validate_ignores_hidden_completion_task():
+    g = TaskGraph()
+    g.add(lambda: None)
+    with ThreadPool(2) as pool:
+        g.as_future(pool).result(10)
+    g.validate()  # the hidden ::done task must not be adopted
+    assert len(g.tasks) == 1
+
+
+def test_validate_cycle_still_detected():
+    from repro.core import CycleError
+
+    g = TaskGraph("cyclic")
+    a = g.add(lambda: None)
+    b = g.add(lambda: None)
+    a.succeed(b)
+    b.succeed(a)
+    with pytest.raises(CycleError):
+        g.validate()
+
+
+def test_as_future_on_poisoned_pool_reports_cancellation():
+    """Regression: a graph whose bodies were skipped because the shared pool
+    was poisoned by an unrelated failure must not resolve successfully."""
+    with ThreadPool(1) as pool:
+        gate = threading.Event()
+
+        def boom():
+            gate.wait(10)
+            raise RuntimeError("unrelated failure")
+
+        pool.submit(boom)  # poisons the pool once it runs
+        g = TaskGraph()
+        ran = []
+        g.add(lambda: ran.append(1))
+        fut = g.as_future(pool)  # queued behind the gate task
+        gate.set()
+        with pytest.raises((CancelledError, RuntimeError)):
+            fut.result(10)
+        assert ran == []  # the body never executed — and the future said so
+        with pytest.raises(RuntimeError):
+            pool.wait_idle(10)  # drain the poison marker
+
+
+def test_compose_empty_subgraph_preserves_ordering():
+    """Regression: an empty composed module's sink must still run after the
+    module's upstream ordering edges (checkpoint of an empty pytree)."""
+    outer = TaskGraph()
+    events = []
+    prep = outer.add(lambda: events.append("prepare"))
+    m = outer.compose(TaskGraph("empty"))
+    m.source.after(prep)
+    outer.then(m.sink, lambda vals: events.append(("commit", vals)))
+    with ThreadPool(4) as pool:
+        outer.as_future(pool).result(10)
+    assert events == ["prepare", ("commit", [])]

@@ -127,3 +127,47 @@ def test_validates_requests_and_shares_pool():
         assert len(out[0]) == 2
         engine.close()  # must not close the shared pool
         pool.run(lambda: None)  # still alive
+
+
+def test_trace_path_emits_valid_chrome_trace(tmp_path):
+    """A serve run with trace_path set writes trace-event JSON on close,
+    with the prefill tasks and decode ticks visible as complete events."""
+    import json
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    trace_file = tmp_path / "serve_trace.json"
+    with ServeEngine(
+        model, params, max_slots=2, max_len=16, trace_path=str(trace_file)
+    ) as engine:
+        prompts = [np.arange(3, dtype=np.int32) % cfg.vocab_size for _ in range(2)]
+        outs = engine.generate(prompts, 3, timeout=300)
+        assert all(len(o) == 3 for o in outs)
+    trace = json.loads(trace_file.read_text())
+    names = [e["name"] for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert any(n.startswith("prefill:") for n in names)
+    assert "decode-tick" in names
+
+
+def test_prefill_failure_readmits_waiting_requests():
+    """Regression: a failed prefill frees admission capacity — requests
+    still waiting behind it must be pumped, not stalled forever."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    engine = ServeEngine(model, params, max_slots=1, max_len=16, prefill_lookahead=0)
+    try:
+        real_prefill = engine._prefill_jit
+        POISON = np.full((3,), 1, np.int32)
+
+        def flaky_prefill(p, batch, last_pos):
+            if int(np.asarray(batch["tokens"]).sum()) == 3:  # the poison prompt
+                raise RuntimeError("injected prefill failure")
+            return real_prefill(p, batch, last_pos=last_pos)
+
+        engine._prefill_jit = lambda p, batch, last_pos: flaky_prefill(p, batch, last_pos)
+        bad = engine.submit(POISON, 4)
+        good = engine.submit(np.arange(2, 6, dtype=np.int32) % cfg.vocab_size, 4)
+        with pytest.raises(RuntimeError, match="injected prefill failure"):
+            bad.result(60)
+        assert len(good.result(120)) == 4  # admitted after the failure
+        engine.drain(60)
+    finally:
+        engine.close(drain=False)
