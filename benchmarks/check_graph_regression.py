@@ -1,0 +1,104 @@
+"""CI perf-regression gate for the task-graph scheduler (DESIGN.md §9).
+
+Compares a fresh ``graph_bench`` run against a committed baseline and
+fails (exit 1) when any work-stealing row regresses by more than
+``--threshold``× in ``overhead_us_per_task``.
+
+Rows are matched by **shape prefix** (``chain(1024)`` and ``chain(8192)``
+both match ``chain``), so a baseline at one size can in principle gate a
+run at another. In practice CI gates quick-vs-quick: per-task overhead at
+quick sizes carries un-amortized fixed costs (pool spin-up, root
+scheduling) that the full-size ``BENCH_graph.json`` rows do not, so the
+committed gate baseline is ``benchmarks/BENCH_graph_quick.json`` — quick
+sizes, with each overhead recorded as the noise envelope (max) of several
+runs. Only ws-fast rows at the baseline's default thread count
+participate. The absolute slack (``--slack-us``) keeps near-zero-overhead
+rows from failing on jitter — at ~1 µs overheads a 1.5× ratio is smaller
+than CI-runner noise, while the regression class this gate exists for
+(a lock back on the task path) shows up at 5–10 µs.
+
+    PYTHONPATH=src python benchmarks/check_graph_regression.py \
+        --baseline benchmarks/BENCH_graph_quick.json \
+        --new benchmarks/artifacts/BENCH_graph.json --slack-us 1.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_THREADS = 4
+
+
+def shape_prefix(bench: str) -> str:
+    """``chain(8192)`` -> ``chain``; ``wavefront(64x64)`` -> ``wavefront``."""
+    return bench.split("(", 1)[0]
+
+
+def ws_rows(payload: dict, threads: int) -> dict[str, float]:
+    """Map shape-prefix -> overhead_us_per_task for ws-fast rows.
+
+    Rows written before the --threads sweep carry no ``threads`` field;
+    they were all recorded at the default worker count.
+    """
+    out: dict[str, float] = {}
+    for row in payload["rows"]:
+        if row.get("executor") != "ws-fast":
+            continue
+        if row.get("threads", DEFAULT_THREADS) != threads:
+            continue
+        if "overhead_us_per_task" not in row:
+            continue
+        out[shape_prefix(row["bench"])] = row["overhead_us_per_task"]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_graph.json")
+    ap.add_argument("--new", required=True, help="freshly generated BENCH_graph.json")
+    ap.add_argument("--threads", type=int, default=DEFAULT_THREADS)
+    ap.add_argument("--threshold", type=float, default=1.5, help="max allowed ratio")
+    ap.add_argument("--slack-us", type=float, default=1.0, help="absolute noise floor (µs)")
+    args = ap.parse_args()
+
+    baseline = ws_rows(json.loads(pathlib.Path(args.baseline).read_text()), args.threads)
+    fresh = ws_rows(json.loads(pathlib.Path(args.new).read_text()), args.threads)
+
+    if not baseline:
+        print("no ws-fast baseline rows found — nothing to gate")
+        return 0
+
+    failures: list[str] = []
+    compared = 0
+    print(f"{'shape':<18}{'baseline us':>12}{'new us':>10}{'limit us':>10}  verdict")
+    for shape, base in sorted(baseline.items()):
+        if shape not in fresh:
+            print(f"{shape:<18}{base:>12.2f}{'—':>10}{'—':>10}  missing in new run (skipped)")
+            continue
+        compared += 1
+        new = fresh[shape]
+        limit = base * args.threshold + args.slack_us
+        verdict = "ok" if new <= limit else "REGRESSION"
+        print(f"{shape:<18}{base:>12.2f}{new:>10.2f}{limit:>10.2f}  {verdict}")
+        if new > limit:
+            failures.append(shape)
+
+    for shape in sorted(set(fresh) - set(baseline)):
+        print(f"{shape:<18}{'—':>12}{fresh[shape]:>10.2f}{'—':>10}  new shape (no baseline)")
+
+    if failures:
+        print(f"\nFAIL: overhead regression >{args.threshold}x in: {', '.join(failures)}")
+        return 1
+    if compared == 0:
+        # never fail open: a gate that compared nothing (renamed shapes,
+        # thread-count mismatch, empty run) must not pass vacuously
+        print("\nFAIL: no baseline shape matched the new run — the gate compared nothing")
+        return 1
+    print(f"\nOK: no scheduler-overhead regression ({compared} shapes compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

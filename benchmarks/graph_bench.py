@@ -1,9 +1,10 @@
 """Task-graph microbenchmarks (paper §3 shapes) with a JSON perf record.
 
-Reproduces the paper's microbenchmark setup on three canonical graph
-shapes — **linear chain**, **random DAG**, **wavefront** — plus a
-value-passing chain that measures the dataflow runtime's argument-delivery
-overhead (DESIGN.md §8). Each shape runs on:
+Reproduces the paper's microbenchmark setup on four canonical graph
+shapes — **linear chain**, **random DAG**, **wavefront**, **fan-out/join**
+(alternating wide fan-outs and joins, the scheduler's wakeup/fan-out hot
+path) — plus a value-passing chain that measures the dataflow runtime's
+argument-delivery overhead (DESIGN.md §8). Each shape runs on:
 
   ws-fast   the paper's work-stealing pool (FastDeque)
   stdlib    concurrent.futures.ThreadPoolExecutor driving the same graphs
@@ -12,11 +13,14 @@ overhead (DESIGN.md §8). Each shape runs on:
 The discriminating figure is **dependency-counting overhead per task**:
 (wall − serial wall of the same shape) / tasks, in µs — what the scheduler
 costs on top of the bodies. Results land in ``BENCH_graph.json`` so the
-perf trajectory is diffable across PRs.
+perf trajectory is diffable across PRs, and
+``benchmarks/check_graph_regression.py`` gates CI on it.
 
     PYTHONPATH=src python benchmarks/graph_bench.py [--quick] \
-        [--out BENCH_graph.json] [--trace trace.json]
+        [--out BENCH_graph.json] [--trace trace.json] [--threads 1,2,4,8]
 
+``--threads`` sweeps the work-stealing pool over several worker counts
+(serial/stdlib rows are unaffected; stdlib stays at the default).
 ``--trace`` additionally records one wavefront run through the
 Chrome-trace observer (open the file in chrome://tracing).
 """
@@ -87,23 +91,30 @@ def build_wavefront(g: TaskGraph, n: int) -> None:
             tasks[(i, j)] = t
 
 
+def build_fanout_join(g: TaskGraph, width: int, depth: int) -> None:
+    """``depth`` alternating fan-out(``width``)/join stages.
+
+    Each finishing join releases ``width`` successors at once — the
+    fused decrement-and-pick fan-out and the parked-worker wakeup chain
+    are the whole cost here (1 + depth*(width+1) tasks)."""
+    t = g.add(lambda: None, name="fan-root")
+    for d in range(depth):
+        layer = [g.add(lambda: None, name=f"f{d}_{i}").after(t) for i in range(width)]
+        t = g.add(lambda: None, name=f"join{d}").after(*layer)
+
+
 def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], None]]:
     chain_n = 1024 if quick else 8192
     dag_n = 1024 if quick else 8192
     wf_n = 24 if quick else 64
+    fan_w, fan_d = (16, 32) if quick else (32, 128)
     return {
         f"chain({chain_n})": lambda g: build_chain(g, chain_n),
         f"chain-dataflow({chain_n})": lambda g: build_chain_dataflow(g, chain_n),
         f"random-dag({dag_n})": lambda g: build_random_dag(g, dag_n),
         f"wavefront({wf_n}x{wf_n})": lambda g: build_wavefront(g, wf_n),
+        f"fanout-join({fan_w}x{fan_d})": lambda g: build_fanout_join(g, fan_w, fan_d),
     }
-
-
-EXECUTORS: dict[str, Callable[[], object]] = {
-    "ws-fast": lambda: ThreadPool(NUM_THREADS),
-    "stdlib": lambda: StdlibExecutor(NUM_THREADS),
-    "serial": lambda: SerialExecutor(),
-}
 
 
 # -- measurement ----------------------------------------------------------------
@@ -127,12 +138,19 @@ def _time_graph(make_executor, build, repeats: int) -> tuple[float, float, int]:
     return best_wall, best_cpu, ntasks
 
 
-def run_bench(quick: bool) -> list[dict]:
+def run_bench(quick: bool, thread_counts: list[int]) -> list[dict]:
+    """Rows for every shape × executor; ws-fast is swept over
+    ``thread_counts`` (each row carries a ``threads`` field)."""
     repeats = 2 if quick else 3
     rows: list[dict] = []
     serial_wall: dict[str, float] = {}
     for shape, build in shapes(quick).items():
-        for name, make in EXECUTORS.items():
+        executors: list[tuple[str, int, Callable[[], object]]] = [
+            ("ws-fast", t, (lambda t=t: ThreadPool(t))) for t in thread_counts
+        ]
+        executors.append(("stdlib", NUM_THREADS, lambda: StdlibExecutor(NUM_THREADS)))
+        executors.append(("serial", 1, lambda: SerialExecutor()))
+        for name, nthreads, make in executors:
             wall, cpu, ntasks = _time_graph(make, build, repeats)
             if name == "serial":
                 serial_wall[shape] = wall
@@ -140,6 +158,7 @@ def run_bench(quick: bool) -> list[dict]:
                 dict(
                     bench=shape,
                     executor=name,
+                    threads=nthreads,
                     tasks=ntasks,
                     wall_ms=wall * 1e3,
                     cpu_ms=cpu * 1e3,
@@ -171,14 +190,23 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="small sizes / fewer repeats (CI)")
     ap.add_argument("--out", default=str(pathlib.Path(__file__).parent.parent / "BENCH_graph.json"))
     ap.add_argument("--trace", default=None, help="also write a Chrome trace of a wavefront run")
+    ap.add_argument(
+        "--threads",
+        default=str(NUM_THREADS),
+        help="comma-separated worker counts to sweep the ws-fast pool over (default: 4)",
+    )
     args = ap.parse_args()
+    thread_counts = [int(t) for t in args.threads.split(",") if t.strip()]
 
-    rows = run_bench(args.quick)
+    rows = run_bench(args.quick, thread_counts)
 
-    print(f"{'bench':<24}{'executor':<10}{'tasks':>7}{'wall_ms':>10}{'us/task':>9}{'ovh us/task':>13}")
+    print(
+        f"{'bench':<24}{'executor':<10}{'thr':>4}{'tasks':>7}"
+        f"{'wall_ms':>10}{'us/task':>9}{'ovh us/task':>13}"
+    )
     for r in rows:
         print(
-            f"{r['bench']:<24}{r['executor']:<10}{r['tasks']:>7}"
+            f"{r['bench']:<24}{r['executor']:<10}{r['threads']:>4}{r['tasks']:>7}"
             f"{r['wall_ms']:>10.2f}{r['us_per_task']:>9.2f}"
             f"{r.get('overhead_us_per_task', 0.0):>13.2f}"
         )
@@ -192,6 +220,7 @@ def main() -> None:
                     "bench": "graph_bench",
                     "quick": args.quick,
                     "num_threads": NUM_THREADS,
+                    "threads_swept": thread_counts,
                     "cpu_count": os.cpu_count(),
                     "timestamp": time.time(),
                 },

@@ -172,6 +172,13 @@ class CheckpointManager:
         self._pending.append(g)
 
     def wait(self, timeout: float = 600.0) -> None:
+        """Block until every queued save has committed.
+
+        Quiescence detection is paid by this waiter, not the writers: the
+        pool's shard/commit tasks run lock-free and only the worker that
+        completes the last outstanding task performs the idle check that
+        releases us (DESIGN.md §9).
+        """
         self.pool.wait_idle(timeout)
         self._pending.clear()
 

@@ -35,8 +35,11 @@ worker's deque — see ``pool.py``.
 inner deque per distinct priority value ("band"), scanned highest-first.
 Within a band the owner still pops LIFO and thieves steal FIFO, so the
 pool's policy matches the schedule simulator's ``(-priority, -recency)``
-ready key exactly. Most workloads use a single band (priority 0.0), in
-which case the fast path is one dict lookup on top of the plain deque.
+ready key exactly. Most workloads use a single band (priority 0.0), for
+which there is a **single-band fast path** (DESIGN.md §9): until the first
+non-zero priority is pushed, push/pop/steal devolve to the bare inner
+deque — no dict lookups, no band scan. The first non-zero priority
+promotes the instance to banded mode permanently.
 """
 from __future__ import annotations
 
@@ -203,13 +206,22 @@ class ChaseLevDeque:
 
 
 class PriorityDeque:
-    """Priority-banded work-stealing deque.
+    """Priority-banded work-stealing deque with a single-band fast path.
 
     Items are routed to an inner deque per ``item.priority`` (items without
     the attribute land in band 0.0). ``pop``/``steal`` scan bands from the
     highest priority down; within a band the usual deque discipline applies
     (owner LIFO at the bottom, thieves FIFO at the top), reproducing the
     simulator's max-heap-on-(priority, recency) ready queue.
+
+    **Single-band fast path (DESIGN.md §9).** Band 0.0 exists from birth
+    (``_fast``) and the instance starts un-banded: while only priority 0.0
+    has ever been pushed, every operation is exactly one attribute check on
+    top of the bare inner deque — no dict lookup, no band scan. The first
+    non-zero priority *promotes* the instance to banded mode (a one-way
+    transition, taken under ``_lock``). ``_fast`` *is* band 0.0 in the
+    band map, so a racing fast-path push lands in the correct band no
+    matter when the promotion flag becomes visible to it.
 
     Concurrency: the band map only ever grows. Creating a band takes a lock;
     ``_order`` is then *replaced* (never mutated) with a freshly sorted list,
@@ -219,13 +231,20 @@ class PriorityDeque:
     operations inherit the inner deque's lock-free/GIL-atomic guarantees.
     """
 
-    __slots__ = ("_deque_cls", "_bands", "_order", "_lock")
+    __slots__ = ("_deque_cls", "_fast", "_banded", "_bands", "_order", "_lock")
 
     def __init__(self, deque_cls: Callable[[], Any] = None) -> None:
         self._deque_cls = deque_cls or FastDeque
-        self._bands: dict[float, Any] = {}
-        self._order: list[float] = []  # priorities, descending
+        self._fast = self._deque_cls()  # band 0.0, present from birth
+        self._banded = False
+        self._bands: dict[float, Any] = {0.0: self._fast}
+        self._order: list[float] = [0.0]  # priorities, descending
         self._lock = threading.Lock()
+
+    @property
+    def banded(self) -> bool:
+        """True once a non-zero priority has promoted this instance."""
+        return self._banded
 
     def _band(self, priority: float) -> Any:
         band = self._bands.get(priority)
@@ -236,6 +255,7 @@ class PriorityDeque:
                     band = self._deque_cls()
                     self._bands[priority] = band
                     self._order = sorted(self._bands, reverse=True)
+                self._banded = True  # only non-0.0 priorities reach here
         return band
 
     def push(self, item: Any) -> None:
@@ -246,12 +266,18 @@ class PriorityDeque:
         order within a band), so the external-submission path is the same
         operation.
         """
-        self._band(getattr(item, "priority", 0.0)).push(item)
+        priority = getattr(item, "priority", 0.0)
+        if priority == 0.0 and not self._banded:
+            self._fast.push(item)
+            return
+        self._band(priority).push(item)
 
     push_external = push
 
     def pop(self) -> Any:
         """Owner-side pop: highest band first, LIFO within the band."""
+        if not self._banded:
+            return self._fast.pop()
         for pr in self._order:
             item = self._bands[pr].pop()
             if item is not EMPTY:
@@ -260,6 +286,8 @@ class PriorityDeque:
 
     def steal(self) -> Any:
         """Thief-side steal: highest band first, FIFO within the band."""
+        if not self._banded:
+            return self._fast.steal()
         for pr in self._order:
             item = self._bands[pr].steal()
             if item is not EMPTY:
@@ -267,6 +295,8 @@ class PriorityDeque:
         return EMPTY
 
     def __len__(self) -> int:
+        if not self._banded:
+            return len(self._fast)
         # iterate the _order snapshot, not the dict: a concurrent first push
         # to a new band may grow _bands mid-iteration
         return sum(len(self._bands[p]) for p in self._order)

@@ -220,7 +220,14 @@ class TaskGraph:
         from .pool import Future  # local import: graph.py must not cycle
 
         if self._fin is None:
-            self._fin = Task(name=f"{self.name or 'graph'}::done", priority=float("inf"))
+            # Priority 0.0, deliberately: the completion task is only ever
+            # ready once every sink has finished, so boosting it buys
+            # nothing — while any non-zero priority would permanently
+            # promote the pool's deques to banded mode and forfeit the
+            # single-band fast path (DESIGN.md §9) for priority-free
+            # dataflow graphs. When it is the lone newly-ready successor
+            # the fused fan-out runs it inline regardless.
+            self._fin = Task(name=f"{self.name or 'graph'}::done")
             self._fin.propagate_errors = False
         fin = self._fin
         # Reconcile tracked sink membership with the current topology.

@@ -17,6 +17,14 @@ runtime. Inline continuations (paper §2.2) never re-enter a queue, so they
 produce start/finish events but no submit event — exactly the property the
 Chrome trace makes visible as back-to-back slices on one worker lane.
 
+Observation is strictly opt-in on the scheduler hot path (DESIGN.md §9):
+with no observers attached every event site is a single falsy-list check,
+including the fused fan-out in ``_execute`` (which fires ``on_submit`` for
+each successor it pushes, but never for the inline continuation). Park and
+wakeup activity is deliberately *not* an observer event — it is aggregate
+state, exported through the ``parked``/``wakeups`` counters in
+``ThreadPool.stats()``.
+
 Two implementations ship here:
 
 * :class:`StatsObserver` — aggregate counters and per-task-name timing;

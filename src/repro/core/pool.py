@@ -29,12 +29,29 @@ observers (``core/observer.py``) see submit/start/finish/steal lifecycle
 events, which is how the aggregate-stats and Chrome-trace exporters watch a
 run without the pool knowing about either.
 
+**Hot-path discipline (DESIGN.md §9).** The task path takes no locks:
+
+* *idle accounting* is GIL-atomic per-worker claimed/completed cells summed
+  only when an idle check is actually needed — ``wait_idle`` waiters pay
+  for quiescence detection, the task path pays one falsy flag check;
+* *wakeups are targeted*: idle workers spin briefly then park on a
+  per-worker event after registering in a parked-worker deque; a submitter
+  pops **one** sleeper and sets its event (no condition-variable notify
+  storm, no poll tax), woken workers chain further wakeups while surplus
+  work remains, and ``close()`` sets every event so shutdown is prompt;
+* *fan-out is allocation-free*: a fused decrement-and-pick loop over
+  ``task.successors`` keeps the running max-priority successor as the
+  inline continuation and pushes the rest directly onto the worker's own
+  deque — no ready list, no ``max(..., key=...)``, one batch wakeup.
+
 Differences from the C++ original are documented in DESIGN.md §2.1.
 """
 from __future__ import annotations
 
 import os
 import threading
+import time
+from collections import deque as _pydeque
 from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
@@ -42,7 +59,8 @@ from .task import CancelledError, Task, iter_graph
 
 __all__ = ["ThreadPool", "Future"]
 
-_PARK_TIMEOUT_S = 0.05  # bounded park: robust against missed wakeups
+_SPIN_SWEEPS = 2  # extra full sweeps (with GIL yields) before parking
+_PARK_BACKSTOP_S = 0.5  # safety net only; targeted wakeups are the fast path
 
 
 class Future:
@@ -135,11 +153,18 @@ class ThreadPool:
         ``FastDeque`` (default, GIL-atomic / fence-free analogue) or
         ``ChaseLevDeque`` (faithful structural port; used in tests). Each
         worker's deque and the shared inbox are priority-banded instances
-        of this class (``PriorityDeque``).
+        of this class (``PriorityDeque``); with only priority 0.0 in play
+        they stay on the single-band fast path (DESIGN.md §9).
     observers:
         Initial observers (``core/observer.py`` protocol: on_submit /
         on_start / on_finish / on_steal). With no observers attached the
         hot path pays one falsy-list check per event site.
+
+    Concurrency notes (DESIGN.md §9): worker ``i`` is the only writer of
+    cell ``i`` in every counter list; cell ``n`` (external threads) is
+    guarded by ``_ext_lock``. ``_outstanding()`` reads the completed cells
+    *before* the claimed cells, so a zero result proves quiescence — every
+    completion counted implies its claim was counted too.
     """
 
     def __init__(
@@ -156,15 +181,27 @@ class ThreadPool:
         self._deques = [PriorityDeque(deque_cls) for _ in range(n)]
         self._inbox = PriorityDeque(FastDeque)  # MPMC under the GIL
         self._tls = threading.local()
-        self._cond = threading.Condition()
-        self._unfinished = 0  # tasks claimed but not yet completed
         self._stop = False
+        # -- idle accounting: per-worker cells, slot n for external threads.
+        self._claimed = [0] * (n + 1)  # tasks claimed (queued or inlined)
+        self._completed = [0] * (n + 1)  # tasks fully processed
+        self._ext_lock = threading.Lock()  # serializes slot-n increments
+        # -- quiescence protocol: waiters register; the worker that drives
+        # the outstanding count to zero notifies. Zero cost with no waiters.
+        self._idle_cond = threading.Condition()
+        self._idle_waiters = 0
+        # -- error funnel (cold path)
+        self._err_lock = threading.Lock()
         self._first_error: Optional[BaseException] = None
-        # Per-worker statistic cells (satellite fix: no cross-thread
-        # increments; each worker owns one slot, stats() sums on read).
-        # Slot n is for increments from non-worker threads (none today).
+        # -- parked-worker registry: indices of sleeping workers; a
+        # submitter pops one and sets its event (targeted wakeup).
+        self._parked: _pydeque[int] = _pydeque()
+        self._events = [threading.Event() for _ in range(n)]
+        # -- per-worker statistic cells (slot n: non-worker threads)
         self._executed = [0] * (n + 1)
         self._steals = [0] * (n + 1)
+        self._parked_ct = [0] * (n + 1)
+        self._wakeups = [0] * (n + 1)
         self._observers: list[Any] = list(observers)
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), name=f"{name}-{i}", daemon=True)
@@ -264,10 +301,17 @@ class ThreadPool:
         """Block until every claimed task has completed.
 
         Re-raises the first task exception, if any (then clears it).
+        Waiters register on ``_idle_cond`` so the task path can skip the
+        quiescence check entirely while nobody is waiting (DESIGN.md §9).
         """
-        with self._cond:
-            if not self._cond.wait_for(lambda: self._unfinished == 0, timeout):
-                raise TimeoutError("pool did not become idle within timeout")
+        with self._idle_cond:
+            self._idle_waiters += 1
+            try:
+                if not self._idle_cond.wait_for(lambda: self._outstanding() == 0, timeout):
+                    raise TimeoutError("pool did not become idle within timeout")
+            finally:
+                self._idle_waiters -= 1
+        with self._err_lock:
             err, self._first_error = self._first_error, None
         if err is not None:
             raise err
@@ -278,12 +322,16 @@ class ThreadPool:
         self.wait_idle()
 
     def close(self) -> None:
-        """Stop the workers (idempotent). Pending tasks are abandoned."""
-        with self._cond:
-            if self._stop:
-                return
-            self._stop = True
-            self._cond.notify_all()
+        """Stop the workers (idempotent). Pending tasks are abandoned.
+
+        Every parked worker is woken through its event, so close returns
+        after at most the in-flight task bodies — no park-tick wait.
+        """
+        if self._stop:
+            return
+        self._stop = True
+        for ev in self._events:
+            ev.set()
         for t in self._threads:
             t.join()
 
@@ -293,8 +341,15 @@ class ThreadPool:
         Each worker increments only its own cell, so reads race at worst
         with a single in-flight increment per cell — the sum is exact for
         any quiesced pool and monotonically consistent for a live one.
+        ``parked`` counts park events (a worker going to sleep); ``wakeups``
+        counts targeted wakeups issued by submitters and the wake chain.
         """
-        return {"executed": sum(self._executed), "steals": sum(self._steals)}
+        return {
+            "executed": sum(self._executed),
+            "steals": sum(self._steals),
+            "parked": sum(self._parked_ct),
+            "wakeups": sum(self._wakeups),
+        }
 
     def __enter__(self) -> "ThreadPool":
         return self
@@ -310,41 +365,97 @@ class ThreadPool:
 
     # -- scheduling internals ---------------------------------------------------
 
+    def _outstanding(self) -> int:
+        """Claimed-but-not-completed task count.
+
+        Completed cells are summed *first*: every completion counted here
+        had its claim recorded earlier (program order under the GIL), so
+        the later claimed-sum includes it and the difference never goes
+        negative — and a zero difference proves the pool is quiet.
+        """
+        done = sum(self._completed)
+        return sum(self._claimed) - done
+
+    def _wake_one(self, slot: int) -> None:
+        """Targeted wakeup: pop one parked worker, set its event, and
+        attribute the wakeup to the caller's counter cell.
+
+        Call sites guard with ``if self._parked`` so the saturated hot
+        path (nobody parked) never pays the method call.
+        """
+        try:
+            idx = self._parked.popleft()
+        except IndexError:
+            return
+        self._events[idx].set()
+        self._wakeups[slot] += 1
+
     def _schedule(self, task: Task) -> None:
-        """Claim ``task`` (+1 unfinished) and enqueue it.
+        """Claim ``task`` (one per-cell increment) and enqueue it.
 
         From a worker thread: push to the worker's own deque, found through
-        the thread-local variable (paper §2.1). Otherwise: shared inbox
-        (priority-banded FIFO).
+        the thread-local variable (paper §2.1) — lock-free. Otherwise:
+        shared inbox (priority-banded FIFO) with the slot-n claim guarded
+        by ``_ext_lock``. Either way, at most one parked worker is woken.
         """
-        with self._cond:
-            self._unfinished += 1
-            self._cond.notify()
         if self._observers:
             self._notify("on_submit", task)
         idx = getattr(self._tls, "index", None)
         if idx is not None:
+            self._claimed[idx] += 1
             self._deques[idx].push(task)
+            if self._parked:
+                self._wake_one(idx)
         else:
-            self._inbox.push_external(task)
+            with self._ext_lock:
+                self._claimed[-1] += 1
+                self._inbox.push_external(task)
+                if self._parked:
+                    self._wake_one(-1)
 
     def _worker(self, index: int) -> None:
         self._tls.index = index
         own = self._deques[index]
         n = len(self._deques)
+        ev = self._events[index]
+        spins = 0
         while True:
+            if self._stop:
+                return
             task = self._next_task(index, own, n)
-            if task is EMPTY:
-                with self._cond:
-                    if self._stop:
-                        return
-                # Bounded park instead of a racy empty-recheck protocol: a
-                # submit between our sweep and the wait costs at most one
-                # timeout tick.
-                with self._cond:
-                    self._cond.wait(_PARK_TIMEOUT_S)
-            else:
+            if task is not EMPTY:
+                spins = 0
                 self._execute(task, index)
+                continue
+            if spins < _SPIN_SWEEPS:
+                spins += 1
+                time.sleep(0)  # yield the GIL so a producer can publish
+                continue
+            spins = 0
+            # Park protocol: clear our event, *register*, then re-sweep.
+            # Submitters push the task before scanning the registry, so any
+            # push racing our failed sweep is re-observed here; any wakeup
+            # aimed at us after registration leaves the event set, making
+            # the wait below a no-op. One acquisition-free pass — the old
+            # design's double condition-variable lock is gone.
+            ev.clear()
+            self._parked.append(index)
+            self._parked_ct[index] += 1
+            task = self._next_task(index, own, n)
+            if task is not EMPTY:
+                try:
+                    self._parked.remove(index)
+                except ValueError:
+                    pass  # a submitter popped us; its wakeup is consumed below
+                self._execute(task, index)
+                continue
+            if self._stop:  # close() may have raced our registration
+                return
+            ev.wait(_PARK_BACKSTOP_S)  # backstop only: wakeups are targeted
+            try:
+                self._parked.remove(index)
+            except ValueError:
+                pass
 
     def _next_task(self, index: int, own: Any, n: int) -> Any:
         # 1. own deque: highest priority band, LIFO (depth-first) within it
@@ -354,29 +465,38 @@ class ThreadPool:
         # 2. shared inbox (external submissions): highest band, FIFO within
         task = self._inbox.steal()
         if task is not EMPTY:
+            # wake chain: surplus inbox work -> recruit one more sleeper
+            if self._parked and len(self._inbox):
+                self._wake_one(index)
             return task
         # 3. sweep victims, stealing from the top (highest band, FIFO)
         for k in range(1, n):
             victim = (index + k) % n
-            task = self._deques[victim].steal()
+            vd = self._deques[victim]
+            task = vd.steal()
             if task is not EMPTY:
                 self._steals[index] += 1
+                if self._parked and len(vd):
+                    self._wake_one(index)
                 if self._observers:
                     self._notify("on_steal", task, index, victim)
                 return task
         return EMPTY
 
-    def _complete(self, task: Task) -> None:
-        """Fire the task's completion callback (never poisons the pool)."""
-        cb = task.on_done
-        if cb is not None:
-            try:
-                cb(task)
-            except BaseException:  # noqa: BLE001 - observer errors are dropped
-                pass
-
     def _execute(self, first: Task, index: int) -> None:
-        """Run a task, then its ready successors via continuation passing."""
+        """Run a task, then its ready successors via continuation passing.
+
+        The fan-out (paper §2.2) is a fused decrement-and-pick loop: the
+        running maximum-priority ready successor is kept as the inline
+        continuation, every other ready successor is pushed straight onto
+        this worker's own deque, and one batch wakeup recruits a sleeper.
+        No intermediate ready list, no key-function allocation. Inline
+        continuations are claimed *before* the finished task's completion
+        cell is bumped, so the outstanding count never transiently hits
+        zero mid-chain — the quiescence check runs only at chain end.
+        """
+        claimed = self._claimed
+        own = self._deques[index]
         task: Optional[Task] = first
         while task is not None:
             if self._observers:
@@ -392,27 +512,47 @@ class ThreadPool:
             except BaseException as exc:  # noqa: BLE001 - recorded + re-raised in wait
                 task.exception = exc
                 if task.propagate_errors:
-                    with self._cond:
+                    with self._err_lock:
                         if self._first_error is None:
                             self._first_error = exc
             self._executed[index] += 1
             if self._observers:
                 self._notify("on_finish", task, index)
-            self._complete(task)
-            # Fan out (paper §2.2): decrement successors; run ONE newly-ready
-            # successor inline — the highest-priority one, matching the
-            # simulator's ready key — and push the rest.
+            cb = task.on_done
+            if cb is not None:
+                try:
+                    cb(task)
+                except BaseException:  # noqa: BLE001 - callback errors are dropped
+                    pass
+            # Fused fan-out: decrement successors, keep the max-priority
+            # ready one inline, push the rest (claimed as they are pushed).
             inline: Optional[Task] = None
-            ready = [s for s in task.successors if s.decrement()]
-            if ready:
-                inline = max(ready, key=lambda s: s.priority)
-                with self._cond:
-                    self._unfinished += 1
-                for s in ready:
-                    if s is not inline:
-                        self._schedule(s)
-            with self._cond:
-                self._unfinished -= 1
-                if self._unfinished == 0:
-                    self._cond.notify_all()
+            inline_pr = 0.0
+            pushed = 0
+            for s in task.successors:
+                if not s.decrement():
+                    continue
+                claimed[index] += 1
+                if inline is None:
+                    inline = s
+                    inline_pr = s.priority
+                elif s.priority > inline_pr:
+                    if self._observers:
+                        self._notify("on_submit", inline)
+                    own.push(inline)
+                    pushed += 1
+                    inline = s
+                    inline_pr = s.priority
+                else:
+                    if self._observers:
+                        self._notify("on_submit", s)
+                    own.push(s)
+                    pushed += 1
+            if pushed and self._parked:
+                self._wake_one(index)  # the woken worker chains further
+            self._completed[index] += 1
             task = inline
+        # chain over: if anyone is waiting for quiescence, check and notify
+        if self._idle_waiters and self._outstanding() == 0:
+            with self._idle_cond:
+                self._idle_cond.notify_all()

@@ -39,14 +39,18 @@ cancellation) skips its body and propagates the *first* failed input's
 exception — failure flows along the same edges as data.
 
 The C++ implementation uses ``std::atomic<int>`` for the predecessor counter.
-CPython's ``x -= 1`` is three bytecodes (load/sub/store) and *not* atomic, so
-each task carries a tiny lock guarding the decrement — the direct analogue of
-``fetch_sub`` (contended only at the instant a join point completes). The
-same lock arbitrates the cancel-vs-start race (the run/cancel "claim").
+CPython's ``x -= 1`` is three bytecodes (load/sub/store) and *not* atomic.
+Instead of a per-task lock (the pre-§9 design), the countdown is a list of
+``num_predecessors`` tokens and the decrement is a single ``list.pop()`` —
+one GIL-atomic method call, the direct analogue of ``fetch_sub``. The list
+is pre-filled with ``range(n)`` and popped from the end, so exactly one
+caller observes the token ``0``: that caller released the last dependency
+and owns the ready transition. The cancel-vs-start race is arbitrated the
+same way: a one-token claim list popped by whichever of ``run``/``cancel``
+gets there first (DESIGN.md §9).
 """
 from __future__ import annotations
 
-import threading
 from typing import Any, Callable, Iterable, Optional
 
 __all__ = ["Task", "CancelledError"]
@@ -103,7 +107,7 @@ class Task:
         "propagate_errors",
         "on_done",
         "_pending",
-        "_lock",
+        "_claim",
         "_done",
         "_started",
         "_cancelled",
@@ -129,8 +133,12 @@ class Task:
         self.result: Any = None
         self.propagate_errors = True
         self.on_done: Optional[Callable[["Task"], None]] = None
-        self._pending = 0  # runtime countdown; reset() restores it
-        self._lock = threading.Lock()
+        # Runtime countdown: a token list popped once per completed
+        # predecessor; the popper receiving token 0 owns the ready
+        # transition. reset() re-arms it. Roots have an empty countdown.
+        self._pending: list = []
+        # run/cancel claim: one token, popped by whichever side wins.
+        self._claim: list = [0]
         self._done = False
         self._started = False
         self._cancelled = False
@@ -151,7 +159,7 @@ class Task:
             p.successors.append(self)
             self.num_predecessors += 1
             self.inputs.append(p)
-        self._pending = self.num_predecessors
+        self._pending[:] = range(self.num_predecessors)
         return self
 
     def after(self, *predecessors: "Task") -> "Task":
@@ -161,7 +169,7 @@ class Task:
         for p in predecessors:
             p.successors.append(self)
             self.num_predecessors += 1
-        self._pending = self.num_predecessors
+        self._pending[:] = range(self.num_predecessors)
         return self
 
     def precede(self, *successors: "Task") -> "Task":
@@ -201,9 +209,11 @@ class Task:
 
         Clears the previous run's ``result``/``exception`` — results are
         per-run state, so a re-run can never observe a stale value through
-        a dataflow edge.
+        a dataflow edge. Both token lists are refilled in place (no fresh
+        allocation on the re-run path).
         """
-        self._pending = self.num_predecessors
+        self._pending[:] = range(self.num_predecessors)
+        self._claim[:] = (0,)
         self._done = False
         self._started = False
         self._cancelled = False
@@ -213,11 +223,15 @@ class Task:
     def decrement(self) -> bool:
         """Atomically decrement the pending count; True when it reaches zero.
 
-        Analogue of ``fetch_sub(1) == 1`` in the C++ implementation.
+        Analogue of ``fetch_sub(1) == 1`` in the C++ implementation: the
+        single ``list.pop()`` bytecode is the atom, and the caller popping
+        token ``0`` (the last element) wins the ready transition — exactly
+        one winner per arming, with no lock on this per-edge hot path.
         """
-        with self._lock:
-            self._pending -= 1
-            return self._pending == 0
+        try:
+            return self._pending.pop() == 0
+        except IndexError:  # over-decrement: already released (defensive)
+            return False
 
     def cancel(self) -> bool:
         """Cooperatively cancel: skip the body if it has not started yet.
@@ -227,11 +241,17 @@ class Task:
         bookkeeping is unaffected either way — a cancelled task still
         completes (with :class:`CancelledError`) and releases successors.
         """
-        with self._lock:
-            if self._started or self._done:
-                return False
-            self._cancelled = True
-            return True
+        if self._started or self._done:
+            return False
+        try:
+            self._claim.pop()  # the run/cancel race atom
+        except IndexError:
+            # Claim already taken: by run() (cancel lost -> False) or by an
+            # earlier cancel (repeat cancel stays True until the skipped
+            # body completes — idempotent, as the Future contract requires).
+            return self._cancelled
+        self._cancelled = True
+        return True
 
     @property
     def cancelled(self) -> bool:
@@ -243,7 +263,7 @@ class Task:
 
     @property
     def is_ready(self) -> bool:
-        return self._pending == 0 and not self._done
+        return not self._pending and not self._done
 
     @property
     def done(self) -> bool:
@@ -258,13 +278,14 @@ class Task:
         failed input's exception, so failure propagates along dataflow
         edges without poisoning the pool when ``propagate_errors`` is off.
         """
-        with self._lock:
-            if self._cancelled:
-                if self.exception is None:
-                    self.exception = CancelledError("task cancelled")
-                self._done = True
-                return
-            self._started = True
+        try:
+            self._claim.pop()  # the run/cancel race atom
+        except IndexError:  # cancel() claimed it first
+            if self.exception is None:
+                self.exception = CancelledError("task cancelled")
+            self._done = True
+            return
+        self._started = True
         if self.takes_inputs:
             for p in self.inputs:
                 if p.exception is not None:

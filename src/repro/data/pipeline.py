@@ -15,6 +15,12 @@ step index: checkpointable and restorable with no draining protocol.
 Straggler mitigation falls out of work stealing: a slow produce task gets
 picked up by whichever worker goes idle first, and ``depth`` bounds how far
 ahead we buffer.
+
+The pipeline rides the scheduler's idle machinery for free (DESIGN.md §9):
+between steps the pool's workers park on their events instead of polling,
+a lane resubmission issues one targeted wakeup, and :meth:`Prefetcher.close`
+returns as soon as in-flight produce bodies finish — the pool shutdown no
+longer waits out park-timeout ticks.
 """
 from __future__ import annotations
 

@@ -269,6 +269,16 @@ class ServeEngine:
         self.close(drain=not any(exc))
 
     def stats(self) -> dict:
+        """Engine + KV + pool statistics.
+
+        ``pool`` now includes the §9 scheduler counters: ``parked``/
+        ``wakeups`` expose how often engine workers actually slept between
+        decode ticks versus being recruited by a targeted wakeup — the
+        serving-side view of the spin-then-park protocol. The engine's
+        prioritized tasks (decode > prefill) promote the pool's deques to
+        banded mode on first use; everything else in the engine is
+        unchanged on the §9 internals.
+        """
         with self._lock:
             occ = self._occupancy_sum / self._ticks if self._ticks else 0.0
             return {

@@ -74,6 +74,45 @@ def test_sequential_model_equivalence(cls, ops):
     assert len(dq) == len(model)
 
 
+def test_chase_lev_grow_under_concurrent_steals():
+    """Satellite: force ring resizes while thieves hammer the steal lock —
+    no task may be lost or duplicated across _grow's buffer copy."""
+    dq = ChaseLevDeque(capacity=4)
+    N = 30_000
+    n_thieves = 3
+    taken: list[list[int]] = [[] for _ in range(n_thieves + 1)]
+    stop = threading.Event()
+    start = threading.Barrier(n_thieves + 1)
+
+    def thief(slot):
+        start.wait()
+        while not stop.is_set() or len(dq):
+            item = dq.steal()
+            if item is not EMPTY:
+                taken[slot].append(item)
+
+    threads = [threading.Thread(target=thief, args=(i,)) for i in range(n_thieves)]
+    for t in threads:
+        t.start()
+    start.wait()
+    # push in bursts with no owner pops, so the ring repeatedly fills and
+    # grows while the thieves contend on the lock mid-copy
+    for i in range(N):
+        dq.push(i)
+    while True:
+        got = dq.pop()
+        if got is EMPTY:
+            break
+        taken[n_thieves].append(got)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert dq._mask + 1 > 4, "ring never grew — the stress did not trigger _grow"
+    everything = [x for sub in taken for x in sub]
+    assert len(everything) == N, f"lost/duplicated: {len(everything)} != {N}"
+    assert set(everything) == set(range(N))
+
+
 @pytest.mark.parametrize("cls", DEQUES)
 def test_concurrent_owner_and_thieves_no_loss_no_dup(cls):
     """One owner pushes/pops while thieves steal: every item taken exactly once.
@@ -114,3 +153,64 @@ def test_concurrent_owner_and_thieves_no_loss_no_dup(cls):
     everything = [x for sub in taken for x in sub]
     assert len(everything) == N, f"lost/duplicated: {len(everything)} != {N}"
     assert set(everything) == set(range(N))
+
+
+# ---------------------------------------------------------------------------
+# PriorityDeque single-band fast path (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class _Item:
+    __slots__ = ("tag", "priority")
+
+    def __init__(self, tag, priority=0.0):
+        self.tag, self.priority = tag, priority
+
+
+def test_priority_deque_starts_on_fast_path():
+    from repro.core import PriorityDeque
+
+    dq = PriorityDeque()
+    assert not dq.banded
+    for i in range(4):
+        dq.push(_Item(i))
+    assert not dq.banded  # priority 0.0 never promotes
+    assert len(dq) == 4
+    assert dq.pop().tag == 3  # owner LIFO
+    assert dq.steal().tag == 0  # thief FIFO
+    assert len(dq) == 2
+
+
+def test_priority_deque_promotes_on_first_nonzero_priority():
+    from repro.core import EMPTY, PriorityDeque
+
+    dq = PriorityDeque()
+    dq.push(_Item("plain"))
+    assert not dq.banded
+    dq.push(_Item("hi", 2.0))
+    assert dq.banded  # one-way promotion
+    dq.push(_Item("plain2"))  # 0.0 items keep landing in the same band
+    assert len(dq) == 3
+    assert dq.pop().tag == "hi"  # highest band first
+    assert dq.pop().tag == "plain2"
+    assert dq.steal().tag == "plain"
+    assert dq.pop() is EMPTY
+    assert dq.banded  # promotion never reverts
+
+
+def test_priority_deque_fast_path_items_visible_after_promotion():
+    """Items pushed on the fast path are band 0.0 — promotion must not
+    strand them (the fast deque IS the 0.0 band)."""
+    from repro.core import EMPTY, PriorityDeque
+
+    dq = PriorityDeque()
+    for i in range(8):
+        dq.push(_Item(i))
+    dq.push(_Item("lo", -1.0))
+    got = []
+    while True:
+        item = dq.steal()
+        if item is EMPTY:
+            break
+        got.append(item.tag)
+    assert got == list(range(8)) + ["lo"]  # higher band drains first, FIFO

@@ -236,6 +236,77 @@ def test_stats_exact_after_quiesce():
         assert pool.stats()["executed"] == 500
 
 
+def test_stats_expose_parked_and_wakeups():
+    """DESIGN.md §9: park events and targeted wakeups are counted through
+    the same per-worker-cell discipline as executed/steals."""
+    pool = ThreadPool(2)
+    try:
+        s = pool.stats()
+        assert set(s) >= {"executed", "steals", "parked", "wakeups"}
+        assert all(isinstance(v, int) for v in s.values())
+        # idle workers park (spin-then-park, no poll ticks)
+        deadline = time.monotonic() + 5.0
+        while pool.stats()["parked"] < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert pool.stats()["parked"] >= 2
+        # an external submission issues a targeted wakeup to a sleeper.
+        # `parked` is cumulative, so a single submission could race the
+        # brief backstop re-park window — submit until a wakeup lands.
+        executed = 0
+        deadline = time.monotonic() + 5.0
+        while pool.stats()["wakeups"] < 1 and time.monotonic() < deadline:
+            pool.run(lambda: None)
+            executed += 1
+            time.sleep(0.01)
+        assert pool.stats()["wakeups"] >= 1
+        assert pool.stats()["executed"] == executed
+    finally:
+        pool.close()
+
+
+def test_close_returns_promptly_from_parked_workers():
+    """Satellite regression: close() wakes every parked worker through its
+    event — shutdown must not wait out park-timeout ticks."""
+    pool = ThreadPool(4)
+    deadline = time.monotonic() + 5.0
+    while pool.stats()["parked"] < 4 and time.monotonic() < deadline:
+        time.sleep(0.01)  # let all workers reach the parked state
+    t0 = time.monotonic()
+    pool.close()
+    elapsed = time.monotonic() - t0
+    assert elapsed < 0.25, f"close() took {elapsed:.3f}s with parked workers"
+
+
+def test_wait_idle_concurrent_waiters():
+    """The event-based quiescence protocol wakes every registered waiter."""
+    with ThreadPool(2) as pool:
+        release = threading.Event()
+        pool.submit(lambda: release.wait(10))
+        results = []
+
+        def waiter():
+            pool.wait_idle(timeout=10)
+            results.append("idle")
+
+        threads = [threading.Thread(target=waiter) for _ in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.05)  # let the waiters block on a busy pool
+        release.set()
+        for t in threads:
+            t.join(10)
+        assert results == ["idle"] * 3
+
+
+def test_wait_idle_immediate_when_already_quiet():
+    """A waiter on an already-idle pool returns without parking."""
+    with ThreadPool(2) as pool:
+        pool.run(lambda: None)
+        t0 = time.monotonic()
+        pool.wait_idle(timeout=5)
+        assert time.monotonic() - t0 < 0.1
+
+
 # ---------------------------------------------------------------------------
 # priorities (DESIGN.md §3: same ready-key as the schedule simulator)
 # ---------------------------------------------------------------------------
@@ -309,6 +380,19 @@ def test_future_cancel_before_start():
     pool.wait_idle(10)
     with pytest.raises(CancelledError):
         fut.result(5)
+    pool.close()
+
+
+def test_future_cancel_is_idempotent_before_run():
+    """Repeat cancels of a not-yet-run task keep reporting success — the
+    canceller's verdict stays authoritative across calls."""
+    pool, gate = _gated_pool()
+    fut = pool.submit_future(lambda: 42)
+    assert fut.cancel() is True
+    assert fut.cancel() is True  # second call: same verdict, not False
+    assert fut.cancelled()
+    gate.set()
+    pool.wait_idle(10)
     pool.close()
 
 
