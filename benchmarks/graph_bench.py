@@ -4,17 +4,25 @@ Reproduces the paper's microbenchmark setup on four canonical graph
 shapes — **linear chain**, **random DAG**, **wavefront**, **fan-out/join**
 (alternating wide fan-outs and joins, the scheduler's wakeup/fan-out hot
 path) — plus a value-passing chain that measures the dataflow runtime's
-argument-delivery overhead (DESIGN.md §8). Each shape runs on:
+argument-delivery overhead (DESIGN.md §8) and two §10 control-flow
+shapes: **condition-loop** (a weak-edge cycle iterated N times — the
+weak-trigger + re-arm dispatch path) and **subflow-fanout** (a chain of
+``takes_runtime`` spawners, each splicing a dynamic fan-out behind a join
+— the spawn/join dispatch path). Each shape runs on:
 
   ws-fast   the paper's work-stealing pool (FastDeque)
   stdlib    concurrent.futures.ThreadPoolExecutor driving the same graphs
+            (static DAG shapes only: it has no weak-edge/subflow dispatch)
   serial    topological execution on one thread (zero-overhead floor)
 
 The discriminating figure is **dependency-counting overhead per task**:
-(wall − serial wall of the same shape) / tasks, in µs — what the scheduler
-costs on top of the bodies. Results land in ``BENCH_graph.json`` so the
-perf trajectory is diffable across PRs, and
-``benchmarks/check_graph_regression.py`` gates CI on it.
+(wall − serial wall of the same shape) / tasks-executed, in µs — what the
+scheduler costs on top of the bodies. Control-flow shapes execute more
+tasks than the graph holds (loop passes, spawned tasks); builders return
+the executed count. Results land in ``BENCH_graph.json`` so the perf
+trajectory is diffable across PRs, and
+``benchmarks/check_graph_regression.py`` gates CI on it — including the
+§10 shapes, so the new dispatch paths cannot silently regress.
 
     PYTHONPATH=src python benchmarks/graph_bench.py [--quick] \
         [--out BENCH_graph.json] [--trace trace.json] [--threads 1,2,4,8]
@@ -33,7 +41,7 @@ import pathlib
 import random
 import sys
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.core import ChromeTraceObserver, SerialExecutor, TaskGraph, ThreadPool
 
@@ -103,17 +111,68 @@ def build_fanout_join(g: TaskGraph, width: int, depth: int) -> None:
         t = g.add(lambda: None, name=f"join{d}").after(*layer)
 
 
-def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], None]]:
+def build_condition_loop(g: TaskGraph, body_len: int, iters: int) -> int:
+    """Weak-edge cycle: entry -> body chain -> condition, looped ``iters``
+    times. Exercises the §10 slow path end to end: per-pass re-arm, weak
+    trigger of the loop head, counted quiescence. Returns executed count
+    (the loop runs the ``body_len + 1`` cycle tasks once per pass)."""
+    state = {"i": 0}
+    entry = g.add(lambda: state.__setitem__("i", 0), name="entry")
+    body = g.chain([lambda: None] * body_len, name="body")
+    body[0].after(entry)
+
+    def more() -> int:
+        state["i"] += 1
+        return 0 if state["i"] < iters else 1
+
+    cond = g.add(more, kind="condition", name="more")
+    cond.after(body[-1])
+    cond.precede(body[0])
+    return 1 + iters * (body_len + 1)
+
+
+def build_subflow_fanout(g: TaskGraph, width: int, depth: int) -> int:
+    """Chain of ``depth`` runtime tasks, each spawning a ``width``-task
+    subflow joined before the next spawner. Exercises subflow splice, join
+    wiring and the spawned tasks' dispatch. Returns executed count
+    (spawner + width spawned + hidden join, per stage)."""
+
+    def spawn(rt) -> None:
+        for i in range(width):
+            rt.add(lambda: None, name=f"s{i}")
+
+    prev = None
+    for d in range(depth):
+        s = g.add(spawn, name=f"spawn{d}", takes_runtime=True)
+        if prev is not None:
+            s.after(prev)
+        prev = s
+    return depth * (width + 2)
+
+
+# shapes the stdlib executor cannot run (no weak-edge / subflow dispatch)
+STDLIB_UNSUPPORTED = ("condition-loop", "subflow-fanout")
+
+
+def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], Optional[int]]]:
+    """Shape name -> builder. A builder returns the *executed*-task count
+    when it differs from ``len(graph)`` (control-flow shapes), else None."""
     chain_n = 1024 if quick else 8192
     dag_n = 1024 if quick else 8192
     wf_n = 24 if quick else 64
     fan_w, fan_d = (16, 32) if quick else (32, 128)
+    loop_body, loop_iters = (8, 64) if quick else (16, 256)
+    sub_w, sub_d = (16, 32) if quick else (32, 128)
     return {
         f"chain({chain_n})": lambda g: build_chain(g, chain_n),
         f"chain-dataflow({chain_n})": lambda g: build_chain_dataflow(g, chain_n),
         f"random-dag({dag_n})": lambda g: build_random_dag(g, dag_n),
         f"wavefront({wf_n}x{wf_n})": lambda g: build_wavefront(g, wf_n),
         f"fanout-join({fan_w}x{fan_d})": lambda g: build_fanout_join(g, fan_w, fan_d),
+        f"condition-loop({loop_body}x{loop_iters})": lambda g: build_condition_loop(
+            g, loop_body, loop_iters
+        ),
+        f"subflow-fanout({sub_w}x{sub_d})": lambda g: build_subflow_fanout(g, sub_w, sub_d),
     }
 
 
@@ -122,10 +181,11 @@ def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], None]]:
 
 def _time_graph(make_executor, build, repeats: int) -> tuple[float, float, int]:
     """Best-of-N wall/CPU seconds; the graph is built once and *re-run*
-    each repeat (the re-runnable lifecycle the runtime guarantees)."""
+    each repeat (the re-runnable lifecycle the runtime guarantees). The
+    task count is the number of task executions per run — builders report
+    it when control flow makes it exceed ``len(graph)``."""
     g = TaskGraph()
-    build(g)
-    ntasks = len(g)
+    ntasks = build(g) or len(g)
     best_wall, best_cpu = float("inf"), float("inf")
     with make_executor() as ex:
         for _ in range(repeats):
@@ -148,7 +208,8 @@ def run_bench(quick: bool, thread_counts: list[int]) -> list[dict]:
         executors: list[tuple[str, int, Callable[[], object]]] = [
             ("ws-fast", t, (lambda t=t: ThreadPool(t))) for t in thread_counts
         ]
-        executors.append(("stdlib", NUM_THREADS, lambda: StdlibExecutor(NUM_THREADS)))
+        if not shape.startswith(STDLIB_UNSUPPORTED):
+            executors.append(("stdlib", NUM_THREADS, lambda: StdlibExecutor(NUM_THREADS)))
         executors.append(("serial", 1, lambda: SerialExecutor()))
         for name, nthreads, make in executors:
             wall, cpu, ntasks = _time_graph(make, build, repeats)

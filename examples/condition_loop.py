@@ -1,0 +1,89 @@
+"""Condition-task loops (DESIGN.md §10): iterative convergence in the graph.
+
+Jacobi-style relaxation of a 1-D heat profile: one pass of the stencil is a
+fan-out of row tasks, and a **condition task** closes the cycle with a weak
+back-edge — while the residual is above tolerance it returns branch 0 (loop)
+and the next pass starts inside the worker pool, with no Python-side
+resubmission; once converged it returns out-of-range and the run drains.
+A condition releases exactly one branch, so the back edge re-enters through
+a single ``reenter`` task that fans out strongly to every row:
+
+    entry -> reenter -> [rows ...] -> residual -> converged? --(exit)--> done
+                ^_________________________________________|
+                          branch 0 (weak back-edge)
+
+Also shows the Python-side companion, ``Executor.run_until``, for loops
+whose convergence check lives outside the graph.
+
+    PYTHONPATH=src python examples/condition_loop.py
+"""
+import numpy as np
+
+from repro.core import Executor, TaskGraph
+
+
+def in_graph_loop(ex: Executor, n: int = 128, tol: float = 1e-4) -> None:
+    field = np.linspace(0.0, 1.0, n) + np.sin(np.linspace(0, 20, n)) * 0.3
+    state = {"passes": 0, "residual": np.inf}
+    chunks = 4
+    bounds = [
+        (max(i * n // chunks, 1), min((i + 1) * n // chunks, n - 1)) for i in range(chunks)
+    ]
+    scratch = field.copy()
+
+    g = TaskGraph("jacobi")
+    entry = g.add(lambda: state.update(passes=0, residual=np.inf), name="entry")
+    # the loop's single re-entry point: reached strongly from entry on the
+    # first pass, weakly from the condition's back-edge on every other
+    reenter = g.add(None, name="reenter")
+    reenter.after(entry)
+
+    def relax(lo: int, hi: int) -> None:
+        scratch[lo:hi] = 0.5 * (field[lo - 1 : hi - 1] + field[lo + 1 : hi + 1])
+
+    rows = [g.add(lambda b=b: relax(*b), name=f"rows{i}") for i, b in enumerate(bounds)]
+    for r in rows:
+        r.after(reenter)
+
+    def residual() -> None:
+        state["residual"] = float(np.abs(scratch[1:-1] - field[1:-1]).max())
+        field[1:-1] = scratch[1:-1]
+        state["passes"] += 1
+
+    res = g.add(residual, name="residual")
+    res.after(*rows)
+
+    def converged() -> int:
+        return 1 if state["residual"] < tol else 0  # 1 = out-of-range = exit
+
+    cond = g.add(converged, kind="condition", name="converged?")
+    cond.after(res)
+    cond.precede(reenter)  # branch 0: weak back-edge -> next pass
+
+    g.validate()  # condition-closed cycles are legal; strong cycles are not
+    ex.run(g).result(120)
+    print(
+        f"in-graph condition loop: converged in {state['passes']} passes "
+        f"(residual {state['residual']:.2e}, graph of {len(g)} tasks, 1 submission)"
+    )
+    assert state["residual"] < tol
+
+
+def run_until_loop(ex: Executor, x0: float = 1234.5) -> None:
+    # Newton iteration for sqrt(x0); the convergence check lives caller-side
+    state = {"y": x0}
+    g = TaskGraph("newton")
+    g.add(lambda: state.update(y=0.5 * (state["y"] + x0 / state["y"])))
+    rounds = ex.run_until(g, lambda: abs(state["y"] ** 2 - x0) < 1e-9, max_rounds=64)
+    print(f"run_until: sqrt({x0}) = {state['y']:.6f} in {rounds} rounds")
+    assert abs(state["y"] - np.sqrt(x0)) < 1e-6
+
+
+def main() -> None:
+    with Executor(4) as ex:
+        in_graph_loop(ex)
+        run_until_loop(ex)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,19 @@
-"""Dataflow runtime tour (DESIGN.md §8): value-passing graphs, composition,
-re-running, and Chrome-trace observation.
+"""Dataflow runtime tour (DESIGN.md §8, §10): value-passing graphs,
+composition, re-running, Chrome-trace observation and the asyncio bridge —
+all through the :class:`Executor` facade (the post-§10 front door; the raw
+``ThreadPool``/``as_future`` surface still works underneath).
 
     PYTHONPATH=src python examples/dataflow.py [trace.json]
 
 Pass a path to also write a chrome://tracing-loadable trace of the run.
 """
+import asyncio
 import sys
 
-from repro.core import ChromeTraceObserver, StatsObserver, TaskGraph, ThreadPool
+from repro.core import ChromeTraceObserver, Executor, StatsObserver, TaskGraph
 
 
-def diamond_demo(pool: ThreadPool) -> None:
+def diamond_demo(ex: Executor) -> None:
     # results flow along edges as ordered arguments — no captured dicts
     g = TaskGraph("diamond")
     a = g.add(lambda: 2, name="a")
@@ -18,12 +21,12 @@ def diamond_demo(pool: ThreadPool) -> None:
     c = g.then(a, lambda x: x * 10, name="c")  # c(a())
     d = g.gather([b, c], lambda bx, cx: bx + cx, name="d")  # d(b(), c())
     for round_idx in range(3):  # build once, run N times
-        g.as_future(pool).result(10)
+        ex.run(g).result(10)
         print(f"run {round_idx}: (2+1) + (2*10) = {d.result}")
     assert g.run_count == 3
 
 
-def compose_demo(pool: ThreadPool) -> None:
+def compose_demo(ex: Executor) -> None:
     # a subgraph embeds as a module behind source/sink boundary tasks;
     # the sink gathers the subgraph's results as a list
     shards = TaskGraph("shards")
@@ -34,17 +37,31 @@ def compose_demo(pool: ThreadPool) -> None:
     m = outer.compose(shards)
     m.source.after(prep)
     total = outer.then(m.sink, sum, name="total")
-    outer.as_future(pool).result(10)
+    ex.run(outer).result(10)
     print(f"sum of squares via composed module: {total.result}")
+
+
+def asyncio_demo(ex: Executor) -> None:
+    # co_run awaits pool work from an event loop without blocking it
+    async def serve_two():
+        g1, g2 = TaskGraph(), TaskGraph()
+        r1 = g1.add(lambda: sum(range(1000)))
+        r2 = g2.add(lambda: max(range(1000)))
+        await asyncio.gather(ex.co_run(g1), ex.co_run(g2))
+        return r1.result, r2.result
+
+    s, m = asyncio.run(serve_two())
+    print(f"awaited two graphs from asyncio: sum={s} max={m}")
 
 
 def main() -> None:
     stats = StatsObserver()
     tracer = ChromeTraceObserver()
-    with ThreadPool(4, observers=[stats, tracer]) as pool:
-        diamond_demo(pool)
-        compose_demo(pool)
-        num_workers = pool.num_threads
+    with Executor(4, observers=[stats, tracer]) as ex:
+        diamond_demo(ex)
+        compose_demo(ex)
+        asyncio_demo(ex)
+        num_workers = ex.num_threads
     print("pool stats:", stats.summary())
     if len(sys.argv) > 1:
         tracer.save(sys.argv[1], num_workers=num_workers)

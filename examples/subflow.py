@@ -1,0 +1,57 @@
+"""Dynamic subflows (DESIGN.md §10): fan-out sized by data seen at runtime.
+
+A map-style aggregation over a "dataset" whose partitioning is unknown when
+the graph is built: a single ``takes_runtime`` task inspects the data
+*inside a worker* and spawns one reduce task per discovered partition plus
+a gather — the subflow. The executor joins the subflow before releasing
+the spawner's successor, so ``report`` always sees every partial sum
+(join-before-successor). ``to_dot()`` renders the spawned tasks as a
+cluster after the run.
+
+    PYTHONPATH=src python examples/subflow.py
+"""
+import numpy as np
+
+from repro.core import Executor, Runtime, TaskGraph
+
+
+def make_dataset(seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    nparts = int(rng.integers(3, 9))  # unknown at graph-build time
+    return {f"part{i}": rng.standard_normal(int(rng.integers(10_000, 50_000))) for i in range(nparts)}
+
+
+def main() -> None:
+    g = TaskGraph("partition-sum")
+    load = g.add(make_dataset, name="load")
+
+    def spawn_reducers(rt: Runtime, dataset: dict) -> object:
+        # one task per partition — sized by the data this worker just saw
+        parts = [
+            rt.add(lambda a=arr: float(np.square(a).sum()), name=f"reduce:{key}")
+            for key, arr in dataset.items()
+        ]
+        return rt.gather(parts, name="partials")
+
+    spawner = g.add(spawn_reducers, name="spawn", takes_inputs=True, takes_runtime=True)
+    spawner.succeed(load)
+
+    def report(partials: list) -> float:
+        # the spawner's value is the gather's result — the join unwrapped it
+        print(f"subflow spawned {len(partials)} reducers; sum of squares = {sum(partials):.2f}")
+        return sum(partials)
+
+    total = g.then(spawner, report, name="report")
+
+    with Executor(4) as ex:
+        ex.run(g).result(60)
+        dataset = load.result
+        expect = sum(float(np.square(a).sum()) for a in dataset.values())
+        assert abs(total.result - expect) < 1e-6 * max(1.0, expect)
+        dot = g.to_dot()
+        assert 'subgraph "cluster_' in dot
+        print(f"to_dot renders the subflow as a cluster ({len(spawner._spawned)} spawned tasks)")
+
+
+if __name__ == "__main__":
+    main()

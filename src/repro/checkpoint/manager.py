@@ -6,14 +6,18 @@ Format: one directory per step —
         <leaf-path>.bin         raw little-endian bytes per leaf
     step_000042/                (atomic rename on commit)
 
-Async saves run as a *dataflow* task graph on the work-stealing pool
-(DESIGN.md §8): the per-leaf shard writers live in their own subgraph,
-composed behind source/sink boundary tasks, and each writer *returns* its
-manifest entry — the composed sink gathers the entries and passes them to
-the commit task as a value, so no shared manifest dict is mutated from
-worker threads:
+Async saves run as a *dataflow* task graph on the work-stealing pool,
+submitted through the :class:`~repro.core.Executor` facade. The per-leaf
+shard writers are a **dynamic subflow** (DESIGN.md §10): a single
+``takes_runtime`` task spawns one writer per leaf *from inside the
+worker*, sized by the actual leaf count of the tree being saved — no
+statically composed subgraph — and each writer *returns* its manifest
+entry. The subflow's gather task collects the entries, the join protocol
+guarantees they are all present before the spawner's successor runs, and
+the commit task receives them as a value, so no shared manifest dict is
+mutated from worker threads:
 
-    prepare -> [shards::src -> w:leaf... -> shards::sink] -> commit(+gc)
+    prepare -> shard{ w:leaf... -> entries }::join -> commit(+gc)
 
 so serialization and IO overlap training. Restore is elastic: leaves are
 loaded as numpy and ``jax.device_put`` re-shards them onto WHATEVER mesh the
@@ -31,7 +35,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
-from repro.core import TaskGraph, ThreadPool
+from repro.core import Executor, Runtime, TaskGraph, ThreadPool
 
 _SEP = "."
 
@@ -117,6 +121,7 @@ class CheckpointManager:
         self.root.mkdir(parents=True, exist_ok=True)
         self.pool = pool or ThreadPool(2)
         self._own_pool = pool is None
+        self._exec = Executor(pool=self.pool)
         self.keep = keep
         self._pending: list = []
 
@@ -145,18 +150,25 @@ class CheckpointManager:
                 "dtype": str(arr.dtype),
             }
 
-        # Shard writers as their own subgraph; each returns its manifest
-        # entry, delivered to commit through the composed sink's gather.
-        shards = TaskGraph(f"ckpt-{step}-shards")
-        for key, arr in flat.items():
-            shards.add(lambda k=key, a=arr: write_leaf(k, a), name=f"w:{key[:24]}")
+        # Shard writers as a dynamic subflow (DESIGN.md §10): one writer
+        # per leaf, spawned inside the worker and sized by the leaf count
+        # of THIS tree; the subflow's gather collects the manifest entries
+        # and the join guarantees commit sees all of them.
+        def shard(rt: Runtime):
+            writers = [
+                rt.add(lambda k=key, a=arr: write_leaf(k, a), name=f"w:{key[:24]}")
+                for key, arr in flat.items()
+            ]
+            return rt.gather(writers, name="entries")
 
         g = TaskGraph(f"ckpt-{step}")
         prep = g.add(prepare, name="prepare")
-        module = g.compose(shards, name="shards")
-        module.source.after(prep)
+        shard_t = g.add(shard, name="shard", takes_runtime=True)
+        shard_t.after(prep)
 
         def commit(entries: list) -> None:
+            # the spawner's value IS the gathered entry list: the join
+            # unwrapped the subflow task the body returned (DESIGN.md §10)
             manifest = {"leaves": dict(entries), "meta": {**(meta or {}), "step": step}}
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             if directory.exists():
@@ -167,20 +179,42 @@ class CheckpointManager:
                 shutil.rmtree(tmp, ignore_errors=True)  # lost a same-step race
             self._gc()
 
-        g.then(module.sink, commit, name="commit")
-        self.pool.submit(g)
-        self._pending.append(g)
+        g.then(shard_t, commit, name="commit")
+        self._pending.append(self._exec.run(g))
 
     def wait(self, timeout: float = 600.0) -> None:
-        """Block until every queued save has committed.
+        """Block until every save queued by *this manager* has committed.
 
-        Quiescence detection is paid by this waiter, not the writers: the
-        pool's shard/commit tasks run lock-free and only the worker that
-        completes the last outstanding task performs the idle check that
-        releases us (DESIGN.md §9).
+        Waits on the per-save run futures, not pool-wide quiescence — on a
+        shared pool, other residents (e.g. §10 prefetch lanes looping
+        inside the workers) must not fail a wait whose saves are already
+        durable. Raises :class:`TimeoutError` instead of proceeding on an
+        unfinished save (§10 satellite): a caller that treats "wait
+        returned" as "checkpoint durable" must never be lied to by a
+        silent timeout. A save that *failed* re-raises its error here;
+        unfinished saves stay tracked for a retried wait.
         """
-        self.pool.wait_idle(timeout)
-        self._pending.clear()
+        deadline = time.monotonic() + timeout
+        pending, self._pending = self._pending, []
+        for i, fut in enumerate(pending):
+            try:
+                fut.result(max(0.0, deadline - time.monotonic()))
+            except TimeoutError:
+                if not fut.done():  # genuinely still running: keep tracking
+                    self._pending = pending[i:] + self._pending
+                    raise TimeoutError(
+                        f"checkpoint saves still in flight after {timeout}s"
+                    ) from None
+                # resolved while we timed out: take the save's own verdict —
+                # a commit that landed microseconds late is still durable
+                try:
+                    fut.result(0)
+                except BaseException:
+                    self._pending = pending[i + 1 :] + self._pending
+                    raise
+            except BaseException:
+                self._pending = pending[i + 1 :] + self._pending
+                raise
 
     # -- restore ---------------------------------------------------------------
 

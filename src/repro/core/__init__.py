@@ -1,11 +1,16 @@
 """repro.core — the paper's contribution: a work-stealing thread pool capable
 of running task graphs (Puyda 2024), plus the trace-time schedule simulator
-that adapts its execution policy to statically-scheduled TPU programs."""
+that adapts its execution policy to statically-scheduled TPU programs.
+
+The public front door is the :class:`Executor` facade (DESIGN.md §10):
+condition tasks, dynamic subflows, futures and the asyncio bridge all hang
+off it. The lower layers remain importable for drop-in paper fidelity."""
 from .baseline import NaiveThreadPool, SerialExecutor
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
-from .graph import CycleError, Module, TaskGraph
+from .executor import Executor
+from .graph import CycleError, Module, Runtime, TaskGraph
 from .observer import ChromeTraceObserver, PoolObserver, StatsObserver
-from .pool import Future, ThreadPool
+from .pool import Future, RunContext, ThreadPool
 from .schedule import (
     PipelineOp,
     SimResult,
@@ -28,8 +33,11 @@ __all__ = [
     "PriorityDeque",
     "CycleError",
     "Module",
+    "Runtime",
     "TaskGraph",
+    "Executor",
     "Future",
+    "RunContext",
     "ThreadPool",
     "PoolObserver",
     "StatsObserver",

@@ -54,20 +54,22 @@ class NaiveThreadPool:
             for t in graph:
                 t.reset()
             for t in graph:
-                if t.num_predecessors == 0:
+                if t.is_source:
                     self._push(t)
 
     def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
         self.submit(work)
         self.wait_idle()
 
-    def wait_idle(self, timeout: Optional[float] = None) -> None:
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """True once idle, False on timeout (matching ``ThreadPool``)."""
         with self._cond:
             if not self._cond.wait_for(lambda: self._unfinished == 0, timeout):
-                raise TimeoutError("pool did not become idle within timeout")
+                return False
             err, self._first_error = self._first_error, None
         if err is not None:
             raise err
+        return True
 
     def close(self) -> None:
         with self._cond:
@@ -126,9 +128,21 @@ class NaiveThreadPool:
 
 
 class SerialExecutor:
-    """Topological execution on the calling thread (overhead floor)."""
+    """Topological execution on the calling thread (overhead floor).
+
+    Supports the §10 task kinds too — condition branches/loops and
+    runtime-spawned subflows — so the serial floor exists for every
+    benchmark shape. ``NaiveThreadPool`` deliberately does not: it models
+    the pre-work-stealing static design the paper argues against.
+    """
 
     def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        from .graph import (  # deferred: baseline stays below graph.py
+            Runtime,
+            select_branch,
+            splice_subflow,
+        )
+
         if isinstance(work, Task):
             tasks = iter_graph([work])
         elif callable(work):
@@ -136,17 +150,34 @@ class SerialExecutor:
             return
         else:
             tasks = iter_graph(list(work))
+        has_cond = False
         for t in tasks:
             t.reset()
-        stack = [t for t in tasks if t.num_predecessors == 0]
+            if t.kind == "condition":
+                has_cond = True
+        stack = [t for t in tasks if t.is_source]
         while stack:
             t = stack.pop()
-            t.run()
+            rt = Runtime(t) if t.takes_runtime else None
+            t.run(rt)
             if t.on_done is not None:
                 try:
                     t.on_done(t)
                 except BaseException:  # noqa: BLE001 - observer errors dropped
                     pass
+            if has_cond:
+                t.rearm()  # single-threaded: re-arm unconditionally
+            if rt is not None and rt.sub.tasks and t.exception is None:
+                sub, join = splice_subflow(t, rt.sub)  # shared join protocol
+                t._spawned = sub
+                roots = [s for s in sub if s.is_source]
+                stack.extend(roots if roots else [join])
+                continue
+            if t.kind == "condition":
+                branch = select_branch(t)  # shared §10 selection rule
+                if branch is not None:
+                    stack.append(branch)
+                continue
             for s in t.successors:
                 if s.decrement():
                     stack.append(s)
@@ -154,8 +185,8 @@ class SerialExecutor:
     def close(self) -> None:  # interface parity
         pass
 
-    def wait_idle(self, timeout: Optional[float] = None) -> None:
-        pass
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        return True
 
     def __enter__(self) -> "SerialExecutor":
         return self

@@ -19,6 +19,14 @@ Beyond the container (DESIGN.md §8), a ``TaskGraph`` is the unit of the
   re-arms every task (counters, results, cancellation), ``run_count``
   tracks submissions, and each :meth:`as_future` call returns a fresh
   future for that run. Build once, run N times.
+
+Control flow (DESIGN.md §10) rides on the same container: condition tasks
+(``add(fn, kind="condition")``) branch and may close cycles through weak
+back-edges — :meth:`validate` permits exactly those cycles — and
+``takes_runtime`` tasks receive a :class:`Runtime` handle to spawn joined
+subflows sized by runtime data. ``as_future`` switches to counted
+completion for graphs containing condition tasks (a hidden sink task
+cannot terminate a graph whose branches legitimately never run).
 """
 from __future__ import annotations
 
@@ -27,11 +35,23 @@ from typing import Any, Callable, Iterator, Optional, Sequence
 
 from .task import CancelledError, Task
 
-__all__ = ["TaskGraph", "Module", "CycleError"]
+__all__ = ["TaskGraph", "Module", "Runtime", "CycleError"]
 
 
 class CycleError(ValueError):
     """The task graph contains a dependency cycle."""
+
+
+class _FinTask(Task):
+    """Hidden ``as_future`` completion task.
+
+    A distinct type (not just a name convention) so sink detection,
+    ``validate`` and external-task adoption can recognize *any* graph's
+    completion task — including a stale one left wired by a previous
+    anonymous wrapper graph — and never mistake it for a real successor.
+    """
+
+    __slots__ = ()
 
 
 class Module:
@@ -58,6 +78,136 @@ class Module:
         return f"Module({self.sub.name!r}, tasks={len(self.sub)})"
 
 
+class Runtime:
+    """Handle passed to a ``takes_runtime`` task's body (DESIGN.md §10).
+
+    The body builds a *subflow* through this handle — a fresh subgraph
+    sized by data only known at execution time::
+
+        def shard(rt: Runtime):
+            writers = [rt.add(lambda p=p: write(p)) for p in discover()]
+            return rt.gather(writers)   # spawner's value = gathered results
+
+    After the body returns, the executor splices the subflow in: the
+    subflow runs, a hidden join task waits on its sinks, and only then are
+    the spawning task's successors released (**join-before-successor**).
+    The first subflow failure is adopted as the spawner's exception, and a
+    body returning one of its own subflow tasks is *unwrapped* — the
+    spawner's dataflow value becomes that task's result, so downstream
+    consumers receive plain values. The builder API mirrors
+    :class:`TaskGraph`; tasks default to the spawner's priority band so a
+    prioritized parent doesn't fan out at band 0.
+    """
+
+    __slots__ = ("task", "sub")
+
+    def __init__(self, task: Task) -> None:
+        self.task = task
+        self.sub = TaskGraph(f"{task.name or 'task'}::subflow")
+
+    def add(
+        self,
+        fn: Optional[Callable[..., Any]] = None,
+        *,
+        name: str = "",
+        priority: Optional[float] = None,
+        takes_inputs: bool = False,
+        kind: str = "static",
+        takes_runtime: bool = False,
+    ) -> Task:
+        """Spawn one subflow task. Nested ``takes_runtime`` spawners are
+        supported, as is ``kind="condition"`` with two constraints: acyclic
+        branching only (subflow tasks are not re-armed, so weak *cycles*
+        must live in the outer graph), and branches must re-converge before
+        the subflow's sinks (the hidden join waits on every sink — a sink
+        reachable only through an untaken branch would never release it)."""
+        t = self.sub.add(
+            fn,
+            name=name,
+            priority=self.task.priority if priority is None else priority,
+            takes_inputs=takes_inputs,
+            kind=kind,
+            takes_runtime=takes_runtime,
+        )
+        t._explicit_pr = self.task._explicit_pr if priority is None else True
+        return t
+
+    def then(self, predecessor: Task, fn: Callable[..., Any], *, name: str = "") -> Task:
+        t = self.add(fn, name=name, takes_inputs=True)
+        t.succeed(predecessor)
+        return t
+
+    def gather(
+        self,
+        predecessors: Sequence[Task],
+        fn: Optional[Callable[..., Any]] = None,
+        *,
+        name: str = "gather",
+    ) -> Task:
+        collect = fn if fn is not None else (lambda *vs: list(vs))
+        t = self.add(collect, name=name, takes_inputs=True)
+        t.succeed(*predecessors)
+        return t
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Runtime({self.task.name!r}, spawned={len(self.sub)})"
+
+
+def select_branch(task: Task) -> Optional[Task]:
+    """The §10 condition-selection rule (shared by ``ThreadPool`` and
+    ``SerialExecutor``): a finished condition task releases the successor
+    its integer result names, or nothing — on a failed/cancelled pass, a
+    non-``int`` result, or an out-of-range index (the loop-exit idiom)."""
+    sel = task.result if task.exception is None else None
+    if isinstance(sel, bool):
+        sel = int(sel)
+    if isinstance(sel, int) and 0 <= sel < len(task.successors):
+        return task.successors[sel]
+    return None
+
+
+def splice_subflow(spawner: Task, sub: "TaskGraph") -> tuple[list[Task], Task]:
+    """Wire a spawned subflow's hidden join (shared by ``ThreadPool`` and
+    ``SerialExecutor`` — the join-before-successor protocol lives here
+    exactly once). Returns ``(subflow_tasks, join)``.
+
+    The join takes over the spawner's successor list and waits strongly on
+    every subflow sink; its completion callback *unwraps* a body that
+    returned one of its own subflow tasks (the spawner's dataflow value
+    becomes that task's result) and adopts the first subflow failure as
+    the spawner's exception. The caller schedules the subflow's sources
+    (or the join itself when there are none) and attaches any
+    executor-specific state (run context, priority dispatch flags).
+    """
+    tasks = list(sub.tasks)
+    join = Task(
+        name=f"{spawner.name or 'task'}::join",
+        priority=spawner.priority if spawner._explicit_pr else None,
+    )
+    join.propagate_errors = False
+    join.successors = list(spawner.successors)
+    join.after(*[t for t in tasks if not t.successors])
+
+    def _finish_join(_j: Task) -> None:
+        res = spawner.result
+        if isinstance(res, Task) and res.graph is sub:
+            spawner.result = res.result
+        if spawner.exception is not None:
+            return
+        first_cancel: Optional[BaseException] = None
+        for st in tasks:
+            if st.exception is None:
+                continue
+            if not isinstance(st.exception, CancelledError):
+                spawner.exception = st.exception
+                return
+            first_cancel = first_cancel or st.exception
+        spawner.exception = first_cancel
+
+    join.on_done = _finish_join
+    return tasks, join
+
+
 class TaskGraph:
     def __init__(self, name: str = "") -> None:
         self.name = name
@@ -65,6 +215,7 @@ class TaskGraph:
         self._fin: Optional[Task] = None  # hidden as_future completion task
         self._sinks: dict[int, Task] = {}  # tasks currently wired into _fin
         self._run_count = 0
+        self._num_conditions = 0
 
     # -- construction -----------------------------------------------------------
 
@@ -73,18 +224,28 @@ class TaskGraph:
         fn: Optional[Callable[..., Any]] = None,
         *,
         name: str = "",
-        priority: float = 0.0,
+        priority: Optional[float] = None,
         takes_inputs: bool = False,
+        kind: str = "static",
+        takes_runtime: bool = False,
     ) -> Task:
         t = Task(
             fn,
             name=name or f"t{len(self.tasks)}",
             priority=priority,
             takes_inputs=takes_inputs,
+            kind=kind,
+            takes_runtime=takes_runtime,
         )
         t.graph = self
         self.tasks.append(t)
+        if t.is_condition:
+            self._num_conditions += 1
         return t
+
+    @property
+    def has_conditions(self) -> bool:
+        return self._num_conditions > 0
 
     def emplace_back(self, fn: Optional[Callable[[], Any]] = None) -> Task:
         """Paper-style alias (``tasks.emplace_back([...])``)."""
@@ -96,6 +257,8 @@ class TaskGraph:
             if t.graph is not self:
                 t.graph = self
             self.tasks.append(t)
+            if t.is_condition:
+                self._num_conditions += 1
 
     def map_reduce(
         self,
@@ -128,10 +291,20 @@ class TaskGraph:
         fn: Callable[..., Any],
         *,
         name: str = "",
-        priority: float = 0.0,
+        priority: Optional[float] = None,
     ) -> Task:
-        """A new task receiving ``predecessor``'s result as its argument."""
-        t = self.add(fn, name=name, priority=priority, takes_inputs=True)
+        """A new task receiving ``predecessor``'s result as its argument.
+
+        Inherits ``predecessor``'s priority band unless one is given —
+        the fix for continuations silently falling back to band 0.0.
+        """
+        t = self.add(
+            fn,
+            name=name,
+            priority=predecessor.priority if priority is None else priority,
+            takes_inputs=True,
+        )
+        t._explicit_pr = predecessor._explicit_pr if priority is None else True
         t.succeed(predecessor)
         return t
 
@@ -141,15 +314,23 @@ class TaskGraph:
         fn: Optional[Callable[..., Any]] = None,
         *,
         name: str = "gather",
-        priority: float = 0.0,
+        priority: Optional[float] = None,
     ) -> Task:
         """Join: a task receiving every predecessor's result, in order.
 
         With no ``fn`` the task simply collects the results into a list —
-        the dataflow analogue of ``asyncio.gather``.
+        the dataflow analogue of ``asyncio.gather``. With no explicit
+        ``priority`` the join inherits the highest predecessor band (a
+        join must not demote a prioritized fan-in).
         """
         collect = fn if fn is not None else (lambda *vs: list(vs))
-        t = self.add(collect, name=name, priority=priority, takes_inputs=True)
+        if priority is None:
+            pr = max((p.priority for p in predecessors), default=0.0)
+            explicit = any(p._explicit_pr for p in predecessors)
+        else:
+            pr, explicit = priority, True
+        t = self.add(collect, name=name, priority=pr, takes_inputs=True)
+        t._explicit_pr = explicit
         t.succeed(*predecessors)
         return t
 
@@ -216,9 +397,17 @@ class TaskGraph:
         neither accumulates bookkeeping nor retires on stale edges. Rounds
         must be sequential (task state is shared across submissions, as
         with plain ``submit``).
+
+        A graph containing **condition tasks** switches to counted
+        completion (DESIGN.md §10): branches legitimately never run and
+        weak cycles re-run tasks, so "every sink finished" is not a
+        termination signal — instead the run resolves when its in-flight
+        task count drains to zero.
         """
         from .pool import Future  # local import: graph.py must not cycle
 
+        if self._num_conditions:
+            return self._as_future_counted(pool)
         if self._fin is None:
             # Priority 0.0, deliberately: the completion task is only ever
             # ready once every sink has finished, so boosting it buys
@@ -227,14 +416,17 @@ class TaskGraph:
             # single-band fast path (DESIGN.md §9) for priority-free
             # dataflow graphs. When it is the lone newly-ready successor
             # the fused fan-out runs it inline regardless.
-            self._fin = Task(name=f"{self.name or 'graph'}::done")
+            self._fin = _FinTask(name=f"{self.name or 'graph'}::done")
             self._fin.propagate_errors = False
         fin = self._fin
-        # Reconcile tracked sink membership with the current topology.
+        # Reconcile tracked sink membership with the current topology. A
+        # completion task of ANY graph (type check, not identity) is never
+        # a real successor — a stale one from a previous wrapper graph
+        # must not hide a sink (it would resolve the future at submit).
         current = {
             id(t): t
             for t in self.tasks
-            if not any(s is not fin for s in t.successors)
+            if not any(not isinstance(s, _FinTask) for s in t.successors)
         }
         for tid, t in list(self._sinks.items()):
             if tid not in current:  # gained a real successor since last round
@@ -251,6 +443,8 @@ class TaskGraph:
             won = fin.cancel()
             for t in graph_tasks:
                 t.cancel()
+                for st in t._spawned or ():  # in-flight subflow tasks too
+                    st.cancel()
             return won
 
         fut = Future(canceller=_canceller)
@@ -276,28 +470,82 @@ class TaskGraph:
         self._run_count += 1
         return fut
 
+    def _as_future_counted(self, pool) -> "Future":  # noqa: F821 - forward ref
+        """Counted-completion submission (condition graphs, DESIGN.md §10).
+
+        A :class:`~repro.core.pool.RunContext` counts scheduled-but-
+        unfinished tasks of this run; the worker that drains the count to
+        zero resolves the future. Subflow tasks spawned during the run are
+        counted (and cancelled) through the same context.
+        """
+        from .pool import Future, RunContext  # local import: no cycle
+
+        graph_tasks = list(self.tasks)
+
+        def _canceller() -> bool:
+            won = False
+            for t in graph_tasks:
+                if t.cancel():
+                    won = True
+                for st in t._spawned or ():
+                    if st.cancel():
+                        won = True
+            return won
+
+        fut = Future(canceller=_canceller)
+
+        def _resolve_counted() -> None:
+            cancelled_exc: Optional[BaseException] = None
+            saw_cancel = False
+            for t in graph_tasks:
+                spawned = t._spawned or ()
+                for x in (t, *spawned):
+                    if x.exception is not None:
+                        if not isinstance(x.exception, CancelledError):
+                            fut.set_exception(x.exception)
+                            return
+                        cancelled_exc = x.exception
+                    saw_cancel = saw_cancel or x.cancelled
+            if cancelled_exc is not None or saw_cancel:
+                fut.set_exception(cancelled_exc or CancelledError("task graph cancelled"))
+                return
+            fut.set_result(None)
+
+        ctx = RunContext(_resolve_counted)
+        self._run_count += 1
+        if not pool._submit_with_context(graph_tasks, ctx):
+            _resolve_counted()  # nothing to run: resolve immediately
+        return fut
+
     # -- inspection ---------------------------------------------------------------
 
     def roots(self) -> list[Task]:
-        return [t for t in self.tasks if t.num_predecessors == 0]
+        """Source tasks: no in-edges of either strength (weak in-edges
+        are excluded too — a weak-only target is released by its condition
+        at runtime, never at submission)."""
+        return [t for t in self.tasks if t.is_source]
 
     def validate(self) -> None:
-        """Raise :class:`CycleError` unless the graph is a DAG (Kahn).
+        """Raise :class:`CycleError` unless every cycle is condition-closed.
 
         Tasks reachable through successor edges but missing from the
         container are first collected, then adopted explicitly via
         :meth:`adopt` *before* the Kahn walk — validation never mutates
         ``self.tasks`` mid-iteration (the hidden ``as_future`` completion
         task is exempt: it is bookkeeping, not part of the user's graph).
+
+        The Kahn walk counts **strong** in-degrees only; a condition
+        task's out-edges are weak (no countdown contribution), so a cycle
+        closed by a weak back-edge — the §10 retry/convergence loop — is
+        legal, while a cycle of strong edges still fails.
         """
-        fin = self._fin
         known = {id(t) for t in self.tasks}
         externals: list[Task] = []
         stack = list(self.tasks)
         while stack:
             t = stack.pop()
             for s in t.successors:
-                if s is fin or id(s) in known:
+                if isinstance(s, _FinTask) or id(s) in known:
                     continue
                 known.add(id(s))
                 externals.append(s)
@@ -310,6 +558,8 @@ class TaskGraph:
         while q:
             t = q.popleft()
             visited += 1
+            if t.is_condition:
+                continue  # weak out-edges never contributed to in-degrees
             for s in t.successors:
                 if id(s) not in indeg:  # hidden completion task
                     continue
@@ -340,6 +590,8 @@ class TaskGraph:
         while q:
             t = q.popleft()
             order.append(t)
+            if t.is_condition:
+                continue  # weak edges carry no in-degree
             for s in t.successors:
                 if id(s) not in indeg:
                     continue
@@ -349,14 +601,41 @@ class TaskGraph:
         return order
 
     def to_dot(self) -> str:
+        """DOT export. Condition tasks render as diamonds with **dashed**
+        branch edges (labelled by branch index); each ``takes_runtime``
+        task's last-observed subflow renders as a ``cluster`` subgraph
+        hanging off its spawner by a dotted edge — so a trace of a
+        branching, dynamically-fanned run stays readable."""
         lines = [f'digraph "{self.name or "taskgraph"}" {{']
         idx = {id(t): i for i, t in enumerate(self.tasks)}
+        next_id = len(self.tasks)
+        clusters: list[tuple[Task, list[Task]]] = []
         for t in self.tasks:
-            lines.append(f'  n{idx[id(t)]} [label="{t.name}"];')
-        for t in self.tasks:
-            for s in t.successors:
-                if id(s) in idx:
-                    lines.append(f"  n{idx[id(t)]} -> n{idx[id(s)]};")
+            shape = ', shape=diamond' if t.is_condition else ""
+            lines.append(f'  n{idx[id(t)]} [label="{t.name}"{shape}];')
+            if t._spawned:
+                clusters.append((t, t._spawned))
+        for spawner, spawned in clusters:
+            lines.append(f'  subgraph "cluster_{idx[id(spawner)]}" {{')
+            lines.append(f'    label="{spawner.name}::subflow"; style=dashed;')
+            for st in spawned:
+                if id(st) not in idx:
+                    idx[id(st)] = next_id
+                    next_id += 1
+                lines.append(f'    n{idx[id(st)]} [label="{st.name}"];')
+            lines.append("  }")
+            for st in spawned:
+                if st.is_source:
+                    lines.append(
+                        f"  n{idx[id(spawner)]} -> n{idx[id(st)]} [style=dotted];"
+                    )
+        for t in list(self.tasks) + [st for _, sp in clusters for st in sp]:
+            style = ' [style=dashed, label="{}"]' if t.is_condition else ""
+            for branch, s in enumerate(t.successors):
+                if id(s) not in idx:
+                    continue
+                attr = style.format(branch) if style else ""
+                lines.append(f"  n{idx[id(t)]} -> n{idx[id(s)]}{attr};")
         lines.append("}")
         return "\n".join(lines)
 

@@ -44,6 +44,17 @@ run without the pool knowing about either.
   inline continuation and pushes the rest directly onto the worker's own
   deque — no ready list, no ``max(..., key=...)``, one batch wakeup.
 
+**Control flow (DESIGN.md §10).** Condition tasks, weak-edge cycles, and
+runtime-spawned subflows dispatch through a *slow fan-out* path selected by
+one per-task flag check (``task._slow``); plain DAG tasks keep the fused
+§9 loop untouched. Slow-path tasks re-arm themselves **before** releasing
+any successor (so a weak back-edge can legally re-trigger them), a
+condition's integer result picks exactly one weak successor, a spawner's
+subflow is spliced in behind a hidden join task that inherits the
+spawner's successors, and a per-run :class:`RunContext` counts in-flight
+tasks so graphs whose branches never run (or that loop) still terminate
+their futures deterministically.
+
 Differences from the C++ original are documented in DESIGN.md §2.1.
 """
 from __future__ import annotations
@@ -55,12 +66,49 @@ from collections import deque as _pydeque
 from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
+from .graph import Runtime, select_branch, splice_subflow
 from .task import CancelledError, Task, iter_graph
 
-__all__ = ["ThreadPool", "Future"]
+__all__ = ["ThreadPool", "Future", "RunContext"]
 
 _SPIN_SWEEPS = 2  # extra full sweeps (with GIL yields) before parking
 _PARK_BACKSTOP_S = 0.5  # safety net only; targeted wakeups are the fast path
+
+
+class RunContext:
+    """Counted completion for one graph run (DESIGN.md §10).
+
+    ``active`` is the number of scheduled-but-unfinished tasks of the run.
+    A submitter counts every root *before* scheduling any of them; a worker
+    finishing a task folds its whole fan-out into one ``update(delta)``
+    with ``delta = successors_scheduled - 1`` — and crucially applies it
+    *before* pushing those successors, so a successor completing on
+    another worker can never observe a transiently-zero count. The caller
+    that drains ``active`` to zero fires ``on_quiet`` exactly once.
+
+    Only counted runs (condition graphs, executor-managed submissions) pay
+    this lock; the plain DAG path never allocates a context.
+    """
+
+    __slots__ = ("_lock", "_active", "_on_quiet", "_fired")
+
+    def __init__(self, on_quiet: Callable[[], None]) -> None:
+        self._lock = threading.Lock()
+        self._active = 0
+        self._on_quiet = on_quiet
+        self._fired = False
+
+    def update(self, delta: int) -> None:
+        with self._lock:
+            self._active += delta
+            fire = self._active == 0 and not self._fired
+            if fire:
+                self._fired = True
+        if fire:
+            try:
+                self._on_quiet()
+            except BaseException:  # noqa: BLE001 - completion cb never poisons a worker
+                pass
 
 
 class Future:
@@ -72,9 +120,22 @@ class Future:
     :meth:`cancel` simply resolves it with :class:`CancelledError`.
     Resolution is first-write-wins: a producer completing after a successful
     cancel is ignored.
+
+    Futures bridge into ``asyncio``: ``await fut`` works inside any running
+    event loop (:meth:`__await__` hands completion over via
+    ``call_soon_threadsafe``), which is what ``Executor.co_run`` and
+    ``ServeEngine.submit_async`` build on (DESIGN.md §10).
     """
 
-    __slots__ = ("_event", "_result", "_exception", "_lock", "_canceller", "_cancelled")
+    __slots__ = (
+        "_event",
+        "_result",
+        "_exception",
+        "_lock",
+        "_canceller",
+        "_cancelled",
+        "_callbacks",
+    )
 
     def __init__(self, canceller: Optional[Callable[[], bool]] = None) -> None:
         self._event = threading.Event()
@@ -83,6 +144,28 @@ class Future:
         self._lock = threading.Lock()
         self._canceller = canceller
         self._cancelled = False
+        self._callbacks: list[Callable[["Future"], None]] = []
+
+    def _drain_callbacks(self) -> None:
+        with self._lock:
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except BaseException:  # noqa: BLE001 - callback errors are dropped
+                pass
+
+    def add_done_callback(self, fn: Callable[["Future"], None]) -> None:
+        """Run ``fn(self)`` once the future resolves (immediately if it
+        already has). Callbacks fire on the resolving thread."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        try:
+            fn(self)
+        except BaseException:  # noqa: BLE001 - callback errors are dropped
+            pass
 
     def set_result(self, value: Any) -> None:
         with self._lock:
@@ -90,6 +173,7 @@ class Future:
                 return
             self._result = value
             self._event.set()
+        self._drain_callbacks()
 
     def set_exception(self, exc: BaseException) -> None:
         with self._lock:
@@ -97,6 +181,7 @@ class Future:
                 return
             self._exception = exc
             self._event.set()
+        self._drain_callbacks()
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -124,6 +209,7 @@ class Future:
                 if not self._event.is_set():
                     self._exception = CancelledError("future cancelled")
                     self._event.set()
+            self._drain_callbacks()
             return True
         with self._lock:
             if self._event.is_set():
@@ -131,6 +217,7 @@ class Future:
             self._cancelled = True
             self._exception = CancelledError("future cancelled")
             self._event.set()
+        self._drain_callbacks()
         return True
 
     def result(self, timeout: Optional[float] = None) -> Any:
@@ -139,6 +226,39 @@ class Future:
         if self._exception is not None:
             raise self._exception
         return self._result
+
+    def __await__(self):
+        """Awaitable bridge: ``await fut`` inside a running asyncio loop.
+
+        Completion is transferred onto the loop with
+        ``call_soon_threadsafe`` from whichever worker thread resolves the
+        future — the event loop never blocks on the pool.
+        """
+        import asyncio  # deferred: the pool itself never needs asyncio
+
+        if self._event.is_set():
+            if self._exception is not None:
+                raise self._exception
+            return self._result
+        loop = asyncio.get_running_loop()
+        afut: "asyncio.Future" = loop.create_future()
+
+        def _transfer(f: "Future") -> None:
+            def _apply() -> None:
+                if afut.done():
+                    return
+                if f._exception is not None:
+                    afut.set_exception(f._exception)
+                else:
+                    afut.set_result(f._result)
+
+            try:
+                loop.call_soon_threadsafe(_apply)
+            except RuntimeError:  # loop already closed; nothing to deliver to
+                pass
+
+        self.add_done_callback(_transfer)
+        return (yield from afut)
 
 
 class ThreadPool:
@@ -248,28 +368,46 @@ class ThreadPool:
         """Submit a callable, a single Task, or a task graph (iterable).
 
         Graph submission mirrors the paper: counters of every task reachable
-        from the collection are re-armed, then all roots (tasks with no
-        predecessors) are scheduled. ``priority`` (when given) overrides the
-        priority of a callable/single-task submission; graph tasks keep
-        their own per-task priorities.
+        from the collection are re-armed, then all sources (tasks with no
+        in-edges of either strength) are scheduled. ``priority`` (when
+        given) overrides the priority of a callable/single-task submission
+        *and* propagates to reachable continuation tasks that never chose
+        an explicit priority of their own — a prioritized chain no longer
+        silently falls back to band 0.0 past its first task. Graph
+        (iterable) submissions keep per-task priorities.
         """
         if isinstance(work, Task):
             if priority is not None:
-                work.priority = priority
+                for t in iter_graph([work]):
+                    if t is work or not t._explicit_pr:
+                        t.priority = priority
             self._schedule(work)
         elif callable(work):
-            self._schedule(Task(work, priority=priority or 0.0))
+            self._schedule(Task(work, priority=priority))
         else:
             notify = getattr(work, "_notify_submitted", None)
             if notify is not None:  # TaskGraph bumps its run_count
                 notify()
             tasks = list(work)
             graph = iter_graph(tasks)
+            has_cond = False
             for t in graph:
                 t.reset()
-            roots = [t for t in graph if t.num_predecessors == 0]
+                if t._slow:  # recompute: a prior counted/condition run may linger
+                    t.ctx = None
+                    t.auto_rearm = False
+                    t._slow = t.kind == "condition" or t.takes_runtime
+                if t.kind == "condition":
+                    has_cond = True
+            if has_cond:
+                # every member of a condition graph re-arms after running,
+                # so weak back-edges can re-trigger it within this run
+                for t in graph:
+                    t.auto_rearm = True
+                    t._slow = True
+            roots = [t for t in graph if t.is_source]
             if not roots and graph:
-                raise ValueError("task graph has no roots (dependency cycle?)")
+                raise ValueError("task graph has no sources (dependency cycle?)")
             for t in roots:
                 self._schedule(t)
 
@@ -297,10 +435,51 @@ class ThreadPool:
         self._schedule(task)
         return fut
 
-    def wait_idle(self, timeout: Optional[float] = None) -> None:
+    def _submit_with_context(self, tasks: Sequence[Task], ctx: RunContext) -> bool:
+        """Submit a graph under counted completion (DESIGN.md §10).
+
+        Every reachable task is reset, attached to ``ctx`` and routed
+        through the slow fan-out; condition membership additionally arms
+        the whole graph for weak re-triggering. All sources are counted
+        into the context *before* the first one is scheduled, so an early
+        completion can never drain the count to zero mid-submission.
+        Returns False when there is nothing to schedule (the caller
+        resolves the run itself).
+        """
+        graph = iter_graph(list(tasks))
+        has_cond = False
+        for t in graph:
+            t.reset()
+            t.ctx = ctx
+            t._slow = True
+            t.auto_rearm = False
+            if t.kind == "condition":
+                has_cond = True
+        if has_cond:
+            for t in graph:
+                t.auto_rearm = True
+        roots = [t for t in graph if t.is_source]
+        if not roots:
+            if graph:
+                raise ValueError("task graph has no sources (dependency cycle?)")
+            return False
+        ctx.update(len(roots))
+        for t in roots:
+            self._schedule(t)
+        return True
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
         """Block until every claimed task has completed.
 
-        Re-raises the first task exception, if any (then clears it).
+        Returns True once idle; **False on timeout** (the pool is still
+        busy) — callers that must not proceed on a non-quiescent pool
+        raise their own ``TimeoutError`` (``CheckpointManager.wait``,
+        ``Executor.wait_idle`` callers). Pre-§10 this raised from here,
+        which made "timed out" and "a task failed" the same control path;
+        now only a genuine task failure raises: once idle, the first task
+        exception (if any) is re-raised and cleared. On timeout the error
+        marker is left in place for the eventual successful wait.
+
         Waiters register on ``_idle_cond`` so the task path can skip the
         quiescence check entirely while nobody is waiting (DESIGN.md §9).
         """
@@ -308,13 +487,14 @@ class ThreadPool:
             self._idle_waiters += 1
             try:
                 if not self._idle_cond.wait_for(lambda: self._outstanding() == 0, timeout):
-                    raise TimeoutError("pool did not become idle within timeout")
+                    return False
             finally:
                 self._idle_waiters -= 1
         with self._err_lock:
             err, self._first_error = self._first_error, None
         if err is not None:
             raise err
+        return True
 
     def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
         """``submit`` + ``wait_idle`` convenience."""
@@ -501,12 +681,21 @@ class ThreadPool:
         while task is not None:
             if self._observers:
                 self._notify("on_start", task, index)
+            slow = task._slow
+            rt: Optional[Runtime] = None
             try:
                 if self._first_error is not None and task.propagate_errors:
                     # fail-fast: skip bodies once the graph is poisoned, but
                     # keep draining dependencies so waiters unblock.
                     task.exception = CancelledError("predecessor failed")
                     task._done = True  # noqa: SLF001 - internal protocol
+                elif slow and task.takes_runtime:
+                    rt = Runtime(task)
+                    # publish the live (growing) subflow list before the body
+                    # runs: a graph canceller sweeping mid-body sees tasks as
+                    # they are spawned and can cancel them before they start
+                    task._spawned = rt.sub.tasks
+                    task.run(rt)
                 else:
                     task.run()
             except BaseException as exc:  # noqa: BLE001 - recorded + re-raised in wait
@@ -524,6 +713,11 @@ class ThreadPool:
                     cb(task)
                 except BaseException:  # noqa: BLE001 - callback errors are dropped
                     pass
+            if slow:
+                # conditions / subflows / re-armable loops / counted runs
+                task = self._finish_slow(task, index, rt)
+                self._completed[index] += 1
+                continue
             # Fused fan-out: decrement successors, keep the max-priority
             # ready one inline, push the rest (claimed as they are pushed).
             inline: Optional[Task] = None
@@ -556,3 +750,86 @@ class ThreadPool:
         if self._idle_waiters and self._outstanding() == 0:
             with self._idle_cond:
                 self._idle_cond.notify_all()
+
+    def _finish_slow(
+        self, task: Task, index: int, rt: Optional[Runtime]
+    ) -> Optional[Task]:
+        """Full-featured fan-out for §10 task kinds; returns the inline
+        continuation (or None).
+
+        Invariants this path maintains, in order:
+
+        1. **Re-arm before release** (``auto_rearm``): the task refills its
+           own countdown/claim *before* any successor becomes runnable, so
+           a condition's weak back-edge — causally downstream of this
+           task's own fan-out — always finds it armed. Re-triggering a
+           task from a branch not downstream of it is a data race by
+           construction (same rule as Taskflow) and unsupported.
+        2. **Selection**: a subflow splices in behind a hidden join task
+           that inherits the spawner's successors; a condition schedules
+           exactly the branch its integer result names (weak edges carry
+           no countdown, so nothing is decremented — also on failure,
+           where no branch runs at all); plain tasks decrement strong
+           successors as usual.
+        3. **Count before publish**: the whole fan-out folds into one
+           ``RunContext.update`` applied *before* any successor is pushed.
+        """
+        ctx = task.ctx
+        if task.auto_rearm:
+            task.rearm()
+        scheduled: list[Task] = []
+        if rt is not None and rt.sub.tasks and task.exception is None:
+            # dynamic subflow: [sources ... sinks] -> join -> successors
+            # (join wiring + unwrap + failure adoption live in graph.py,
+            # shared with SerialExecutor)
+            sub, join = splice_subflow(task, rt.sub)
+            for st in sub + [join]:
+                st.ctx = ctx
+                st._slow = ctx is not None or st._slow
+                if not task.propagate_errors:
+                    st.propagate_errors = False
+            task._spawned = sub
+            scheduled = [t for t in sub if t.is_source]
+            if join.num_predecessors == 0:  # empty-sink degenerate case
+                scheduled.append(join)
+        elif task.kind == "condition":
+            # weak fan-out: a failed/cancelled condition releases nothing
+            # (weak edges contributed no countdown tokens — nothing drains)
+            branch = select_branch(task)
+            if branch is not None:
+                scheduled.append(branch)
+        else:
+            for s in task.successors:
+                if s.decrement():
+                    scheduled.append(s)
+        if ctx is not None:
+            delta = len(scheduled) - 1
+            if delta:
+                ctx.update(delta)
+        # publish: twin of the fused block in _execute (which interleaves the
+        # decrement with the pick and must stay allocation-free — keep any
+        # change to the inline-pick / push / wakeup policy in sync there)
+        inline: Optional[Task] = None
+        inline_pr = 0.0
+        pushed = 0
+        own = self._deques[index]
+        for s in scheduled:
+            self._claimed[index] += 1
+            if inline is None:
+                inline = s
+                inline_pr = s.priority
+            elif s.priority > inline_pr:
+                if self._observers:
+                    self._notify("on_submit", inline)
+                own.push(inline)
+                pushed += 1
+                inline = s
+                inline_pr = s.priority
+            else:
+                if self._observers:
+                    self._notify("on_submit", s)
+                own.push(s)
+                pushed += 1
+        if pushed and self._parked:
+            self._wake_one(index)
+        return inline

@@ -48,6 +48,26 @@ caller observes the token ``0``: that caller released the last dependency
 and owns the ready transition. The cancel-vs-start race is arbitrated the
 same way: a one-token claim list popped by whichever of ``run``/``cancel``
 gets there first (DESIGN.md §9).
+
+**Control flow in the graph — DESIGN.md §10.** Two task kinds extend the
+static model:
+
+* **Condition tasks** (``kind="condition"``, the Taskflow idea): every
+  out-edge of a condition task is *weak* — it contributes no token to the
+  successor's countdown and records no argument slot. When a condition
+  task finishes, its integer return value selects exactly one successor
+  (by wiring order), which is scheduled *directly*, bypassing its strong
+  countdown; every other branch stays un-run this pass. Because weak edges
+  carry no countdown, a weak back-edge may legally close a cycle — the
+  executor re-arms loop tasks after each pass (:meth:`rearm`), which is
+  what makes iterative retry/convergence loops expressible in the graph.
+  A non-``int`` or out-of-range return selects nothing (the loop's exit).
+
+* **Runtime tasks** (``takes_runtime=True``): the body receives a
+  ``Runtime`` handle (``graph.py``) as its first argument and may spawn a
+  *subflow* — a subgraph built inside the worker, sized by data only seen
+  at runtime. The executor joins the subflow before releasing the
+  spawner's successors (DESIGN.md §10 join protocol).
 """
 from __future__ import annotations
 
@@ -83,7 +103,17 @@ class Task:
         is nullary, as in the paper.
     priority:
         Larger runs first among ready tasks (own-deque bands, inbox bands
-        and the inline-continuation pick — see pool.py). Default 0.0.
+        and the inline-continuation pick — see pool.py). Default 0.0. A
+        priority that was never set explicitly (``None`` at construction)
+        is *inheritable*: ``then()`` continuations copy their parent's
+        priority, and ``ThreadPool.submit(task, priority=...)`` propagates
+        the override to reachable successors that never chose their own.
+    kind:
+        ``"static"`` (default) or ``"condition"`` (module docs above).
+    takes_runtime:
+        When True the body receives a ``Runtime`` handle as its first
+        positional argument (before any dataflow inputs) and may spawn a
+        joined subflow (module docs above).
     propagate_errors:
         When False, an exception from ``fn`` is recorded on the task (and
         delivered through any attached future / ``on_done``) but does not
@@ -100,12 +130,20 @@ class Task:
         "priority",
         "successors",
         "num_predecessors",
+        "num_weak_predecessors",
         "inputs",
         "takes_inputs",
+        "kind",
+        "takes_runtime",
         "graph",
         "result",
         "propagate_errors",
         "on_done",
+        "ctx",
+        "auto_rearm",
+        "_slow",
+        "_explicit_pr",
+        "_spawned",
         "_pending",
         "_claim",
         "_done",
@@ -119,20 +157,41 @@ class Task:
         fn: Optional[Callable[..., Any]] = None,
         name: str = "",
         *,
-        priority: float = 0.0,
+        priority: Optional[float] = None,
         takes_inputs: bool = False,
+        kind: str = "static",
+        takes_runtime: bool = False,
     ) -> None:
+        if kind not in ("static", "condition"):
+            raise ValueError(f"unknown task kind {kind!r}")
+        if kind == "condition" and takes_runtime:
+            # the subflow splice would take over the weak successor list and
+            # strongly decrement edges that hold no countdown tokens — every
+            # branch would be silently skipped. Spawn from a branch instead.
+            raise ValueError("a condition task cannot also take a runtime handle")
         self.fn = fn
         self.name = name
-        self.priority = priority
+        self.priority = 0.0 if priority is None else priority
+        self._explicit_pr = priority is not None
         self.successors: list[Task] = []
         self.num_predecessors = 0
+        self.num_weak_predecessors = 0  # in-edges from condition tasks
         self.inputs: list[Task] = []  # ordered argument slots (succeed order)
         self.takes_inputs = takes_inputs
+        self.kind = kind
+        self.takes_runtime = takes_runtime
         self.graph: Any = None  # back-ref set by TaskGraph.add (for .then())
         self.result: Any = None
         self.propagate_errors = True
         self.on_done: Optional[Callable[["Task"], None]] = None
+        # Per-submission run context (executor-counted completion) and the
+        # slow-dispatch flag: the pool's fast path checks `_slow` once per
+        # task; conditions, runtime tasks, re-armable loop members and
+        # counted runs all route through the full-featured fan-out.
+        self.ctx: Any = None
+        self.auto_rearm = False
+        self._slow = kind == "condition" or takes_runtime
+        self._spawned: Optional[list[Task]] = None  # last run's subflow
         # Runtime countdown: a token list popped once per completed
         # predecessor; the popper receiving token 0 owns the ready
         # transition. reset() re-arms it. Roots have an empty countdown.
@@ -144,6 +203,15 @@ class Task:
         self._cancelled = False
         self.exception: Optional[BaseException] = None
 
+    @property
+    def is_condition(self) -> bool:
+        return self.kind == "condition"
+
+    @property
+    def is_source(self) -> bool:
+        """No in-edges of either strength — schedulable at submission."""
+        return self.num_predecessors == 0 and self.num_weak_predecessors == 0
+
     # -- graph wiring ---------------------------------------------------------
 
     def succeed(self, *predecessors: "Task") -> "Task":
@@ -154,21 +222,34 @@ class Task:
         receives the predecessors' results as positional arguments in
         wiring order (nullary tasks ignore the slots). Returns ``self`` so
         calls can be chained.
+
+        An edge whose *predecessor* is a condition task is **weak**: it
+        contributes no countdown token and no argument slot — the branch
+        the condition selects is scheduled directly (module docs). The
+        position of ``self`` in the condition's successor list is its
+        branch index.
         """
         for p in predecessors:
             p.successors.append(self)
-            self.num_predecessors += 1
-            self.inputs.append(p)
+            if p.kind == "condition":
+                self.num_weak_predecessors += 1
+            else:
+                self.num_predecessors += 1
+                self.inputs.append(p)
         self._pending[:] = range(self.num_predecessors)
         return self
 
     def after(self, *predecessors: "Task") -> "Task":
         """Ordering-only edge: run after ``predecessors`` without recording
         an argument slot. Use for control dependencies (e.g. "the directory
-        must exist") feeding into dataflow tasks."""
+        must exist") feeding into dataflow tasks. An edge from a condition
+        task is weak here too (see :meth:`succeed`)."""
         for p in predecessors:
             p.successors.append(self)
-            self.num_predecessors += 1
+            if p.kind == "condition":
+                self.num_weak_predecessors += 1
+            else:
+                self.num_predecessors += 1
         self._pending[:] = range(self.num_predecessors)
         return self
 
@@ -183,18 +264,26 @@ class Task:
         fn: Callable[..., Any],
         *,
         name: str = "",
-        priority: float = 0.0,
+        priority: Optional[float] = None,
     ) -> "Task":
         """Dataflow combinator: a new task consuming this task's result.
 
         Requires the task to belong to a :class:`~repro.core.TaskGraph`
         (``graph`` back-ref, set by ``TaskGraph.add``); the new task is
         added to the same graph. ``a.then(f).then(g)`` builds ``g(f(a()))``
-        as a three-task pipeline.
+        as a three-task pipeline. With no explicit ``priority`` the
+        continuation inherits this task's priority band — a high-priority
+        chain stays high-priority end to end.
         """
         if self.graph is None:
             raise ValueError("then() requires a task created via TaskGraph.add")
-        t = self.graph.add(fn, name=name, priority=priority, takes_inputs=True)
+        t = self.graph.add(
+            fn,
+            name=name,
+            priority=self.priority if priority is None else priority,
+            takes_inputs=True,
+        )
+        t._explicit_pr = self._explicit_pr if priority is None else True
         t.succeed(self)
         return t
 
@@ -219,6 +308,25 @@ class Task:
         self._cancelled = False
         self.result = None
         self.exception = None
+        self._spawned = None  # per-run record; a skipped spawner must not
+        # surface a previous run's subflow to resolution or rendering
+
+    def rearm(self) -> None:
+        """Re-arm for re-triggering *within* the same run (condition
+        cycles, DESIGN.md §10).
+
+        Unlike :meth:`reset`, the previous pass's ``result``/``exception``
+        are kept — dataflow successors read them after the pass completes,
+        and a condition loop's state legitimately persists across passes
+        (the next pass overwrites it). A task cancelled mid-loop stays
+        cancelled: its claim is left consumed, so every further trigger
+        skips the body and the loop drains cooperatively.
+        """
+        self._pending[:] = range(self.num_predecessors)
+        if not self._cancelled:
+            self._claim[:] = (0,)
+            self._started = False
+        self._done = False
 
     def decrement(self) -> bool:
         """Atomically decrement the pending count; True when it reaches zero.
@@ -269,7 +377,7 @@ class Task:
     def done(self) -> bool:
         return self._done
 
-    def run(self) -> None:
+    def run(self, runtime: Any = None) -> None:
         """Execute the wrapped callable (exceptions handled by the pool).
 
         A task cancelled before this point records :class:`CancelledError`
@@ -277,6 +385,8 @@ class Task:
         input failed (or was cancelled) skips its body and adopts the first
         failed input's exception, so failure propagates along dataflow
         edges without poisoning the pool when ``propagate_errors`` is off.
+        ``runtime`` (supplied by the executor for ``takes_runtime`` tasks)
+        is passed to the body as its first positional argument.
         """
         try:
             self._claim.pop()  # the run/cancel race atom
@@ -286,6 +396,7 @@ class Task:
             self._done = True
             return
         self._started = True
+        self.exception = None  # a re-armed loop pass must not report stale failures
         if self.takes_inputs:
             for p in self.inputs:
                 if p.exception is not None:
@@ -293,9 +404,13 @@ class Task:
                     self._done = True
                     return
             if self.fn is not None:
-                self.result = self.fn(*(p.result for p in self.inputs))
+                args = tuple(p.result for p in self.inputs)
+                if runtime is not None:
+                    self.result = self.fn(runtime, *args)
+                else:
+                    self.result = self.fn(*args)
         elif self.fn is not None:
-            self.result = self.fn()
+            self.result = self.fn(runtime) if runtime is not None else self.fn()
         self._done = True
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

@@ -1,86 +1,190 @@
 """ThreadPool-driven input pipeline: the dataflow runtime in production.
 
-Each prefetch lane is one **re-runnable dataflow graph** (DESIGN.md §8)
+Each prefetch lane is one **condition-looped dataflow graph**
+(DESIGN.md §10)
 
-    produce (CPU, numpy)  ->  transform (device_put)  ->  deliver
+    entry -> produce (CPU, numpy) -> transform (device_put) -> deliver
+               ^                                                  |
+               '---------------- more? (condition) <--------------'
 
-built once and re-run every ``depth`` steps: the produce task's return
-value (the host batch) flows along the edge into the transform task as its
-argument, and the transform's device batch flows into the deliver task,
-whose completion resolves that round's future — no closure capture, no
-side-channel dicts. ``depth`` lanes run concurrently on the work-stealing
-pool, so host-side data work overlaps device steps (the GIL-releasing
-regime the pool targets — DESIGN.md §2). The pipeline cursor is just the
-step index: checkpointable and restorable with no draining protocol.
-Straggler mitigation falls out of work stealing: a slow produce task gets
-picked up by whichever worker goes idle first, and ``depth`` bounds how far
-ahead we buffer.
+built once per lane and submitted through the :class:`Executor` facade.
+The condition task closes the cycle with a weak back-edge: while steps are
+assigned to the lane it returns branch 0 (loop — the next produce starts
+*inside the pool*, no Python-side resubmission, no submit syscall per
+step), and when the lane's queue is empty it returns an out-of-range index
+and the run drains. The host batch flows produce→transform→deliver along
+value edges as before; each pass of the deliver task resolves that step's
+future from its completion callback. A lane is only re-*submitted* when a
+step arrives after its loop exited — under a steady consumer the graph
+loops in the workers indefinitely.
 
-The pipeline rides the scheduler's idle machinery for free (DESIGN.md §9):
-between steps the pool's workers park on their events instead of polling,
-a lane resubmission issues one targeted wakeup, and :meth:`Prefetcher.close`
-returns as soon as in-flight produce bodies finish — the pool shutdown no
-longer waits out park-timeout ticks.
+``depth`` lanes run concurrently on the work-stealing pool, so host-side
+data work overlaps device steps (the GIL-releasing regime the pool
+targets — DESIGN.md §2). The pipeline cursor is just the step index:
+checkpointable and restorable with no draining protocol. Straggler
+mitigation falls out of work stealing, and ``depth`` bounds how far ahead
+we buffer.
+
+Cancellation (``close``) became *queue-side*: cancelling a step's future
+removes it from its lane's queue before the source ever sees it; the pass
+already producing is drained cooperatively and each exited loop winds down
+through its condition task, so a shared pool comes back clean.
 """
 from __future__ import annotations
 
+import threading
+from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core import Future, Task, TaskGraph, ThreadPool
+from repro.core import Executor, Future, Task, TaskGraph, ThreadPool
+
+_SKIP = object()  # sentinel batch for a pass whose step was cancelled away
 
 
 class _Lane:
-    """One produce→transform→deliver graph, re-run once per assigned step.
+    """One condition-looped produce→transform→deliver graph.
 
-    Rounds are sequential per lane (step k and step k+depth share the lane),
-    so the mutable ``step`` cell and the per-round ``future`` swap are safe:
-    a lane is resubmitted only after its previous round was consumed or
-    cancelled.
+    A lane owns a queue of assigned steps. Passes are serialized by the
+    graph's own cycle (produce k+depth cannot start before the condition
+    task of pass k chose to loop), so the mutable ``_current`` cell and
+    the per-step future map are guarded only against the assigning
+    consumer thread.
     """
 
-    __slots__ = ("graph", "produce", "transform", "deliver", "step", "future", "_source")
+    __slots__ = (
+        "graph",
+        "produce",
+        "transform",
+        "deliver",
+        "cond",
+        "_exec",
+        "_source",
+        "_lk",
+        "_pending",
+        "_futures",
+        "_running",
+        "_run_future",
+        "_current",
+    )
 
-    def __init__(self, index: int, source: Any, put_fn: Callable[[dict], Any]) -> None:
+    def __init__(self, index: int, source: Any, put_fn: Callable[[dict], Any], executor: Executor) -> None:
+        self._exec = executor
         self._source = source
-        self.step = -1
-        self.future: Optional[Future] = None
+        self._lk = threading.Lock()
+        self._pending: deque[int] = deque()
+        self._futures: dict[int, Future] = {}
+        self._running = False
+        self._run_future: Optional[Future] = None
+        self._current: Optional[int] = None
         g = TaskGraph(f"prefetch-lane{index}")
+        entry = g.add(None, name=f"entry:{index}")
         self.produce = g.add(self._produce, name=f"produce:{index}")
-        self.transform = g.then(self.produce, put_fn, name=f"transform:{index}")
+        self.produce.after(entry)
+        self.transform = g.then(
+            self.produce,
+            lambda b: b if b is _SKIP else put_fn(b),
+            name=f"transform:{index}",
+        )
         self.deliver = self.transform.then(lambda b: b, name=f"deliver:{index}")
-        for t in (self.produce, self.transform, self.deliver):
-            t.propagate_errors = False  # lane errors go to the future only
+        self.cond = g.add(self._more, kind="condition", name=f"more:{index}")
+        self.cond.after(self.deliver)
+        self.cond.precede(self.produce)  # branch 0: weak back-edge, loop
+        for t in g.tasks:
+            t.propagate_errors = False  # lane errors go to step futures only
         self.deliver.on_done = self._resolve
         self.graph = g
 
-    def _produce(self) -> dict:
-        return self._source.batch(self.step)
+    # -- pool-side (worker threads) -------------------------------------------
+
+    def _produce(self) -> Any:
+        with self._lk:
+            if not self._pending:  # every queued step was cancelled away
+                self._current = None
+                return _SKIP
+            self._current = self._pending.popleft()
+        return self._source.batch(self._current)
+
+    def _more(self) -> int:
+        """Condition body: loop while steps are queued, else exit."""
+        with self._lk:
+            if self._pending:
+                return 0  # branch 0 -> produce (weak back-edge)
+            self._running = False
+            return 1  # out of range -> the run drains
 
     def _resolve(self, task: Task) -> None:
-        fut = self.future
-        if fut is None:  # pragma: no cover - resolve before first submit
+        with self._lk:
+            fut = self._futures.pop(self._current, None)
+        if fut is None:  # _SKIP pass, or the step's future was cancelled
             return
         if task.exception is not None:
             fut.set_exception(task.exception)
         else:
             fut.set_result(task.result)
 
-    def submit(self, pool: ThreadPool, step: int) -> Future:
-        self.step = step
-        self.future = Future(canceller=self._cancel)
-        pool.submit(self.graph)  # re-arms counters + per-run results
-        return self.future
+    # -- consumer-side ---------------------------------------------------------
 
-    def _cancel(self) -> bool:
-        won = self.produce.cancel()
-        if won:
-            # produce never started: skip the whole lane round. A produce
-            # already running completes normally and the round delivers.
-            self.transform.cancel()
-            self.deliver.cancel()
-        return won
+    def assign(self, step: int) -> Future:
+        """Queue ``step`` on this lane; restart the loop if it had exited.
+
+        The restart waits out the previous run's drain first — resetting a
+        graph whose condition task is still completing would race its
+        fan-out (§10: rounds are sequential per graph).
+        """
+        fut = Future(canceller=lambda: self._cancel_step(step))
+        with self._lk:
+            self._pending.append(step)
+            self._futures[step] = fut
+            start = not self._running
+            if start:
+                self._running = True
+        if start:
+            rf = self._run_future
+            if rf is not None:
+                try:
+                    rf.result(60)
+                except BaseException:  # noqa: BLE001 - old run's verdict is per-step
+                    if not rf.done():
+                        # the drain timed out: the old run still owns the
+                        # graph's task state — resubmitting now would race
+                        # its fan-out. Roll the step back out of the lane
+                        # (no orphaned queue entry for a run that never
+                        # started) and deliver the failure through the
+                        # step's own future, where the consumer reads it.
+                        with self._lk:
+                            try:
+                                self._pending.remove(step)
+                            except ValueError:
+                                pass
+                            self._futures.pop(step, None)
+                            self._running = False
+                        fut.set_exception(
+                            TimeoutError(
+                                "prefetch lane restart: previous loop still draining"
+                            )
+                        )
+                        return fut
+            self._run_future = self._exec.run(self.graph)  # counted submission re-arms
+        return fut
+
+    def _cancel_step(self, step: int) -> bool:
+        """True iff the step was still queued — the source never sees it."""
+        with self._lk:
+            try:
+                self._pending.remove(step)
+            except ValueError:
+                return False  # already producing (or done): cooperative drain
+            self._futures.pop(step, None)
+            return True
+
+    def drain(self, timeout: float) -> None:
+        if self._run_future is not None:
+            try:
+                self._run_future.result(timeout)
+            except BaseException:  # noqa: BLE001 - drain only; verdicts are per-step
+                pass
 
 
 class Prefetcher:
@@ -96,10 +200,11 @@ class Prefetcher:
         self.source = source
         self.pool = pool or ThreadPool(2)
         self._own_pool = pool is None
+        self._exec = Executor(pool=self.pool)
         self.depth = max(1, depth)
         self.put_fn = put_fn or (lambda b: jax.tree.map(jax.numpy.asarray, b))
-        self._lanes = [_Lane(i, source, self.put_fn) for i in range(self.depth)]
-        self._inflight: dict[int, _Lane] = {}
+        self._lanes = [_Lane(i, source, self.put_fn, self._exec) for i in range(self.depth)]
+        self._inflight: dict[int, Future] = {}
         self._next_submit = start_step
         self._next_read = start_step
         for _ in range(self.depth):
@@ -111,8 +216,7 @@ class Prefetcher:
         step = self._next_submit
         self._next_submit += 1
         lane = self._lanes[step % self.depth]
-        lane.submit(self.pool, step)
-        self._inflight[step] = lane
+        self._inflight[step] = lane.assign(step)
 
     # -- public ------------------------------------------------------------------
 
@@ -120,8 +224,8 @@ class Prefetcher:
         """Next batch, in order; refills the prefetch window."""
         step = self._next_read
         self._next_read += 1
-        lane = self._inflight.pop(step)
-        batch = lane.future.result(timeout)
+        fut = self._inflight.pop(step)
+        batch = fut.result(timeout)
         self._submit_one()
         return batch
 
@@ -131,22 +235,25 @@ class Prefetcher:
         return self._next_read
 
     def close(self, timeout: float = 30.0) -> None:
-        """Cancel or drain every in-flight lane, then release the pool.
+        """Cancel or drain every in-flight step, then release the pool.
 
-        Lanes whose produce task has not started are cancelled (the source
-        never sees those steps); rounds already producing are drained —
-        abandoning them would leave produce() racing a closed pool, and on
-        a shared pool it would leak tasks into the next user.
+        Steps still queued on their lane are cancelled (the source never
+        sees them); the pass already producing is drained — abandoning it
+        would leave ``batch()`` racing a closed pool, and on a shared pool
+        it would leak tasks into the next user. Each lane's condition loop
+        then drains itself, so the pool comes back quiescent.
         """
         # cancel pass first (stops everything not yet started), then drain
         # the stragglers — cancelling before draining minimizes wasted work
-        running = [lane for lane in self._inflight.values() if not lane.future.cancel()]
-        for lane in running:
+        running = [fut for fut in self._inflight.values() if not fut.cancel()]
+        for fut in running:
             try:
-                lane.future.result(timeout)
+                fut.result(timeout)
             except BaseException:  # noqa: BLE001 - drain only; result unused
                 pass
         self._inflight.clear()
+        for lane in self._lanes:
+            lane.drain(timeout)
         if self._own_pool:
             self.pool.close()
 

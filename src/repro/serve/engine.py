@@ -17,9 +17,23 @@ running to the longest member. One tick is one jitted
 ``vmap(model.decode_step)`` over the slot axis with a per-slot write index —
 sequences of different lengths share one decode computation.
 
-Ticks form a chain (a tick reschedules itself while work remains), which
-serializes all mutation of the shared slot buffers; admission and queue
-bookkeeping are lock-protected and may run from any thread.
+Ticks form a **condition-cycle graph** (DESIGN.md §10) submitted through
+the :class:`~repro.core.Executor` facade:
+
+    entry -> decode-tick -> more? (condition)
+                 ^______________|   (weak back-edge while work remains)
+
+The loop serializes all mutation of the shared slot buffers exactly as the
+old self-rescheduling chain did, but the steady-state hop from tick to
+tick is a weak-edge trigger inside a worker — no per-tick task allocation,
+no external submission, no inbox lock. The graph is (re)started only when
+work arrives on an idle engine, handed off through the run future's done
+callback so a restart can never overlap a draining run. Admission and
+queue bookkeeping stay lock-protected and may run from any thread.
+
+``submit_async`` rides the same facade's asyncio bridge: an async server
+can ``tokens = await engine.submit_async(prompt, n)`` without blocking its
+event loop.
 """
 from __future__ import annotations
 
@@ -33,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ChromeTraceObserver, Future, Task, ThreadPool
+from repro.core import ChromeTraceObserver, Executor, Future, Task, TaskGraph, ThreadPool
 
 from .kv import SlotKVCache
 
@@ -179,7 +193,22 @@ class ServeEngine:
         self._inflight = 0  # prefill tasks in flight
         self._joinq: deque = deque()  # (handle, req, cache, first_token, pad_len)
         self._active: dict[int, _Seq] = {}
-        self._tick_scheduled = False
+        # -- the condition-cycle tick graph (module docs): built once,
+        # looped by its weak back-edge, restarted only from idle.
+        self._exec = Executor(pool=self.pool)
+        tg = TaskGraph("serve-tick")
+        entry = tg.add(None, name="tick-entry", priority=DECODE_PRIORITY)
+        tick = tg.add(self._tick, name="decode-tick", priority=DECODE_PRIORITY)
+        tick.after(entry)
+        more = tg.add(
+            self._tick_more, name="more?", kind="condition", priority=DECODE_PRIORITY
+        )
+        more.after(tick)
+        more.precede(tick)  # branch 0: weak back-edge -> next tick
+        for t in tg.tasks:
+            t.propagate_errors = False
+        self._tick_graph = tg
+        self._tick_live = False  # a run of the tick graph is in flight
         self._closed = False
         self._broken: Optional[BaseException] = None
         self._rid = itertools.count()
@@ -233,6 +262,21 @@ class ServeEngine:
             self._waiting.append((handle, req))
             self._pump_locked()
         return handle
+
+    async def submit_async(
+        self, prompt: Union[np.ndarray, Sequence[int]], max_new_tokens: int
+    ) -> np.ndarray:
+        """Asyncio-native submission: queue one request and ``await`` its
+        generated ids without blocking the event loop (DESIGN.md §10 —
+        completion transfers onto the loop via ``Future.__await__``)::
+
+            tokens = await engine.submit_async(prompt, 32)
+
+        Validation errors raise synchronously-in-await, generation errors
+        resolve the awaitable, exactly like :meth:`submit` + ``result``.
+        """
+        handle = self.submit(prompt, max_new_tokens)
+        return await handle.future
 
     def generate(self, prompts, max_new_tokens, timeout: float = 300.0) -> list:
         """Submit many prompts and wait: returns per-prompt generated ids."""
@@ -351,12 +395,30 @@ class ServeEngine:
         handle.future.set_exception(exc)
 
     def _schedule_tick_locked(self) -> None:
-        if self._tick_scheduled:
+        """(Re)start the tick graph if no run is in flight.
+
+        ``_tick_live`` flips False only in the run future's done callback,
+        so a restart can never overlap a draining run (resetting a graph
+        whose condition task is still completing would race its fan-out).
+        """
+        if self._tick_live or self._broken is not None:
             return
-        self._tick_scheduled = True
-        t = Task(self._tick, name="decode-tick", priority=DECODE_PRIORITY)
-        t.propagate_errors = False
-        self.pool.submit(t)
+        self._tick_live = True
+        # counted submission (the graph holds a condition) re-arms every task
+        fut = self._exec.run(self._tick_graph)
+        fut.add_done_callback(self._tick_run_done)
+
+    def _tick_run_done(self, _fut: Future) -> None:
+        """Run drained: mark idle, and restart if work raced the exit."""
+        with self._lock:
+            self._tick_live = False
+            if self._active or self._joinq:
+                self._schedule_tick_locked()
+
+    def _tick_more(self) -> int:
+        """Condition body: loop (branch 0 -> tick) while work remains."""
+        with self._lock:
+            return 0 if self._broken is None and (self._active or self._joinq) else 1
 
     def _tick(self) -> None:
         try:
@@ -374,8 +436,9 @@ class ServeEngine:
                 self._active.clear()
                 self._joinq.clear()
                 self._waiting.clear()
-                self._tick_scheduled = False
                 self._idle.notify_all()
+            # the condition task sees _broken and exits the cycle; the run
+            # future's callback then clears _tick_live
             for h in victims:
                 h.future.set_exception(exc)
 
@@ -399,9 +462,8 @@ class ServeEngine:
         with self._lock:
             self._retire_locked(retired)  # max_new_tokens == 1 finishes at join
             if not self._active:
-                self._tick_scheduled = False
-                if self._joinq:
-                    self._schedule_tick_locked()
+                # nothing to decode this pass; the condition task loops if
+                # the join queue refilled, else the cycle drains
                 self._pump_locked()
                 self._idle.notify_all()
                 self._resolve(retired)
@@ -429,10 +491,7 @@ class ServeEngine:
                 self._tokens_out += 1
             self._retire_locked(retired)
             self._pump_locked()
-            self._tick_scheduled = False
-            if self._active or self._joinq:
-                self._schedule_tick_locked()
-            self._idle.notify_all()
+            self._idle.notify_all()  # the condition task decides the loop
         self._resolve(retired)
 
     def _retire_locked(self, retired: list) -> None:

@@ -73,3 +73,24 @@ def test_empty_tree_save(tmp_path):
         assert mgr.steps() == [1]
         manifest = json.loads((tmp_path / "step_00000001" / "manifest.json").read_text())
         assert manifest["leaves"] == {}
+
+
+def test_wait_scoped_to_own_saves_on_busy_shared_pool(tmp_path):
+    """§10: wait() watches this manager's save futures, not pool-wide
+    quiescence — another resident keeping the shared pool busy must not
+    time out a wait whose saves are already durable."""
+    import threading
+
+    from repro.core import ThreadPool
+
+    release = threading.Event()
+    with ThreadPool(2) as pool:
+        pool.submit(lambda: release.wait(30))  # unrelated long-running work
+        try:
+            with CheckpointManager(tmp_path, pool=pool) as mgr:
+                mgr.save_async(3, {"a": np.arange(4, dtype=np.float32)})
+                mgr.wait(timeout=30)  # must succeed despite the busy pool
+                assert mgr.steps() == [3]
+        finally:
+            release.set()
+        pool.wait_idle(10)

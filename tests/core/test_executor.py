@@ -1,0 +1,588 @@
+"""Executor facade + §10 control flow: condition tasks (branches, weak-edge
+loops), dynamic subflows (join protocol, cancellation), run_until, and the
+asyncio bridge."""
+import asyncio
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    CancelledError,
+    CycleError,
+    Executor,
+    Future,
+    SerialExecutor,
+    Task,
+    TaskGraph,
+    ThreadPool,
+)
+
+
+@pytest.fixture()
+def ex():
+    with Executor(4) as e:
+        yield e
+
+
+# ---------------------------------------------------------------------------
+# facade basics
+# ---------------------------------------------------------------------------
+
+
+def test_run_callable_returns_future(ex):
+    assert ex.run(lambda: 6 * 7).result(10) == 42
+
+
+def test_run_single_task_resolves_to_result(ex):
+    t = Task(lambda: "payload")
+    t.propagate_errors = False
+    assert ex.run(t).result(10) == "payload"
+
+
+def test_run_graph_and_iterable(ex):
+    g = TaskGraph()
+    a = g.add(lambda: 3)
+    b = g.then(a, lambda x: x * x)
+    assert ex.run(g).result(10) is None
+    assert b.result == 9
+    # an anonymous iterable of tasks is wrapped in a graph
+    seen = []
+    t1 = Task(lambda: seen.append(1))
+    t2 = Task(lambda: seen.append(2))
+    t2.succeed(t1)
+    assert ex.run([t1, t2]).result(10) is None
+    assert seen == [1, 2]
+
+
+def test_submit_alias(ex):
+    assert ex.submit(lambda: "ok").result(10) == "ok"
+
+
+def test_run_graph_priority_overrides_non_explicit_bands(ex):
+    """run(graph, priority=) follows the ThreadPool.submit contract: every
+    task without an explicit band is promoted, explicit bands win."""
+    g = TaskGraph()
+    a = g.add(lambda: None)
+    b = a.then(lambda _x: None)
+    c = g.add(lambda: None, priority=-2.0)
+    ex.run(g, priority=3.0).result(10)
+    assert a.priority == b.priority == 3.0
+    assert c.priority == -2.0
+
+
+def test_context_manager_closes_own_pool_only():
+    with Executor(2) as e:
+        owned = e.pool
+        e.run(lambda: None).result(10)
+    assert owned._stop  # owned pool closed on exit
+    shared = ThreadPool(2)
+    try:
+        with Executor(pool=shared) as e2:
+            e2.run(lambda: None).result(10)
+        assert not shared._stop  # adopted pool left running
+        shared.run(lambda: None)  # and still usable
+    finally:
+        shared.close()
+
+
+def test_wait_idle_reports_timeout_as_bool(ex):
+    ex.submit(lambda: time.sleep(0.4))
+    assert ex.wait_idle(0.01) is False
+    assert ex.wait_idle(10) is True
+
+
+# ---------------------------------------------------------------------------
+# condition tasks: branching
+# ---------------------------------------------------------------------------
+
+
+def test_condition_selects_single_branch(ex):
+    ran = []
+    g = TaskGraph("branch")
+    src = g.add(lambda: None, name="src")
+    pick = g.add(lambda: 1, kind="condition", name="pick")
+    pick.after(src)
+    left = g.add(lambda: ran.append("left"), name="left")
+    right = g.add(lambda: ran.append("right"), name="right")
+    pick.precede(left, right)  # branch order = wiring order
+    assert ex.run(g).result(10) is None
+    assert ran == ["right"]
+    assert not left.started
+
+
+def test_branch_not_taken_resets_cleanly_across_runs(ex):
+    """Un-run branches leave no residue: across run_count > 1 each run
+    releases exactly the branch its condition names."""
+    ran = []
+    sel = {"v": 0}
+    g = TaskGraph()
+    pick = g.add(lambda: sel["v"], kind="condition")
+    a = g.add(lambda: ran.append("a"))
+    b = g.add(lambda: ran.append("b"))
+    pick.precede(a, b)
+    assert ex.run(g).result(10) is None
+    sel["v"] = 1
+    g.reset()
+    assert ex.run(g).result(10) is None
+    sel["v"] = 0
+    g.reset()
+    assert ex.run(g).result(10) is None
+    assert ran == ["a", "b", "a"]
+    assert g.run_count == 3
+
+
+def test_condition_out_of_range_ends_run(ex):
+    """A non-int / out-of-range return selects nothing — the loop's exit."""
+    g = TaskGraph()
+    dead = []
+    c = g.add(lambda: 99, kind="condition")
+    c.precede(g.add(lambda: dead.append(1)))
+    assert ex.run(g).result(10) is None
+    assert dead == []
+
+
+def test_condition_plus_runtime_rejected():
+    """A condition task cannot spawn subflows — the splice would silently
+    swallow every branch, so the combination is rejected at construction."""
+    with pytest.raises(ValueError, match="runtime handle"):
+        Task(lambda: 0, kind="condition", takes_runtime=True)
+    with pytest.raises(ValueError, match="runtime handle"):
+        TaskGraph().add(lambda: 0, kind="condition", takes_runtime=True)
+
+
+def test_weak_edges_skip_countdown_and_slots():
+    g = TaskGraph()
+    c = g.add(lambda: 0, kind="condition")
+    t = g.add(lambda x: x, takes_inputs=True)
+    val = g.add(lambda: 5)
+    t.succeed(val)  # strong: one slot
+    t.succeed(c)  # weak: no countdown token, no slot
+    assert t.num_predecessors == 1
+    assert t.num_weak_predecessors == 1
+    assert t.inputs == [val]
+
+
+# ---------------------------------------------------------------------------
+# condition tasks: weak-edge cycles
+# ---------------------------------------------------------------------------
+
+
+def _build_loop(iters):
+    """entry -> body -> more? with a weak back-edge to body."""
+    g = TaskGraph("loop")
+    state = {"i": 0, "runs": 0}
+    entry = g.add(lambda: state.update(i=0), name="entry")
+    body = g.add(lambda: state.update(runs=state["runs"] + 1), name="body")
+    body.after(entry)
+
+    def more():
+        state["i"] += 1
+        return 0 if state["i"] < iters else 1
+
+    cond = g.add(more, kind="condition", name="more")
+    cond.after(body)
+    cond.precede(body)
+    return g, state
+
+
+def test_condition_loop_bounded_iteration(ex):
+    g, state = _build_loop(7)
+    assert ex.run(g).result(10) is None
+    assert state["runs"] == 7
+
+
+def test_condition_loop_rerunnable(ex):
+    g, state = _build_loop(4)
+    for expect in (4, 8, 12):
+        ex.run(g).result(10)
+        assert state["runs"] == expect
+        g.reset()
+    assert g.run_count == 3
+
+
+def test_condition_loop_via_plain_pool_run():
+    """Deprecation shim: the old ThreadPool.run path drives condition
+    graphs too (completion via quiescence instead of the counted future)."""
+    g, state = _build_loop(5)
+    with ThreadPool(2) as pool:
+        pool.run(g)
+    assert state["runs"] == 5
+
+
+def test_condition_loop_serial_executor():
+    g, state = _build_loop(6)
+    SerialExecutor().run(g)
+    assert state["runs"] == 6
+
+
+def test_validate_permits_condition_closed_cycle():
+    g, _state = _build_loop(3)
+    g.validate()  # weak back-edge: legal
+    bad = TaskGraph()
+    a = bad.add(lambda: None)
+    b = bad.add(lambda: None)
+    a.succeed(b)
+    b.succeed(a)
+    with pytest.raises(CycleError):
+        bad.validate()  # strong cycle: still illegal
+
+
+def test_condition_loop_failure_resolves_future(ex):
+    boom = {"at": 3, "i": 0}
+    g = TaskGraph()
+    entry = g.add(lambda: boom.update(i=0), name="entry")
+
+    def body():
+        boom["i"] += 1
+        if boom["i"] == boom["at"]:
+            raise ValueError("pass 3 failed")
+
+    bt = g.add(body, name="body")
+    bt.after(entry)
+    # the condition consumes the body's value edge, so a body failure
+    # propagates into it (skip + adopt) and the loop stops that pass
+    cond = g.add(
+        lambda _x: 0 if boom["i"] < 10 else 1, kind="condition", takes_inputs=True
+    )
+    cond.succeed(bt)
+    cond.precede(bt)
+    for t in g.tasks:
+        t.propagate_errors = False
+    with pytest.raises(ValueError, match="pass 3"):
+        ex.run(g).result(10)
+    assert boom["i"] == 3  # the loop stopped at the failing pass
+
+
+def test_condition_loop_cancellation(ex):
+    """Cancelling the run future stops a spinning loop cooperatively."""
+    g = TaskGraph()
+    hits = []
+    entry = g.add(lambda: None)
+    body = g.add(lambda: (hits.append(1), time.sleep(0.005)))
+    body.after(entry)
+    cond = g.add(lambda: 0, kind="condition")  # would loop forever
+    cond.after(body)
+    cond.precede(body)
+    fut = ex.run(g)
+    while not hits:
+        time.sleep(0.001)
+    assert fut.cancel() is True
+    with pytest.raises(CancelledError):
+        fut.result(10)
+    n = len(hits)
+    time.sleep(0.05)
+    assert len(hits) == n  # the loop genuinely stopped
+    ex.wait_idle(10)
+
+
+# ---------------------------------------------------------------------------
+# dynamic subflows
+# ---------------------------------------------------------------------------
+
+
+def test_subflow_join_before_successor(ex):
+    """Every runtime-spawned task completes before the spawner's successor
+    runs, and the gather's result is visible through the spawner."""
+    order = []
+    g = TaskGraph()
+
+    def spawn(rt):
+        ws = [rt.add(lambda i=i: order.append(i) or i * i, name=f"w{i}") for i in range(8)]
+        return rt.gather(ws)
+
+    sp = g.add(spawn, takes_runtime=True, name="spawn")
+    # the spawner's dataflow value is the gather's result (join unwraps it)
+    done = g.then(sp, lambda vals: order.append(("joined", sorted(vals))))
+    assert ex.run(g).result(10) is None
+    assert done.result is None
+    assert order[-1] == ("joined", [i * i for i in range(8)])
+    assert sorted(order[:-1]) == list(range(8))
+
+
+def test_subflow_sized_by_runtime_data(ex):
+    """The fan-out width comes from data the task sees at execution time."""
+    g = TaskGraph()
+    width = g.add(lambda: 5, name="width")
+
+    def spawn(rt, n):
+        return rt.gather([rt.add(lambda i=i: i, name=f"s{i}") for i in range(n)])
+
+    sp = g.add(spawn, takes_inputs=True, takes_runtime=True, name="spawn")
+    sp.succeed(width)
+    total = g.then(sp, sum)
+    assert ex.run(g).result(10) is None
+    assert total.result == sum(range(5))
+    assert len(sp._spawned) == 6  # 5 workers + gather
+
+
+def test_subflow_failure_propagates_to_future(ex):
+    g = TaskGraph()
+
+    def spawn(rt):
+        rt.add(lambda: None)
+        rt.add(lambda: (_ for _ in ()).throw(RuntimeError("shard died")))
+
+    sp = g.add(spawn, takes_runtime=True)
+    g.then(sp, lambda _gt: None)
+    for t in g.tasks:
+        t.propagate_errors = False
+    with pytest.raises(RuntimeError, match="shard died"):
+        ex.run(g).result(10)
+    assert isinstance(sp.exception, RuntimeError)  # adopted by the spawner
+    ex.wait_idle(10)  # pool not poisoned
+
+
+def test_subflow_cancellation_in_flight():
+    """Cancelling mid-subflow skips not-yet-started spawned tasks and the
+    future reports cancellation."""
+    pool = ThreadPool(1)
+    try:
+        ex1 = Executor(pool=pool)
+        gate = threading.Event()
+        started = threading.Event()
+        ran = []
+        g = TaskGraph()
+
+        def spawn(rt):
+            def first():
+                started.set()
+                gate.wait(10)
+                ran.append("first")
+
+            f = rt.add(first)
+            for i in range(4):
+                rt.add(lambda i=i: ran.append(i)).after(f)
+
+        sp = g.add(spawn, takes_runtime=True)
+        g.then(sp, lambda _gt: ran.append("after"))
+        for t in g.tasks:
+            t.propagate_errors = False
+        fut = ex1.run(g)
+        assert started.wait(10)
+        assert fut.cancel() is True  # spawned followers had not started
+        gate.set()
+        with pytest.raises(CancelledError):
+            fut.result(10)
+        pool.wait_idle(10)
+        assert ran == ["first"]  # running body drained; the rest skipped
+    finally:
+        pool.close()
+
+
+def test_subflow_cancellation_mid_spawner_body():
+    """Cancelling while the spawner's body is still running reaches the
+    already-spawned tasks (the live subflow list is published before the
+    body runs), so no writer body executes after a successful cancel."""
+    pool = ThreadPool(2)
+    try:
+        ex1 = Executor(pool=pool)
+        in_body = threading.Event()
+        release = threading.Event()
+        ran = []
+        g = TaskGraph()
+
+        def spawn(rt):
+            for i in range(6):
+                rt.add(lambda i=i: ran.append(i))
+            in_body.set()
+            release.wait(10)  # cancel happens here, mid-body
+
+        sp = g.add(spawn, takes_runtime=True)
+        g.then(sp, lambda _gt: ran.append("after"))
+        for t in g.tasks:
+            t.propagate_errors = False
+        fut = ex1.run(g)
+        assert in_body.wait(10)
+        assert fut.cancel() is True
+        release.set()
+        with pytest.raises(CancelledError):
+            fut.result(10)
+        pool.wait_idle(10)
+        assert ran == []  # every spawned body was skipped
+    finally:
+        pool.close()
+
+
+def test_run_same_task_repeatedly_does_not_chain_callbacks(ex):
+    """Re-running one Task through the facade must not stack resolver
+    wrappers (leak) — each round resolves its own future exactly once."""
+    runs = []
+    base_hits = []
+    t = Task(lambda: runs.append(1) or len(runs))
+    t.propagate_errors = False
+    t.on_done = lambda _t: base_hits.append(1)
+    for expect in (1, 2, 3):
+        t.reset()
+        assert ex.run(t).result(10) == expect
+    assert t.on_done._wrapped.__name__ == "<lambda>"  # base cb, not a wrapper
+    assert len(base_hits) == 3  # fired once per round, not 1+2+3 times
+
+
+def test_run_iterable_rerun_waits_for_completion(ex):
+    """Regression: re-running the same task iterable must return a future
+    that resolves only after the bodies ran (a stale hidden completion
+    task from the previous wrapper graph must not hide the sinks)."""
+    runs = []
+    t = Task(lambda: (time.sleep(0.05), runs.append(1)))
+    t.propagate_errors = False
+    assert ex.run([t]).result(10) is None
+    t.reset()
+    fut = ex.run([t])
+    fut.result(10)
+    assert len(runs) == 2  # second run actually executed before resolving
+    with pytest.raises(TimeoutError):
+        # and a third run's future is live, not pre-resolved
+        t.reset()
+        ex.run([t]).result(0.001)
+    ex.wait_idle(10)
+
+
+def test_nested_subflow_spawner(ex):
+    """A spawned task may itself be a takes_runtime spawner; the outer
+    successor still waits for the innermost join."""
+    order = []
+    g = TaskGraph()
+
+    def outer_spawn(rt):
+        def inner_spawn(rt2):
+            for i in range(3):
+                rt2.add(lambda i=i: order.append(("inner", i)))
+
+        rt.add(inner_spawn, takes_runtime=True, name="inner")
+
+    sp = g.add(outer_spawn, takes_runtime=True, name="outer")
+    g.add(lambda: order.append("after")).after(sp)
+    assert ex.run(g).result(10) is None
+    assert order[-1] == "after"
+    assert sorted(order[:-1]) == [("inner", i) for i in range(3)]
+
+
+def test_subflow_serial_executor():
+    order = []
+    g = TaskGraph()
+
+    def spawn(rt):
+        for i in range(3):
+            rt.add(lambda i=i: order.append(i))
+
+    sp = g.add(spawn, takes_runtime=True)
+    g.add(lambda: order.append("after")).after(sp)
+    SerialExecutor().run(g)
+    assert order[-1] == "after" and sorted(order[:-1]) == [0, 1, 2]
+
+
+def test_subflow_priority_inherited_from_spawner(ex):
+    g = TaskGraph()
+    captured = []
+
+    def spawn(rt):
+        captured.append(rt.add(lambda: None).priority)
+        captured.append(rt.add(lambda: None, priority=-1.0).priority)
+
+    g.add(spawn, takes_runtime=True, priority=2.5)
+    ex.run(g).result(10)
+    assert captured == [2.5, -1.0]
+
+
+# ---------------------------------------------------------------------------
+# run_until + asyncio bridge
+# ---------------------------------------------------------------------------
+
+
+def test_run_until_reruns_to_convergence(ex):
+    state = {"x": 100.0}
+    g = TaskGraph()
+    g.add(lambda: state.update(x=state["x"] / 2))
+    rounds = ex.run_until(g, lambda: state["x"] < 1.0)
+    assert rounds == 7  # 100 / 2^7 < 1
+    assert g.run_count == 7
+
+
+def test_run_until_max_rounds(ex):
+    g = TaskGraph()
+    g.add(lambda: None)
+    with pytest.raises(RuntimeError, match="still false"):
+        ex.run_until(g, lambda: False, max_rounds=3)
+    assert g.run_count == 3
+
+
+def test_await_future_from_asyncio(ex):
+    async def main():
+        return await ex.run(lambda: 6 * 7)
+
+    assert asyncio.run(main()) == 42
+
+
+def test_await_future_already_resolved(ex):
+    fut = ex.run(lambda: "early")
+    fut.result(10)
+
+    async def main():
+        return await fut
+
+    assert asyncio.run(main()) == "early"
+
+
+def test_await_future_delivers_exception(ex):
+    async def main():
+        await ex.run(lambda: (_ for _ in ()).throw(ValueError("async boom")))
+
+    with pytest.raises(ValueError, match="async boom"):
+        asyncio.run(main())
+
+
+def test_co_run_graph_with_condition_loop(ex):
+    g, state = _build_loop(5)
+
+    async def main():
+        await ex.co_run(g)
+        return state["runs"]
+
+    assert asyncio.run(main()) == 5
+
+
+def test_co_run_concurrent_awaits(ex):
+    """Several co_run awaitables progress concurrently on one loop."""
+
+    async def main():
+        futs = [ex.co_run(lambda i=i: i * 10) for i in range(5)]
+        return await asyncio.gather(*futs)
+
+    assert asyncio.run(main()) == [0, 10, 20, 30, 40]
+
+
+def test_future_add_done_callback_fires_once(ex):
+    hits = []
+    fut = Future()
+    fut.add_done_callback(lambda f: hits.append("cb"))
+    fut.set_result(1)
+    fut.set_result(2)  # first-write-wins: no second fire
+    fut.add_done_callback(lambda f: hits.append("late"))  # immediate
+    assert hits == ["cb", "late"]
+
+
+# ---------------------------------------------------------------------------
+# to_dot rendering (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_to_dot_condition_edges_dashed_and_subflow_cluster(ex):
+    g = TaskGraph("render")
+    pick = g.add(lambda: 0, kind="condition", name="pick")
+    a = g.add(lambda: None, name="branch-a")
+    pick.precede(a)
+
+    def spawn(rt):
+        rt.add(lambda: None, name="spawned0")
+
+    sp = g.add(spawn, takes_runtime=True, name="spawner")
+    sp.after(a)
+    dot = g.to_dot()
+    assert "shape=diamond" in dot  # condition node
+    assert "style=dashed" in dot and 'label="0"' in dot  # weak branch edge
+    assert "cluster" not in dot  # subflow only exists after a run
+    ex.run(g).result(10)
+    dot = g.to_dot()
+    assert 'subgraph "cluster_' in dot and "spawned0" in dot
+    assert "style=dotted" in dot  # spawner -> subflow link

@@ -110,7 +110,7 @@ def test_stats_observer_sees_steals():
 
         pool.submit(parent)
         assert gate.wait(10)
-        pool.wait_idle(10)
+        assert pool.wait_idle(10)
     assert obs.stolen >= 1
     assert pool.stats()["steals"] >= 1
 
@@ -159,6 +159,6 @@ def test_chrome_trace_marks_errors_and_cancellations():
             f.result(10)
         except ZeroDivisionError:
             pass
-        pool.wait_idle(10)
+        assert pool.wait_idle(10)
     events = json.loads(tracer.to_json())["traceEvents"]
     assert any("error" in e.get("args", {}) for e in events)

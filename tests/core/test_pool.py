@@ -165,12 +165,29 @@ def test_future_result_and_exception():
         pool.wait_idle()  # future errors do not poison the pool
 
 
-def test_wait_idle_timeout():
+def test_wait_idle_timeout_returns_false():
+    """§10 satellite: timeout is reported as False, never conflated with a
+    task failure (which raises); the eventual successful wait returns True."""
     with ThreadPool(1) as pool:
         pool.submit(lambda: time.sleep(0.5))
-        with pytest.raises(TimeoutError):
-            pool.wait_idle(timeout=0.01)
-        pool.wait_idle(timeout=10)
+        assert pool.wait_idle(timeout=0.01) is False
+        assert pool.wait_idle(timeout=10) is True
+
+
+def test_wait_idle_timeout_preserves_error_for_next_wait():
+    """A timed-out wait must not swallow the first-error marker."""
+    with ThreadPool(1) as pool:
+        release = threading.Event()
+
+        def boom():
+            release.wait(5)
+            raise ValueError("late boom")
+
+        pool.submit(boom)
+        assert pool.wait_idle(timeout=0.01) is False
+        release.set()
+        with pytest.raises(ValueError, match="late boom"):
+            pool.wait_idle(timeout=10)
 
 
 def build_fib_graph(g: TaskGraph, n: int, results: dict, key: str):
@@ -346,6 +363,36 @@ def test_priority_inline_continuation_prefers_high():
         hi = g.add(lambda: order.append("hi"), priority=1.0).succeed(root)
         pool.run(g)
         assert order == ["root", "hi", "lo"]
+
+
+def test_then_continuation_inherits_priority():
+    """Satellite fix: then()-created continuations no longer silently fall
+    back to band 0.0 — they inherit the parent's band unless overridden."""
+    g = TaskGraph()
+    a = g.add(lambda: 1, priority=3.0)
+    b = a.then(lambda x: x + 1)
+    c = b.then(lambda x: x + 1, priority=-1.0)
+    d = g.then(c, lambda x: x)
+    assert b.priority == 3.0
+    assert c.priority == -1.0
+    assert d.priority == -1.0  # TaskGraph.then inherits too
+    assert g.gather([a, c]).priority == 3.0  # joins take the highest band
+
+
+def test_submit_priority_propagates_to_continuations():
+    """ThreadPool.submit(task, priority=) reaches then()-created successors
+    that never chose an explicit band."""
+    pool, gate = _gated_pool()
+    order = []
+    g = TaskGraph()
+    root = g.add(lambda: order.append("chain-root"))
+    root.then(lambda _x: order.append("chain-cont"))
+    pool.submit(lambda: order.append("filler"), priority=1.0)
+    pool.submit(root, priority=5.0)  # whole chain should outrank the filler
+    gate.set()
+    pool.wait_idle(10)
+    pool.close()
+    assert order == ["chain-root", "chain-cont", "filler"]
 
 
 def test_priority_deque_unit():

@@ -130,7 +130,7 @@ def test_prefetcher_close_cancels_and_drains():
         # queued steps were cancelled before their bodies ran
         assert calls == [0]
         assert not pf._inflight
-        pool.wait_idle(timeout=10)  # nothing leaked into the shared pool
+        assert pool.wait_idle(timeout=10)  # nothing leaked into the shared pool
         ok = []
         pool.run(lambda: ok.append(1))  # pool still usable
         assert ok == [1]

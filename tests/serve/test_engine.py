@@ -71,6 +71,28 @@ def test_ssm_family_matches_single_request_decode():
         assert list(map(int, out)) == ref
 
 
+def test_submit_async_matches_sync_submit():
+    """§10 asyncio bridge: awaited generations equal the sync path and the
+    event loop is never blocked by the pool."""
+    import asyncio
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    MAX_LEN = 16
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32) for _ in range(3)]
+    with ServeEngine(model, params, max_slots=2, max_len=MAX_LEN) as engine:
+        sync_outs = engine.generate(prompts, 4, timeout=300)
+
+        async def main():
+            return await asyncio.gather(
+                *(engine.submit_async(p, 4) for p in prompts)
+            )
+
+        async_outs = asyncio.run(main())
+    for s, a in zip(sync_outs, async_outs):
+        assert list(map(int, a)) == list(map(int, s))
+
+
 def test_capacity_eviction_truncates():
     cfg, model, params = _build("tinyllama-1.1b")
     with ServeEngine(model, params, max_slots=1, max_len=10) as engine:
