@@ -8,12 +8,21 @@ argument-delivery overhead (DESIGN.md §8) and two §10 control-flow
 shapes: **condition-loop** (a weak-edge cycle iterated N times — the
 weak-trigger + re-arm dispatch path) and **subflow-fanout** (a chain of
 ``takes_runtime`` spawners, each splicing a dynamic fan-out behind a join
-— the spawn/join dispatch path). Each shape runs on:
+— the spawn/join dispatch path) — and one §11 backend shape:
+**cpu-bound**, a fan-out of pure-Python compute bodies: the workload the
+GIL serializes on threads and the process backend parallelizes. Its
+``ws-process`` row carries ``speedup_vs_thread`` (process wall vs the
+best ws-fast wall of the same shape), the headline §11 figure. Each
+shape runs on:
 
-  ws-fast   the paper's work-stealing pool (FastDeque)
-  stdlib    concurrent.futures.ThreadPoolExecutor driving the same graphs
-            (static DAG shapes only: it has no weak-edge/subflow dispatch)
-  serial    topological execution on one thread (zero-overhead floor)
+  ws-fast     the paper's work-stealing pool (FastDeque)
+  ws-process  the same scheduler, bodies in worker processes
+              (repro.dist.ProcessPool; cpu-bound shape only — per-task
+              IPC buys nothing for no-op bodies)
+  stdlib      concurrent.futures.ThreadPoolExecutor driving the same
+              graphs (static DAG shapes only: no weak-edge/subflow
+              dispatch)
+  serial      topological execution on one thread (zero-overhead floor)
 
 The discriminating figure is **dependency-counting overhead per task**:
 (wall − serial wall of the same shape) / tasks-executed, in µs — what the
@@ -25,12 +34,16 @@ trajectory is diffable across PRs, and
 §10 shapes, so the new dispatch paths cannot silently regress.
 
     PYTHONPATH=src python benchmarks/graph_bench.py [--quick] \
-        [--out BENCH_graph.json] [--trace trace.json] [--threads 1,2,4,8]
+        [--out BENCH_graph.json] [--trace trace.json] [--threads 1,2,4,8] \
+        [--shape cpu-bound]
 
 ``--threads`` sweeps the work-stealing pool over several worker counts
-(serial/stdlib rows are unaffected; stdlib stays at the default).
-``--trace`` additionally records one wavefront run through the
-Chrome-trace observer (open the file in chrome://tracing).
+(serial/stdlib rows are unaffected; stdlib stays at the default; the
+process pool always runs at ``os.cpu_count()`` workers — oversubscribing
+processes only adds memory). ``--shape`` filters to shapes whose name
+starts with the given prefix. ``--trace`` additionally records one
+wavefront run through the Chrome-trace observer (open the file in
+chrome://tracing).
 """
 from __future__ import annotations
 
@@ -150,8 +163,32 @@ def build_subflow_fanout(g: TaskGraph, width: int, depth: int) -> int:
     return depth * (width + 2)
 
 
+def _burn(iters: int) -> float:
+    """Pure-Python compute body: holds the GIL for its whole duration, so
+    thread-backend copies serialize while process-backend copies run on
+    separate cores. Module-level so every backend can ship it."""
+    x = 0.0
+    for i in range(iters):
+        x += (i * i) % 7
+    return x
+
+
+def build_cpu_bound(g: TaskGraph, width: int, iters: int) -> None:
+    """§11 backend shape: root -> ``width`` independent ``_burn`` bodies
+    -> gather. Wall time is compute-dominated; the executors differ only
+    in where the bodies run (GIL-serialized threads vs worker processes)."""
+    root = g.add(lambda: None, name="root")
+    layer = [
+        g.add(lambda n=iters: _burn(n), name=f"burn{i}").after(root)
+        for i in range(width)
+    ]
+    g.gather(layer, fn=lambda *vs: sum(vs), name="total")
+
+
 # shapes the stdlib executor cannot run (no weak-edge / subflow dispatch)
-STDLIB_UNSUPPORTED = ("condition-loop", "subflow-fanout")
+STDLIB_UNSUPPORTED = ("condition-loop", "subflow-fanout", "cpu-bound")
+# the one shape whose bodies are heavy enough to amortize per-job IPC
+PROCESS_SHAPES = ("cpu-bound",)
 
 
 def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], Optional[int]]]:
@@ -163,6 +200,8 @@ def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], Optional[int]]]:
     fan_w, fan_d = (16, 32) if quick else (32, 128)
     loop_body, loop_iters = (8, 64) if quick else (16, 256)
     sub_w, sub_d = (16, 32) if quick else (32, 128)
+    cpu_w = 2 * (os.cpu_count() or 1)
+    cpu_n = 240_000 if quick else 600_000
     return {
         f"chain({chain_n})": lambda g: build_chain(g, chain_n),
         f"chain-dataflow({chain_n})": lambda g: build_chain_dataflow(g, chain_n),
@@ -173,6 +212,7 @@ def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], Optional[int]]]:
             g, loop_body, loop_iters
         ),
         f"subflow-fanout({sub_w}x{sub_d})": lambda g: build_subflow_fanout(g, sub_w, sub_d),
+        f"cpu-bound({cpu_w}x{cpu_n})": lambda g: build_cpu_bound(g, cpu_w, cpu_n),
     }
 
 
@@ -198,16 +238,26 @@ def _time_graph(make_executor, build, repeats: int) -> tuple[float, float, int]:
     return best_wall, best_cpu, ntasks
 
 
-def run_bench(quick: bool, thread_counts: list[int]) -> list[dict]:
+def run_bench(
+    quick: bool, thread_counts: list[int], shape_filter: Optional[str] = None
+) -> list[dict]:
     """Rows for every shape × executor; ws-fast is swept over
-    ``thread_counts`` (each row carries a ``threads`` field)."""
+    ``thread_counts`` (each row carries a ``threads`` field), ws-process
+    runs the cpu-bound shape at ``os.cpu_count()`` workers."""
     repeats = 2 if quick else 3
+    cores = os.cpu_count() or 1
     rows: list[dict] = []
     serial_wall: dict[str, float] = {}
     for shape, build in shapes(quick).items():
+        if shape_filter and not shape.startswith(shape_filter):
+            continue
         executors: list[tuple[str, int, Callable[[], object]]] = [
             ("ws-fast", t, (lambda t=t: ThreadPool(t))) for t in thread_counts
         ]
+        if shape.startswith(PROCESS_SHAPES):
+            from repro.dist import ProcessPool
+
+            executors.append(("ws-process", cores, lambda: ProcessPool(cores)))
         if not shape.startswith(STDLIB_UNSUPPORTED):
             executors.append(("stdlib", NUM_THREADS, lambda: StdlibExecutor(NUM_THREADS)))
         executors.append(("serial", 1, lambda: SerialExecutor()))
@@ -226,11 +276,28 @@ def run_bench(quick: bool, thread_counts: list[int]) -> list[dict]:
                     us_per_task=wall * 1e6 / ntasks,
                 )
             )
-    # dependency-counting overhead: scheduler cost over the serial floor
+    # dependency-counting overhead: scheduler cost over the serial floor.
+    # The cpu-bound shape is compute- not dispatch-dominated: its "overhead"
+    # would be parallel speedup noise, so it records speedup instead.
     for r in rows:
         floor = serial_wall.get(r["bench"])
-        if floor is not None:
+        if floor is not None and not r["bench"].startswith(PROCESS_SHAPES):
             r["overhead_us_per_task"] = (r["wall_ms"] / 1e3 - floor) * 1e6 / r["tasks"]
+    # §11 headline: process wall vs the *best* thread-backend wall of the
+    # same shape (conservative: the fastest swept ws-fast row)
+    best_thread: dict[str, float] = {}
+    for r in rows:
+        if r["executor"] == "ws-fast":
+            b = best_thread.get(r["bench"])
+            if b is None or r["wall_ms"] < b:
+                best_thread[r["bench"]] = r["wall_ms"]
+    for r in rows:
+        if r["executor"] == "ws-process":
+            if r["bench"] in best_thread:
+                r["speedup_vs_thread"] = best_thread[r["bench"]] / r["wall_ms"]
+            floor = serial_wall.get(r["bench"])
+            if floor is not None:
+                r["speedup_vs_serial"] = floor * 1e3 / r["wall_ms"]
     return rows
 
 
@@ -256,20 +323,30 @@ def main() -> None:
         default=str(NUM_THREADS),
         help="comma-separated worker counts to sweep the ws-fast pool over (default: 4)",
     )
+    ap.add_argument(
+        "--shape",
+        default=None,
+        help="only run shapes whose name starts with this prefix (e.g. cpu-bound)",
+    )
     args = ap.parse_args()
     thread_counts = [int(t) for t in args.threads.split(",") if t.strip()]
 
-    rows = run_bench(args.quick, thread_counts)
+    rows = run_bench(args.quick, thread_counts, args.shape)
+    if not rows:
+        print(f"no shape matches --shape {args.shape!r}")
+        return 1
 
     print(
-        f"{'bench':<24}{'executor':<10}{'thr':>4}{'tasks':>7}"
-        f"{'wall_ms':>10}{'us/task':>9}{'ovh us/task':>13}"
+        f"{'bench':<26}{'executor':<12}{'thr':>4}{'tasks':>7}"
+        f"{'wall_ms':>10}{'us/task':>9}{'ovh us/task':>13}{'vs thread':>11}"
     )
     for r in rows:
+        speed = r.get("speedup_vs_thread")
         print(
-            f"{r['bench']:<24}{r['executor']:<10}{r['threads']:>4}{r['tasks']:>7}"
+            f"{r['bench']:<26}{r['executor']:<12}{r['threads']:>4}{r['tasks']:>7}"
             f"{r['wall_ms']:>10.2f}{r['us_per_task']:>9.2f}"
             f"{r.get('overhead_us_per_task', 0.0):>13.2f}"
+            f"{(f'{speed:.2f}x' if speed else ''):>11}"
         )
 
     out = pathlib.Path(args.out)
@@ -283,6 +360,7 @@ def main() -> None:
                     "num_threads": NUM_THREADS,
                     "threads_swept": thread_counts,
                     "cpu_count": os.cpu_count(),
+                    "shape_filter": args.shape,
                     "timestamp": time.time(),
                 },
                 "rows": rows,

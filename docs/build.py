@@ -1,0 +1,243 @@
+#!/usr/bin/env python
+"""Build the API reference for ``repro.core`` + ``repro.dist`` and verify
+cross-references.
+
+Two generator paths, one contract:
+
+* **pdoc** (preferred; the ``docs`` CI job installs it) — renders the
+  HTML site into ``docs/api/``.
+* **stdlib fallback** — when pdoc is absent (the pinned dev environment
+  ships without it), an ``inspect``-based generator renders Markdown
+  pages into ``docs/api/``, one per module: module docstring, public
+  classes with signatures, public methods, functions. Same inputs, same
+  structure, no extra dependency.
+
+Either way the build **fails (exit 1) on broken cross-references**: every
+``:class:`` / ``:meth:`` / ``:func:`` / ``:attr:`` / ``:data:`` role in
+every docstring of the documented packages must resolve to a real object
+(relative to the defining module, the documented packages, or builtins).
+A docs page that points at a renamed class is worse than no page — this
+is the check the ``docs`` CI job exists to run.
+
+    PYTHONPATH=src python docs/build.py [--out docs/api] [--check-only]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import pathlib
+import pkgutil
+import re
+import sys
+from typing import Any, Iterator
+
+PACKAGES = ("repro.core", "repro.dist")
+
+_ROLE_RE = re.compile(r":(?:class|meth|func|attr|data|obj):`([^`]+)`")
+
+
+# ---------------------------------------------------------------------------
+# cross-reference checking
+# ---------------------------------------------------------------------------
+
+
+def iter_modules() -> Iterator[Any]:
+    for pkg_name in PACKAGES:
+        pkg = importlib.import_module(pkg_name)
+        yield pkg
+        for info in pkgutil.iter_modules(pkg.__path__, prefix=pkg_name + "."):
+            yield importlib.import_module(info.name)
+
+
+def _iter_docstrings(mod: Any) -> Iterator[tuple[str, str, list]]:
+    """(owner-label, docstring, extra-contexts) for the module, its
+    classes, their methods and its functions — everything the generated
+    pages will show. Extra contexts make class-relative roles (a bare
+    ``:meth:`cancel```) resolvable the way Sphinx would."""
+    local_classes = [
+        c
+        for c in vars(mod).values()
+        if inspect.isclass(c) and c.__module__ == mod.__name__
+    ]
+    if mod.__doc__:
+        yield mod.__name__, mod.__doc__, local_classes
+    for cname, cls in vars(mod).items():
+        if cname.startswith("_") or not inspect.isclass(cls):
+            continue
+        if cls.__module__ != mod.__name__:
+            continue  # re-export; documented at its definition site
+        if cls.__doc__:
+            yield f"{mod.__name__}.{cname}", cls.__doc__, [cls, *local_classes]
+        for mname, meth in vars(cls).items():
+            if mname.startswith("_") and mname not in ("__init__",):
+                continue
+            doc = inspect.getdoc(meth) if callable(meth) else None
+            if doc:
+                yield f"{mod.__name__}.{cname}.{mname}", doc, [cls, *local_classes]
+    for fname, fn in vars(mod).items():
+        if fname.startswith("_") or not inspect.isfunction(fn):
+            continue
+        if fn.__module__ == mod.__name__ and fn.__doc__:
+            yield f"{mod.__name__}.{fname}", fn.__doc__, local_classes
+
+
+def _resolve(ref: str, mod: Any, extra_contexts: list = ()) -> bool:
+    """Can ``ref`` (role target, possibly ``~``-prefixed and dotted) be
+    resolved to a real object?"""
+    name = ref.lstrip("~")
+    contexts: list[Any] = [mod, *extra_contexts]
+    for pkg_name in PACKAGES + ("repro",):
+        try:
+            contexts.append(importlib.import_module(pkg_name))
+        except ImportError:  # pragma: no cover - packages exist by construction
+            pass
+    parts = name.split(".")
+    # absolute import path (repro.dist.shm_arena.ShmArena)
+    for split in range(len(parts), 0, -1):
+        mod_path, attrs = ".".join(parts[:split]), parts[split:]
+        try:
+            obj: Any = importlib.import_module(mod_path)
+        except ImportError:
+            continue
+        try:
+            for a in attrs:
+                obj = getattr(obj, a)
+            return True
+        except AttributeError:
+            continue
+    # relative to a known namespace (Future, Future.cancel, np.ndarray…)
+    for ctx in contexts:
+        obj = ctx
+        try:
+            for a in parts:
+                obj = getattr(obj, a)
+            return True
+        except AttributeError:
+            continue
+    return hasattr(__builtins__, parts[0]) or parts[0] in dir(__builtins__)
+
+
+def check_cross_references() -> list[str]:
+    """Every docstring role target must resolve. Returns failure lines."""
+    failures: list[str] = []
+    checked = 0
+    for mod in iter_modules():
+        for owner, doc, extra in _iter_docstrings(mod):
+            for match in _ROLE_RE.finditer(doc):
+                checked += 1
+                if not _resolve(match.group(1), mod, extra):
+                    failures.append(f"{owner}: unresolvable reference {match.group(0)}")
+    print(f"cross-reference check: {checked} refs in {len(list(iter_modules()))} modules")
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+
+def build_with_pdoc(out: pathlib.Path) -> None:
+    import pdoc
+
+    pdoc.pdoc(*PACKAGES, output_directory=out)
+    print(f"pdoc site written to {out}")
+
+
+def _signature(obj: Any) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"
+
+
+def _md_escape_doc(doc: str) -> str:
+    """Docstrings are reST-flavored; fence doctest blocks so Markdown
+    renderers keep them verbatim."""
+    out: list[str] = []
+    in_code = False
+    for line in doc.splitlines():
+        is_code = line.lstrip().startswith((">>>", "...")) or (
+            in_code and line.strip() and line.startswith("    ")
+        )
+        if is_code and not in_code:
+            out.append("```python")
+            in_code = True
+        elif not is_code and in_code and not line.strip():
+            out.append("```")
+            in_code = False
+        out.append(line)
+    if in_code:
+        out.append("```")
+    return "\n".join(out)
+
+
+def build_fallback(out: pathlib.Path) -> None:
+    """Markdown API reference with stdlib ``inspect`` only."""
+    out.mkdir(parents=True, exist_ok=True)
+    index = ["# API reference", "", "Generated by `docs/build.py` (stdlib fallback).", ""]
+    for mod in iter_modules():
+        page = out / (mod.__name__ + ".md")
+        lines = [f"# `{mod.__name__}`", ""]
+        if mod.__doc__:
+            lines += [_md_escape_doc(inspect.cleandoc(mod.__doc__)), ""]
+        for cname, cls in sorted(vars(mod).items()):
+            if cname.startswith("_") or not inspect.isclass(cls):
+                continue
+            if cls.__module__ != mod.__name__:
+                continue
+            lines += [f"## class `{cname}{_signature(cls)}`", ""]
+            if cls.__doc__:
+                lines += [_md_escape_doc(inspect.cleandoc(cls.__doc__)), ""]
+            for mname, meth in sorted(vars(cls).items()):
+                if mname.startswith("_") or not callable(meth):
+                    continue
+                doc = inspect.getdoc(meth)
+                lines += [f"### `{cname}.{mname}{_signature(meth)}`", ""]
+                if doc:
+                    lines += [_md_escape_doc(doc), ""]
+        for fname, fn in sorted(vars(mod).items()):
+            if fname.startswith("_") or not inspect.isfunction(fn):
+                continue
+            if fn.__module__ != mod.__name__:
+                continue
+            lines += [f"## `{fname}{_signature(fn)}`", ""]
+            if fn.__doc__:
+                lines += [_md_escape_doc(inspect.cleandoc(fn.__doc__)), ""]
+        page.write_text("\n".join(lines))
+        summary = (inspect.cleandoc(mod.__doc__).splitlines()[0] if mod.__doc__ else "")
+        index.append(f"- [`{mod.__name__}`]({page.name}) — {summary}")
+    (out / "index.md").write_text("\n".join(index) + "\n")
+    print(f"markdown API reference written to {out}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(pathlib.Path(__file__).parent / "api"))
+    ap.add_argument(
+        "--check-only", action="store_true", help="only verify cross-references"
+    )
+    args = ap.parse_args()
+
+    failures = check_cross_references()
+    if failures:
+        print("\nBROKEN CROSS-REFERENCES:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("all cross-references resolve")
+    if args.check_only:
+        return 0
+
+    out = pathlib.Path(args.out)
+    try:
+        import pdoc  # noqa: F401
+
+        build_with_pdoc(out)
+    except ImportError:
+        build_fallback(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

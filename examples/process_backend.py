@@ -1,0 +1,90 @@
+"""Process backend demo: the same graph, CPU-bound bodies, three backends.
+
+A fan-out of pure-Python compute bodies is the workload the GIL
+serializes: on the thread backend the four bodies below run one at a
+time no matter how many workers the pool has, while
+``Executor(backend="process")`` ships each body to a worker process and
+they genuinely run on separate cores (DESIGN.md §11). The graph is built
+ONCE — the backend is a constructor switch, not an API change.
+
+    PYTHONPATH=src python examples/process_backend.py [--iters 400000]
+
+Expected output shape (host-dependent — the speedup scales with real
+cores; a contended 2-vCPU CI box shows ~1.3-1.6x, a dedicated 4-core
+host 2-3x):
+
+    serial     1 worker      182.4 ms   (floor)
+    thread     2 workers     211.7 ms   0.86x vs serial
+    process    2 workers     117.3 ms   1.55x vs serial, 1.80x vs thread
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.core import Executor, TaskGraph
+
+
+def burn(iters: int) -> float:
+    """Pure-Python compute: holds the GIL for its entire duration."""
+    x = 0.0
+    for i in range(iters):
+        x += (i * i) % 7
+    return x
+
+
+def build(g: TaskGraph, width: int, iters: int):
+    """root -> `width` independent burns -> gathered total."""
+    root = g.add(lambda: None, name="root")
+    layer = [
+        g.add(lambda n=iters: burn(n), name=f"burn{i}").after(root)
+        for i in range(width)
+    ]
+    return g.gather(layer, fn=lambda *vs: sum(vs), name="total")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=400_000, help="work per body")
+    ap.add_argument("--width", type=int, default=2 * (os.cpu_count() or 1))
+    args = ap.parse_args()
+
+    cores = os.cpu_count() or 1
+    walls: dict[str, float] = {}
+    expected = None
+    for backend in ("serial", "thread", "process"):
+        g = TaskGraph(f"cpu-bound-{backend}")
+        total = build(g, args.width, args.iters)
+        workers = 1 if backend == "serial" else cores
+        with Executor(workers, backend=backend) as ex:
+            best = float("inf")
+            for _ in range(2):
+                g.reset()
+                t0 = time.perf_counter()
+                ex.run(g).result(300)
+                best = min(best, time.perf_counter() - t0)
+        walls[backend] = best
+        if expected is None:
+            expected = total.result
+        assert total.result == expected, "backends must compute identical results"
+        vs = (
+            "(floor)"
+            if backend == "serial"
+            else f"{walls['serial'] / best:.2f}x vs serial"
+            + (f", {walls['thread'] / best:.2f}x vs thread" if backend == "process" else "")
+        )
+        print(f"{backend:<10} {workers} worker{'s' if workers > 1 else ' '}"
+              f" {best * 1e3:9.1f} ms   {vs}")
+
+    speedup = walls["thread"] / walls["process"]
+    print(f"\nprocess backend: {speedup:.2f}x faster than thread on "
+          f"{args.width} x burn({args.iters}) across {cores} cores")
+    # the GIL guarantees threads cannot parallelize these bodies; processes
+    # must at least match them (they beat them by ~cores on dedicated hosts)
+    assert speedup > 0.9, f"process backend slower than thread ({speedup:.2f}x)"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,7 @@ that adapts its execution policy to statically-scheduled TPU programs.
 The public front door is the :class:`Executor` facade (DESIGN.md §10):
 condition tasks, dynamic subflows, futures and the asyncio bridge all hang
 off it. The lower layers remain importable for drop-in paper fidelity."""
-from .baseline import NaiveThreadPool, SerialExecutor
+from .baseline import NaiveThreadPool, SerialExecutor, SerialPool
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
 from .executor import Executor
 from .graph import CycleError, Module, Runtime, TaskGraph
@@ -27,6 +27,7 @@ from .task import CancelledError, Task, iter_graph
 __all__ = [
     "NaiveThreadPool",
     "SerialExecutor",
+    "SerialPool",
     "EMPTY",
     "ChaseLevDeque",
     "FastDeque",

@@ -17,11 +17,11 @@ from __future__ import annotations
 
 import threading
 from collections import deque as _pydeque
-from typing import Any, Callable, Iterable, Optional, Union
+from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
-from .task import Task, iter_graph
+from .task import CancelledError, Task, iter_graph
 
-__all__ = ["NaiveThreadPool", "SerialExecutor"]
+__all__ = ["NaiveThreadPool", "SerialExecutor", "SerialPool"]
 
 
 class NaiveThreadPool:
@@ -193,3 +193,191 @@ class SerialExecutor:
 
     def __exit__(self, *exc: Any) -> None:
         pass
+
+
+class SerialPool:
+    """Pool-*protocol* adapter over in-thread topological execution.
+
+    :class:`SerialExecutor` runs a graph; ``SerialPool`` additionally
+    speaks the full :class:`~repro.core.ThreadPool` surface the rest of
+    the runtime composes against — ``submit`` / ``submit_future`` /
+    ``wait_idle`` / counted submission / observers — which is what lets
+    ``Executor(backend="serial")`` drive every graph kind (DAGs, condition
+    loops, subflows, ``as_future`` completion) with zero threads. Futures
+    returned through this pool are resolved by the time the submitting
+    call returns.
+
+    Unlike :class:`SerialExecutor` (which lets a body's exception escape
+    ``run``), failures here follow the pool contract: the exception is
+    recorded on the task, poisons the run when ``propagate_errors`` is
+    set (pending bodies are skipped with :class:`CancelledError`, exactly
+    like a poisoned thread pool), and is re-raised by :meth:`wait_idle` or
+    delivered through the attached future.
+    """
+
+    def __init__(self, observers: Any = ()) -> None:
+        self._observers: list[Any] = list(observers)
+        self._first_error: Optional[BaseException] = None
+        self._executed = 0
+        self._stop = False
+
+    # -- pool protocol ---------------------------------------------------------
+
+    @property
+    def num_threads(self) -> int:
+        return 1
+
+    def add_observer(self, observer: Any) -> None:
+        self._observers.append(observer)
+
+    def remove_observer(self, observer: Any) -> None:
+        try:
+            self._observers.remove(observer)
+        except ValueError:
+            pass
+
+    def _notify(self, method: str, *args: Any) -> None:
+        for obs in self._observers:
+            try:
+                getattr(obs, method)(*args)
+            except BaseException:  # noqa: BLE001 - telemetry never poisons the run
+                pass
+
+    def submit(
+        self,
+        work: Union[Task, Callable[[], Any], Iterable[Task]],
+        *,
+        priority: Optional[float] = None,
+    ) -> None:
+        """Run ``work`` to completion on the calling thread (priorities are
+        irrelevant in a serial schedule and ignored)."""
+        if isinstance(work, Task):
+            # single-task contract parity: ThreadPool._schedule runs exactly
+            # the given task (wired predecessors or not), then its fan-out
+            self._run_stack([work])
+        elif callable(work):
+            self._run_graph([Task(work)])
+        else:
+            notify = getattr(work, "_notify_submitted", None)
+            if notify is not None:
+                notify()
+            self._run_graph(iter_graph(list(work)))
+
+    def submit_future(self, fn: Callable[[], Any], *, priority: float = 0.0):
+        from .pool import Future  # deferred: baseline stays below pool.py
+
+        task = Task(fn)
+        task.propagate_errors = False
+        fut = Future(canceller=task.cancel)
+
+        def _resolve(t: Task) -> None:
+            if t.exception is not None:
+                fut.set_exception(t.exception)
+            else:
+                fut.set_result(t.result)
+
+        task.on_done = _resolve
+        self._run_graph([task])
+        return fut
+
+    def _submit_with_context(self, tasks: Sequence[Task], ctx: Any) -> bool:
+        """Counted-completion shim: the graph runs synchronously, then one
+        +1/−1 pulse drains the context and fires its completion callback."""
+        graph = iter_graph(list(tasks))
+        if not graph:
+            return False
+        self._run_graph(graph)
+        ctx.update(1)
+        ctx.update(-1)
+        return True
+
+    def run(self, work: Union[Task, Callable[[], Any], Iterable[Task]]) -> None:
+        self.submit(work)
+        self.wait_idle()
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        err, self._first_error = self._first_error, None
+        if err is not None:
+            raise err
+        return True
+
+    def stats(self) -> dict[str, int]:
+        """`ThreadPool.stats` shape: ``executed`` counts real task
+        executions; steals/parks/wakeups are structurally zero serially."""
+        return {"executed": self._executed, "steals": 0, "parked": 0, "wakeups": 0}
+
+    def close(self) -> None:
+        self._stop = True
+
+    def __enter__(self) -> "SerialPool":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # -- execution ------------------------------------------------------------
+
+    def _run_graph(self, tasks: list) -> None:
+        """Graph-submission path: reset, arm condition members, run from
+        the sources (mirrors ``ThreadPool.submit``'s iterable branch)."""
+        has_cond = False
+        for t in tasks:
+            t.reset()
+            if t.kind == "condition":
+                has_cond = True
+        if has_cond:
+            for t in tasks:
+                t.auto_rearm = True
+        stack = [t for t in tasks if t.is_source]
+        if not stack and tasks:
+            raise ValueError("task graph has no sources (dependency cycle?)")
+        self._run_stack(stack)
+
+    def _run_stack(self, stack: list) -> None:
+        from .graph import Runtime, select_branch, splice_subflow
+
+        while stack:
+            t = stack.pop()
+            rt = Runtime(t) if t.takes_runtime else None
+            if self._observers:
+                self._notify("on_start", t, 0)
+            try:
+                if self._first_error is not None and t.propagate_errors:
+                    t.exception = CancelledError("predecessor failed")
+                    t._done = True  # noqa: SLF001 - pool-side protocol
+                elif rt is not None:
+                    t._spawned = rt.sub.tasks
+                    t.run(rt)
+                else:
+                    t.run()
+            except BaseException as exc:  # noqa: BLE001 - recorded, raised in wait
+                t.exception = exc
+                if t.propagate_errors and self._first_error is None:
+                    self._first_error = exc
+            self._executed += 1
+            if self._observers:
+                self._notify("on_finish", t, 0)
+            if t.on_done is not None:
+                try:
+                    t.on_done(t)
+                except BaseException:  # noqa: BLE001 - callback errors dropped
+                    pass
+            if t.auto_rearm:
+                t.rearm()
+            if rt is not None and rt.sub.tasks and t.exception is None:
+                sub, join = splice_subflow(t, rt.sub)
+                if not t.propagate_errors:
+                    for st in sub + [join]:
+                        st.propagate_errors = False
+                t._spawned = sub
+                roots = [s for s in sub if s.is_source]
+                stack.extend(roots if roots else [join])
+                continue
+            if t.kind == "condition":
+                branch = select_branch(t)
+                if branch is not None:
+                    stack.append(branch)
+                continue
+            for s in t.successors:
+                if s.decrement():
+                    stack.append(s)

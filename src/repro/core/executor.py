@@ -37,6 +37,7 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
+from .baseline import SerialPool
 from .graph import Runtime, TaskGraph
 from .pool import Future, ThreadPool
 from .task import Task
@@ -45,40 +46,101 @@ __all__ = ["Executor", "Runtime"]
 
 
 class Executor:
-    """Facade over a :class:`ThreadPool` running task graphs.
+    """Facade over an execution backend running task graphs.
 
     Parameters
     ----------
     num_threads:
         Worker count for an owned pool (``os.cpu_count()`` default, as in
-        the paper). Ignored when ``pool`` is given.
+        the paper): worker *threads* for the thread backend, worker
+        *processes* for the process backend. Ignored for ``serial`` and
+        when ``pool`` is given.
+    backend:
+        Which execution backend to own (DESIGN.md §11):
+
+        * ``"thread"`` (default) — the paper's work-stealing
+          :class:`ThreadPool`; best for IO/GIL-releasing bodies and
+          minimum per-task overhead.
+        * ``"process"`` — :class:`repro.dist.ProcessPool`: the same
+          scheduler, with task bodies shipped to worker processes so
+          CPU-bound pure-Python bodies actually run in parallel. Large
+          array edge values cross via shared memory.
+        * ``"serial"`` — :class:`~repro.core.SerialPool`: everything on
+          the calling thread; the zero-overhead floor and a
+          deterministic debugging backend.
+
+        Every graph kind — DAGs, condition loops, subflows, ``run_until``,
+        the asyncio bridge — behaves identically on all three (the
+        backend-parametrized executor test suite enforces it).
     pool:
         Adopt an existing (possibly shared) pool instead of owning one;
-        ``close()`` then leaves it running.
+        ``close()`` then leaves it running. Mutually exclusive with
+        ``backend``.
     observers, name, deque_cls:
         Forwarded to the owned pool (see ``ThreadPool``).
+    backend_kwargs:
+        Extra keyword arguments for the owned pool's constructor (e.g.
+        ``mp_context="spawn"`` or ``arena_threshold=...`` for the process
+        backend).
+
+    Doctest — the backend is a constructor switch, not an API change::
+
+        >>> from repro.core import Executor, TaskGraph
+        >>> for backend in ("serial", "thread"):
+        ...     g = TaskGraph()
+        ...     total = g.gather([g.add(lambda i=i: i * i) for i in range(4)])
+        ...     with Executor(2, backend=backend) as ex:
+        ...         _ = ex.run(g).result(10)
+        ...     print(backend, sum(total.result))
+        serial 14
+        thread 14
     """
 
     def __init__(
         self,
         num_threads: Optional[int] = None,
         *,
-        pool: Optional[ThreadPool] = None,
+        backend: Optional[str] = None,
+        pool: Optional[Any] = None,
         observers: Sequence[Any] = (),
         name: str = "repro-executor",
         deque_cls: Optional[type] = None,
+        **backend_kwargs: Any,
     ) -> None:
         if pool is not None:
+            if backend is not None:
+                raise ValueError("pass either backend= or pool=, not both")
             self.pool = pool
+            if isinstance(pool, SerialPool):
+                self.backend = "serial"
+            elif getattr(pool, "_offload", None) is not None:  # dist.ProcessPool
+                self.backend = "process"
+            else:
+                self.backend = "thread"
             self._own_pool = False
             for obs in observers:
                 pool.add_observer(obs)
-        else:
+            return
+        backend = backend or "thread"
+        self.backend = backend
+        if backend == "serial":
+            self.pool = SerialPool(observers=observers)
+        elif backend in ("thread", "process"):
             kwargs: dict[str, Any] = {"name": name, "observers": observers}
             if deque_cls is not None:
                 kwargs["deque_cls"] = deque_cls
-            self.pool = ThreadPool(num_threads, **kwargs)
-            self._own_pool = True
+            kwargs.update(backend_kwargs)
+            if backend == "thread":
+                self.pool = ThreadPool(num_threads, **kwargs)
+            else:
+                from repro.dist import ProcessPool  # deferred: core stays below dist
+
+                self.pool = ProcessPool(num_threads, **kwargs)
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected 'thread', 'process' or 'serial'"
+            )
+        self._own_pool = True
 
     # -- submission ------------------------------------------------------------
 
@@ -240,4 +302,4 @@ class Executor:
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         own = "own" if self._own_pool else "shared"
-        return f"Executor({self.pool.num_threads} threads, {own} pool)"
+        return f"Executor({self.pool.num_threads} workers, {self.backend} backend, {own} pool)"

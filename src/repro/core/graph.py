@@ -114,6 +114,7 @@ class Runtime:
         takes_inputs: bool = False,
         kind: str = "static",
         takes_runtime: bool = False,
+        affinity: str = "any",
     ) -> Task:
         """Spawn one subflow task. Nested ``takes_runtime`` spawners are
         supported, as is ``kind="condition"`` with two constraints: acyclic
@@ -128,6 +129,7 @@ class Runtime:
             takes_inputs=takes_inputs,
             kind=kind,
             takes_runtime=takes_runtime,
+            affinity=affinity,
         )
         t._explicit_pr = self.task._explicit_pr if priority is None else True
         return t
@@ -209,6 +211,28 @@ def splice_subflow(spawner: Task, sub: "TaskGraph") -> tuple[list[Task], Task]:
 
 
 class TaskGraph:
+    """Named container of :class:`Task` objects plus the dataflow runtime
+    (module docs above).
+
+    Build once, run N times — through an :class:`~repro.core.Executor`
+    (any backend), a :class:`~repro.core.ThreadPool`, or serially::
+
+        >>> from repro.core import Executor, TaskGraph
+        >>> g = TaskGraph("pipeline")
+        >>> a = g.add(lambda: 2, name="a")
+        >>> b = g.add(lambda: 3, name="b")
+        >>> total = g.gather([a, b], fn=lambda x, y: x + y, name="sum")
+        >>> with Executor(backend="serial") as ex:
+        ...     _ = ex.run(g).result(10)
+        >>> total.result
+        5
+
+    Parameters
+    ----------
+    name:
+        Label used in DOT exports, trace events and error messages.
+    """
+
     def __init__(self, name: str = "") -> None:
         self.name = name
         self.tasks: list[Task] = []
@@ -228,7 +252,21 @@ class TaskGraph:
         takes_inputs: bool = False,
         kind: str = "static",
         takes_runtime: bool = False,
+        affinity: str = "any",
     ) -> Task:
+        """Create a :class:`Task` owned by this graph and return it.
+
+        Parameters mirror the ``Task`` constructor (``fn`` body, wiring
+        happens afterwards via :meth:`Task.succeed` / :meth:`Task.after`):
+        ``takes_inputs`` turns on dataflow argument delivery,
+        ``kind="condition"`` makes a §10 branching task, ``takes_runtime``
+        hands the body a :class:`Runtime` for subflow spawning, and
+        ``affinity`` constrains §11 process-backend placement
+        (``"any"`` / ``"local"`` / ``"remote"``). An omitted ``name``
+        defaults to ``t<index>``; an omitted ``priority`` is inheritable
+        (see ``Task.priority``). Raises ``ValueError`` for an unknown
+        ``kind``/``affinity`` or a condition task that takes a runtime.
+        """
         t = Task(
             fn,
             name=name or f"t{len(self.tasks)}",
@@ -236,6 +274,7 @@ class TaskGraph:
             takes_inputs=takes_inputs,
             kind=kind,
             takes_runtime=takes_runtime,
+            affinity=affinity,
         )
         t.graph = self
         self.tasks.append(t)

@@ -71,6 +71,15 @@ class StatsObserver(PoolObserver):
     task name (the prefix before ``:`` — so ``prefill:7`` and ``prefill:9``
     aggregate as ``prefill``). ``summary()`` returns a plain dict suitable
     for logging or JSON.
+
+    Attach at pool construction or any time via ``add_observer``::
+
+        >>> from repro.core import StatsObserver, ThreadPool
+        >>> stats = StatsObserver()
+        >>> with ThreadPool(2, observers=[stats]) as pool:
+        ...     pool.run(lambda: None)
+        >>> stats.summary()["finished"]
+        1
     """
 
     def __init__(self) -> None:

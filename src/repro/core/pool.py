@@ -125,6 +125,17 @@ class Future:
     event loop (:meth:`__await__` hands completion over via
     ``call_soon_threadsafe``), which is what ``Executor.co_run`` and
     ``ServeEngine.submit_async`` build on (DESIGN.md §10).
+
+    Producer/consumer protocol in one glance::
+
+        >>> from repro.core import Future
+        >>> fut = Future()
+        >>> fut.done()
+        False
+        >>> fut.set_result("ready")    # producer side, first write wins
+        >>> fut.set_result("ignored")
+        >>> fut.result(timeout=0)      # consumer side
+        'ready'
     """
 
     __slots__ = (
@@ -285,6 +296,18 @@ class ThreadPool:
     guarded by ``_ext_lock``. ``_outstanding()`` reads the completed cells
     *before* the claimed cells, so a zero result proves quiescence — every
     completion counted implies its claim was counted too.
+
+    The paper's usage shape — submit async work and graphs, wait, close::
+
+        >>> from repro.core import Task, ThreadPool
+        >>> with ThreadPool(2) as pool:
+        ...     fut = pool.submit_future(lambda: 6 * 7)
+        ...     head = Task(lambda: 10)
+        ...     tail = Task(lambda x: x + 1, takes_inputs=True).succeed(head)
+        ...     pool.submit([head, tail])
+        ...     _ = pool.wait_idle(10)
+        >>> fut.result(10), tail.result
+        (42, 11)
     """
 
     def __init__(
@@ -317,6 +340,14 @@ class ThreadPool:
         # submitter pops one and sets its event (targeted wakeup).
         self._parked: _pydeque[int] = _pydeque()
         self._events = [threading.Event() for _ in range(n)]
+        # -- process-backend seams (DESIGN.md §11). Both stay None on a
+        # plain ThreadPool, so the thread backend pays one falsy check per
+        # submission (`_wire_tasks`) and per executed body (`_offload`).
+        # ``ProcessPool`` (repro.dist) binds them: `_wire_tasks` serializes
+        # eligible bodies at submit, `_offload` ships a wired body to a
+        # worker process instead of calling it in-thread.
+        self._wire_tasks: Optional[Callable[..., None]] = None
+        self._offload: Optional[Callable[[Task, int], None]] = None
         # -- per-worker statistic cells (slot n: non-worker threads)
         self._executed = [0] * (n + 1)
         self._steals = [0] * (n + 1)
@@ -377,13 +408,20 @@ class ThreadPool:
         (iterable) submissions keep per-task priorities.
         """
         if isinstance(work, Task):
-            if priority is not None:
-                for t in iter_graph([work]):
-                    if t is work or not t._explicit_pr:
-                        t.priority = priority
+            if priority is not None or self._wire_tasks is not None:
+                graph = iter_graph([work])  # one traversal serves both steps
+                if priority is not None:
+                    for t in graph:
+                        if t is work or not t._explicit_pr:
+                            t.priority = priority
+                if self._wire_tasks is not None:
+                    self._wire_tasks(graph)
             self._schedule(work)
         elif callable(work):
-            self._schedule(Task(work, priority=priority))
+            task = Task(work, priority=priority)
+            if self._wire_tasks is not None:
+                self._wire_tasks((task,))
+            self._schedule(task)
         else:
             notify = getattr(work, "_notify_submitted", None)
             if notify is not None:  # TaskGraph bumps its run_count
@@ -405,6 +443,8 @@ class ThreadPool:
                 for t in graph:
                     t.auto_rearm = True
                     t._slow = True
+            if self._wire_tasks is not None:
+                self._wire_tasks(graph)
             roots = [t for t in graph if t.is_source]
             if not roots and graph:
                 raise ValueError("task graph has no sources (dependency cycle?)")
@@ -432,6 +472,8 @@ class ThreadPool:
                 fut.set_result(t.result)
 
         task.on_done = _resolve
+        if self._wire_tasks is not None:
+            self._wire_tasks((task,))
         self._schedule(task)
         return fut
 
@@ -458,6 +500,8 @@ class ThreadPool:
         if has_cond:
             for t in graph:
                 t.auto_rearm = True
+        if self._wire_tasks is not None:
+            self._wire_tasks(graph)
         roots = [t for t in graph if t.is_source]
         if not roots:
             if graph:
@@ -696,6 +740,8 @@ class ThreadPool:
                     # they are spawned and can cancel them before they start
                     task._spawned = rt.sub.tasks
                     task.run(rt)
+                elif self._offload is not None:
+                    self._offload(task, index)
                 else:
                     task.run()
             except BaseException as exc:  # noqa: BLE001 - recorded + re-raised in wait
@@ -788,6 +834,11 @@ class ThreadPool:
                 st._slow = ctx is not None or st._slow
                 if not task.propagate_errors:
                     st.propagate_errors = False
+            if self._wire_tasks is not None:
+                # runtime-spawned tasks are wired on the worker: a body
+                # that cannot serialize surfaces when that task runs
+                # (defer) instead of raising inside the scheduler loop
+                self._wire_tasks(sub, defer=True)
             task._spawned = sub
             scheduled = [t for t in sub if t.is_source]
             if join.num_predecessors == 0:  # empty-sink degenerate case

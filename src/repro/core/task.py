@@ -122,6 +122,35 @@ class Task:
         Optional callback ``fn(task)`` invoked by the executor exactly once
         after the task completes — whether it ran, failed, or was skipped
         (cancelled / poisoned graph). This is how futures observe tasks.
+    affinity:
+        Where the *body* may execute under a multi-process backend
+        (DESIGN.md §11): ``"any"`` (default — offloaded to a worker
+        process when the body serializes, run in-parent otherwise),
+        ``"local"`` (always in-parent), or ``"remote"`` (must offload; an
+        unserializable body raises ``UnpicklableTaskError`` at submit).
+        Thread and serial backends ignore the field entirely. Control-flow
+        bodies — conditions, ``takes_runtime`` spawners — always run
+        in-parent regardless, because they drive the scheduler itself.
+
+    The paper's ``(a+b)*(c+d)`` graph, wired exactly as in §2.2::
+
+        >>> from repro.core import SerialExecutor, Task
+        >>> box = {}
+        >>> get_a = Task(lambda: box.__setitem__("a", 1), name="a")
+        >>> get_b = Task(lambda: box.__setitem__("b", 2), name="b")
+        >>> get_sum = Task(lambda: box.__setitem__("s", box["a"] + box["b"]))
+        >>> _ = get_sum.succeed(get_a, get_b)   # runs after both
+        >>> SerialExecutor().run([get_a, get_b, get_sum])
+        >>> box["s"]
+        3
+
+    or dataflow-style, results flowing along the edges (DESIGN.md §8)::
+
+        >>> a, b = Task(lambda: 1), Task(lambda: 2)
+        >>> s = Task(lambda x, y: x + y, takes_inputs=True).succeed(a, b)
+        >>> SerialExecutor().run([a, b, s])
+        >>> s.result
+        3
     """
 
     __slots__ = (
@@ -141,6 +170,8 @@ class Task:
         "on_done",
         "ctx",
         "auto_rearm",
+        "affinity",
+        "_wire",
         "_slow",
         "_explicit_pr",
         "_spawned",
@@ -161,9 +192,12 @@ class Task:
         takes_inputs: bool = False,
         kind: str = "static",
         takes_runtime: bool = False,
+        affinity: str = "any",
     ) -> None:
         if kind not in ("static", "condition"):
             raise ValueError(f"unknown task kind {kind!r}")
+        if affinity not in ("any", "local", "remote"):
+            raise ValueError(f"unknown task affinity {affinity!r}")
         if kind == "condition" and takes_runtime:
             # the subflow splice would take over the weak successor list and
             # strongly decrement edges that hold no countdown tokens — every
@@ -190,6 +224,12 @@ class Task:
         # counted runs all route through the full-featured fan-out.
         self.ctx: Any = None
         self.auto_rearm = False
+        # Process-backend placement (DESIGN.md §11): `affinity` is the
+        # user's constraint; `_wire` caches the serialized body for the
+        # current submission (None = run in-parent). Thread/serial
+        # backends never touch either.
+        self.affinity = affinity
+        self._wire: Any = None
         self._slow = kind == "condition" or takes_runtime
         self._spawned: Optional[list[Task]] = None  # last run's subflow
         # Runtime countdown: a token list popped once per completed
@@ -377,7 +417,7 @@ class Task:
     def done(self) -> bool:
         return self._done
 
-    def run(self, runtime: Any = None) -> None:
+    def run(self, runtime: Any = None, invoke: Optional[Callable[..., Any]] = None) -> None:
         """Execute the wrapped callable (exceptions handled by the pool).
 
         A task cancelled before this point records :class:`CancelledError`
@@ -387,6 +427,13 @@ class Task:
         edges without poisoning the pool when ``propagate_errors`` is off.
         ``runtime`` (supplied by the executor for ``takes_runtime`` tasks)
         is passed to the body as its first positional argument.
+
+        ``invoke`` is the process-backend dispatch seam (DESIGN.md §11):
+        when given, the body call is delegated as ``invoke(fn, args)`` —
+        every other piece of the protocol (claim race, cancellation,
+        input-failure adoption, done transition) still runs here, on the
+        scheduler side, so a remote body changes *where* ``fn`` executes
+        and nothing else.
         """
         try:
             self._claim.pop()  # the run/cancel race atom
@@ -407,10 +454,17 @@ class Task:
                 args = tuple(p.result for p in self.inputs)
                 if runtime is not None:
                     self.result = self.fn(runtime, *args)
+                elif invoke is not None:
+                    self.result = invoke(self.fn, args)
                 else:
                     self.result = self.fn(*args)
         elif self.fn is not None:
-            self.result = self.fn(runtime) if runtime is not None else self.fn()
+            if runtime is not None:
+                self.result = self.fn(runtime)
+            elif invoke is not None:
+                self.result = invoke(self.fn, ())
+            else:
+                self.result = self.fn()
         self._done = True
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

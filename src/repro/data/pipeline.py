@@ -40,7 +40,25 @@ import jax
 
 from repro.core import Executor, Future, Task, TaskGraph, ThreadPool
 
-_SKIP = object()  # sentinel batch for a pass whose step was cancelled away
+
+class _SkipSentinel:
+    """Sentinel batch for a pass whose step was cancelled away.
+
+    Pickles back to the module singleton so identity checks (``b is
+    _SKIP``) survive the process backend's worker boundary."""
+
+    def __reduce__(self):
+        return (_get_skip, ())
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "<_SKIP>"
+
+
+def _get_skip() -> "_SkipSentinel":
+    return _SKIP
+
+
+_SKIP = _SkipSentinel()
 
 
 class _Lane:
@@ -80,14 +98,23 @@ class _Lane:
         self._current: Optional[int] = None
         g = TaskGraph(f"prefetch-lane{index}")
         entry = g.add(None, name=f"entry:{index}")
-        self.produce = g.add(self._produce, name=f"produce:{index}")
+        # produce is pinned in-parent BY CONTRACT, not by the accident of
+        # its bound method failing to pickle: it mutates lane state under
+        # _lk and pulls from the user's source, and pickling would walk
+        # the whole source object graph at submit just to fail on the lock
+        self.produce = g.add(self._produce, name=f"produce:{index}", affinity="local")
         self.produce.after(entry)
+        # transform is the lane's only remote-eligible body: on the process
+        # backend the CPU-bound batch transform escapes the GIL while
+        # produce (stateful bound method) and deliver (identity — a round
+        # trip would ship the batch twice for nothing) stay in-parent
         self.transform = g.then(
             self.produce,
             lambda b: b if b is _SKIP else put_fn(b),
             name=f"transform:{index}",
         )
         self.deliver = self.transform.then(lambda b: b, name=f"deliver:{index}")
+        self.deliver.affinity = "local"
         self.cond = g.add(self._more, kind="condition", name=f"more:{index}")
         self.cond.after(self.deliver)
         self.cond.precede(self.produce)  # branch 0: weak back-edge, loop
@@ -188,19 +215,57 @@ class _Lane:
 
 
 class Prefetcher:
+    """Ordered prefetching over condition-looped lane graphs (module docs).
+
+    ``backend`` selects the execution backend for an *owned* pool (the
+    same ``"thread"`` / ``"process"`` / ``"serial"`` switch as
+    :class:`~repro.core.Executor`; ignored when ``pool`` is given). With
+    ``backend="process"`` each lane's transform body runs in a worker
+    process — CPU-bound transforms (tokenization, augmentation,
+    numpy-side preprocessing) overlap truly in parallel. Pass a
+    numpy-level ``put_fn`` in that case: the default jax ``device_put``
+    transform must talk to this process's devices, so it belongs on the
+    thread backend.
+    """
+
     def __init__(
         self,
         source: Any,  # .batch(step) -> dict of np arrays
         *,
         pool: Optional[ThreadPool] = None,
+        backend: Optional[str] = None,
         depth: int = 2,
         start_step: int = 0,
         put_fn: Optional[Callable[[dict], Any]] = None,  # e.g. sharded device_put
     ) -> None:
         self.source = source
-        self.pool = pool or ThreadPool(2)
-        self._own_pool = pool is None
-        self._exec = Executor(pool=self.pool)
+        if pool is not None and backend is not None:
+            # same contract as Executor: a silently ignored backend= would
+            # leave CPU-bound transforms GIL-serialized with no signal
+            raise ValueError("pass either backend= or pool=, not both")
+        if pool is not None:
+            self.pool = pool
+            self._own_pool = False
+            self._exec = Executor(pool=self.pool)
+        else:
+            self._exec = Executor(2, backend=backend, name="prefetch")
+            self.pool = self._exec.pool
+            self._own_pool = True
+        if self._exec.backend == "process" and put_fn is None:
+            # checked against the *resolved* backend (a ProcessPool handed
+            # in via pool= must not bypass it): the default transform is
+            # jax.device_put-shaped — it must talk to THIS process's
+            # devices and would run jax post-fork, both wrong in a worker.
+            # Fail loudly instead of silently delivering host numpy
+            # batches transformed in a forked child.
+            if self._own_pool:
+                self._exec.close()
+            raise ValueError(
+                'Prefetcher on a process backend requires an explicit numpy-'
+                "level put_fn: the default jax device_put transform belongs "
+                'on the thread backend (DESIGN.md §11). Pass put_fn=<numpy '
+                'transform>, or use backend="thread".'
+            )
         self.depth = max(1, depth)
         self.put_fn = put_fn or (lambda b: jax.tree.map(jax.numpy.asarray, b))
         self._lanes = [_Lane(i, source, self.put_fn, self._exec) for i in range(self.depth)]

@@ -1,0 +1,27 @@
+"""repro.dist — multi-process execution backend (DESIGN.md §11).
+
+The paper's scheduler stays in one address space; this package lets task
+*bodies* escape the GIL into worker processes while the parent keeps every
+scheduling decision:
+
+* :class:`ProcessPool` — a :class:`~repro.core.ThreadPool` whose
+  dispatcher threads proxy wired bodies to paired worker processes
+  (``Executor(backend="process")`` is the usual front door);
+* :class:`ShmArena` / :class:`ArrayRef` — the shared-memory data plane for
+  large numpy/jax edge values;
+* :class:`UnpicklableTaskError` — submit-time verdict for a body that
+  cannot ship; :class:`WorkerDiedError` — a worker death surfaced as a
+  task failure (never a hang).
+"""
+from .process_pool import ProcessPool, WorkerDiedError
+from .shm_arena import DEFAULT_THRESHOLD, ArrayRef, ShmArena
+from .wire import UnpicklableTaskError
+
+__all__ = [
+    "ProcessPool",
+    "WorkerDiedError",
+    "ShmArena",
+    "ArrayRef",
+    "DEFAULT_THRESHOLD",
+    "UnpicklableTaskError",
+]

@@ -1,0 +1,259 @@
+"""Shared-memory arena for array edge values (DESIGN.md §11).
+
+Large numpy/jax arrays crossing the parent↔worker boundary do not pickle
+through the job pipe — the bytes go through POSIX shared memory and only a
+small :class:`ArrayRef` descriptor crosses the pipe. Two segment kinds,
+with different lifetimes:
+
+* **Pooled segments** (parent → worker arguments). The parent's arena owns
+  a freelist of segments bucketed by capacity; ``put`` copies the array
+  into a recycled (or fresh) segment, ``recycle`` returns the segment to
+  the freelist **after the job's reply arrives** — a worker reads its
+  argument view zero-copy, so a segment must never be rewritten while the
+  job that references it is still running. Pooled segments are unlinked
+  when the arena closes (pool shutdown).
+
+* **Ephemeral segments** (worker → parent results). The worker creates one
+  segment per large result array and sends the descriptor; on receipt the
+  parent copies the data out and unlinks the segment immediately. Lifetime
+  is exactly send→receipt, so a result can never dangle on a segment whose
+  creator died.
+
+Attached views are only valid while the segment is: a worker body that
+stows its zero-copy argument view somewhere global and reads it after the
+job replied is out of contract (results are copied at encode time, so
+*returning* a view is fine).
+
+Doctest (same-process round trip)::
+
+    >>> import numpy as np
+    >>> from repro.dist.shm_arena import ShmArena
+    >>> arena = ShmArena(threshold=0)
+    >>> ref = arena.put(np.arange(6, dtype=np.int32).reshape(2, 3))
+    >>> int(arena.get(ref).sum())
+    15
+    >>> arena.recycle(ref)   # back to the freelist for the next job
+    >>> arena.close()
+"""
+from __future__ import annotations
+
+import secrets
+import threading
+from multiprocessing import shared_memory
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["ArrayRef", "ShmArena", "DEFAULT_THRESHOLD"]
+
+DEFAULT_THRESHOLD = 32 * 1024  # bytes; below this, pickle through the pipe wins
+
+
+def _unregister(name: str) -> None:
+    """Drop a segment from this process's resource tracker.
+
+    ``SharedMemory`` registers every attach with the tracker, but only the
+    owning side unlinks — without this, attach-only processes warn about
+    "leaked" segments at shutdown (and under ``fork`` the shared tracker
+    would try to double-unlink)."""
+    try:  # pragma: no cover - depends on interpreter internals
+        from multiprocessing import resource_tracker
+
+        resource_tracker.unregister("/" + name, "shared_memory")
+    except Exception:
+        pass
+
+
+class ArrayRef:
+    """Descriptor of an array living in a shared-memory segment."""
+
+    __slots__ = ("name", "shape", "dtype", "nbytes", "ephemeral")
+
+    def __init__(
+        self, name: str, shape: tuple, dtype: str, nbytes: int, ephemeral: bool
+    ) -> None:
+        self.name = name
+        self.shape = shape
+        self.dtype = dtype
+        self.nbytes = nbytes
+        self.ephemeral = ephemeral
+
+    def __reduce__(self):
+        return (
+            ArrayRef,
+            (self.name, self.shape, self.dtype, self.nbytes, self.ephemeral),
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        kind = "ephemeral" if self.ephemeral else "pooled"
+        return f"ArrayRef({self.name}, {self.shape}, {self.dtype}, {kind})"
+
+
+def _bucket(nbytes: int) -> int:
+    """Segment capacity for a payload: next power of two ≥ 4 KiB, so
+    recycled segments fit future arrays of similar size."""
+    cap = 4096
+    while cap < nbytes:
+        cap <<= 1
+    return cap
+
+
+class ShmArena:
+    """Process-shared scratch space for array edge values.
+
+    One instance lives in the parent (owning the pooled freelist); each
+    worker holds an *attach-only* instance (``attach_only=True``) that
+    maps segments on demand and caches the mappings — pooled segment names
+    are stable across jobs, so a steady-state worker maps no new memory.
+
+    Parameters
+    ----------
+    threshold:
+        Minimum ``nbytes`` for an array to travel through the arena;
+        smaller arrays pickle through the pipe (cheaper than a segment
+        round trip).
+    attach_only:
+        Worker-side mode: :meth:`put` creates ephemeral (per-result)
+        segments instead of pooled ones, and :meth:`close` only drops
+        local mappings — the parent owns every unlink.
+    """
+
+    def __init__(
+        self, threshold: int = DEFAULT_THRESHOLD, *, attach_only: bool = False
+    ) -> None:
+        self.threshold = threshold
+        self._attach_only = attach_only
+        self._lock = threading.Lock()
+        self._free: dict[int, list[shared_memory.SharedMemory]] = {}
+        self._owned: dict[str, shared_memory.SharedMemory] = {}  # name -> seg
+        # freelist key per segment: the *requested* bucket capacity, NOT
+        # seg.size — the OS may page-round the mapping (macOS: 16 KiB), and
+        # a recycle keyed on the rounded size would never match a checkout
+        self._caps: dict[str, int] = {}
+        self._attached: dict[str, shared_memory.SharedMemory] = {}
+        self._closed = False
+
+    # -- write side -----------------------------------------------------------
+
+    def put(self, array: np.ndarray) -> ArrayRef:
+        """Copy ``array`` into a segment; returns the descriptor to ship.
+
+        Parent side: a pooled segment (recycled via :meth:`recycle` once
+        the referencing job completes). Worker side: a fresh ephemeral
+        segment the parent will unlink on receipt.
+        """
+        arr = np.ascontiguousarray(array)
+        if self._attach_only:
+            seg = shared_memory.SharedMemory(
+                create=True, size=max(1, arr.nbytes), name=f"repro_r_{secrets.token_hex(8)}"
+            )
+            ephemeral = True
+        else:
+            seg = self._checkout(_bucket(arr.nbytes))
+            ephemeral = False
+        view = np.ndarray(arr.shape, dtype=arr.dtype, buffer=seg.buf)
+        view[...] = arr
+        ref = ArrayRef(seg.name, tuple(arr.shape), str(arr.dtype), arr.nbytes, ephemeral)
+        if ephemeral:
+            # local mapping no longer needed; the parent copies + unlinks
+            seg.close()
+            _unregister(seg.name)
+        return ref
+
+    def _checkout(self, cap: int) -> shared_memory.SharedMemory:
+        with self._lock:
+            free = self._free.get(cap)
+            if free:
+                return free.pop()
+        seg = shared_memory.SharedMemory(
+            create=True, size=cap, name=f"repro_a_{secrets.token_hex(8)}"
+        )
+        with self._lock:
+            self._owned[seg.name] = seg
+            self._caps[seg.name] = cap
+        return seg
+
+    def recycle(self, ref: ArrayRef) -> None:
+        """Release a segment whose job is over: pooled refs go back to the
+        freelist (the next job may rewrite them immediately — the caller
+        guarantees the referencing job has replied); ephemeral refs are
+        unlinked on the spot. The ephemeral case is the *failed-send*
+        path: a result pack that never reached the parent would otherwise
+        strand its ``repro_r_*`` segments until reboot (``get`` is the
+        delivery-side release).
+        """
+        if ref.ephemeral:
+            try:
+                seg = shared_memory.SharedMemory(name=ref.name)
+            except FileNotFoundError:  # already delivered + unlinked
+                return
+            try:
+                seg.unlink()
+            except Exception:
+                pass
+            seg.close()
+            return
+        with self._lock:
+            seg = self._owned.get(ref.name)
+            if seg is not None:
+                self._free.setdefault(self._caps[ref.name], []).append(seg)
+
+    # -- read side ------------------------------------------------------------
+
+    def get(self, ref: ArrayRef) -> np.ndarray:
+        """Materialize an array from its descriptor.
+
+        Pooled refs return a **zero-copy read view** (valid until the job
+        replies); ephemeral refs are copied out and their segment unlinked
+        on the spot (the receipt that ends the result's shm lifetime).
+        """
+        if ref.ephemeral:
+            seg = shared_memory.SharedMemory(name=ref.name)
+            try:
+                view = np.ndarray(ref.shape, dtype=np.dtype(ref.dtype), buffer=seg.buf)
+                out = np.array(view)  # own the bytes before the segment dies
+            finally:
+                try:
+                    seg.unlink()  # receipt ends the result's shm lifetime
+                except Exception:
+                    pass
+                seg.close()
+            return out
+        seg = self._attached.get(ref.name)
+        if seg is None:
+            seg = self._owned.get(ref.name)
+        if seg is None:
+            seg = shared_memory.SharedMemory(name=ref.name)
+            _unregister(ref.name)
+            with self._lock:
+                self._attached[ref.name] = seg
+        return np.ndarray(ref.shape, dtype=np.dtype(ref.dtype), buffer=seg.buf)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def close(self) -> None:
+        """Drop mappings; the owning side also unlinks its pooled segments."""
+        if self._closed:
+            return
+        self._closed = True
+        for seg in self._attached.values():
+            try:
+                seg.close()
+            except Exception:
+                pass
+        self._attached.clear()
+        for seg in self._owned.values():
+            try:
+                seg.close()
+                seg.unlink()
+            except Exception:
+                pass
+        self._owned.clear()
+        self._caps.clear()
+        self._free.clear()
+
+    def __del__(self) -> None:  # pragma: no cover - GC safety net
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -1,6 +1,16 @@
-"""Executor facade + §10 control flow: condition tasks (branches, weak-edge
-loops), dynamic subflows (join protocol, cancellation), run_until, and the
-asyncio bridge."""
+"""Executor facade + §10 control flow, parametrized over every backend.
+
+The ``ex`` fixture runs each test on the **serial**, **thread** and
+**process** backends (DESIGN.md §11): one suite, three executors, same
+semantics. Tests here follow the process-safe idioms the process backend
+demands — loop/convergence state lives in condition bodies (which always
+run scheduler-side) or flows along dataflow edges, and assertions read
+parent-side task state (``result`` / ``started`` / ``done``), never
+closure cells a remote body would have mutated in its own address space.
+
+Backend-specific behavior (cancellation timing, pool adoption, priority
+bands, wait_idle timeouts) uses the thread-only ``tex`` fixture below.
+"""
 import asyncio
 import threading
 import time
@@ -18,15 +28,26 @@ from repro.core import (
     ThreadPool,
 )
 
+BACKENDS = ("serial", "thread", "process")
+
+
+@pytest.fixture(params=BACKENDS)
+def ex(request):
+    """One Executor per backend — the whole suite runs on all three."""
+    n = 2 if request.param == "process" else 4
+    with Executor(n, backend=request.param) as e:
+        yield e
+
 
 @pytest.fixture()
-def ex():
-    with Executor(4) as e:
+def tex():
+    """Thread-backend executor for backend-specific tests."""
+    with Executor(4, backend="thread") as e:
         yield e
 
 
 # ---------------------------------------------------------------------------
-# facade basics
+# facade basics (all backends)
 # ---------------------------------------------------------------------------
 
 
@@ -46,22 +67,41 @@ def test_run_graph_and_iterable(ex):
     b = g.then(a, lambda x: x * x)
     assert ex.run(g).result(10) is None
     assert b.result == 9
-    # an anonymous iterable of tasks is wrapped in a graph
-    seen = []
-    t1 = Task(lambda: seen.append(1))
-    t2 = Task(lambda: seen.append(2))
+    # an anonymous iterable of tasks is wrapped in a graph; the dataflow
+    # edge proves t2 ran after t1 on any backend
+    t1 = Task(lambda: 20)
+    t2 = Task(lambda x: x + 1, takes_inputs=True)
     t2.succeed(t1)
     assert ex.run([t1, t2]).result(10) is None
-    assert seen == [1, 2]
+    assert t2.result == 21
 
 
 def test_submit_alias(ex):
     assert ex.submit(lambda: "ok").result(10) == "ok"
 
 
+def test_run_failure_delivered_through_future(ex):
+    with pytest.raises(ValueError, match="boom"):
+        ex.run(lambda: (_ for _ in ()).throw(ValueError("boom"))).result(10)
+    # the backend stays healthy afterwards
+    assert ex.run(lambda: "still alive").result(10) == "still alive"
+
+
+def test_failure_propagates_along_dataflow_edges(ex):
+    g = TaskGraph()
+    bad = g.add(lambda: (_ for _ in ()).throw(RuntimeError("upstream died")))
+    down = g.then(bad, lambda x: x)
+    for t in g.tasks:
+        t.propagate_errors = False
+    with pytest.raises(RuntimeError, match="upstream died"):
+        ex.run(g).result(10)
+    assert isinstance(down.exception, RuntimeError)  # adopted, body skipped
+
+
 def test_run_graph_priority_overrides_non_explicit_bands(ex):
     """run(graph, priority=) follows the ThreadPool.submit contract: every
-    task without an explicit band is promoted, explicit bands win."""
+    task without an explicit band is promoted, explicit bands win.
+    (Serial ignores bands at runtime but records them identically.)"""
     g = TaskGraph()
     a = g.add(lambda: None)
     b = a.then(lambda _x: None)
@@ -69,6 +109,11 @@ def test_run_graph_priority_overrides_non_explicit_bands(ex):
     ex.run(g, priority=3.0).result(10)
     assert a.priority == b.priority == 3.0
     assert c.priority == -2.0
+
+
+def test_wait_idle_after_work(ex):
+    ex.run(lambda: 1).result(10)
+    assert ex.wait_idle(10) is True
 
 
 def test_context_manager_closes_own_pool_only():
@@ -79,6 +124,7 @@ def test_context_manager_closes_own_pool_only():
     shared = ThreadPool(2)
     try:
         with Executor(pool=shared) as e2:
+            assert e2.backend == "thread"
             e2.run(lambda: None).result(10)
         assert not shared._stop  # adopted pool left running
         shared.run(lambda: None)  # and still usable
@@ -86,60 +132,72 @@ def test_context_manager_closes_own_pool_only():
         shared.close()
 
 
-def test_wait_idle_reports_timeout_as_bool(ex):
-    ex.submit(lambda: time.sleep(0.4))
-    assert ex.wait_idle(0.01) is False
-    assert ex.wait_idle(10) is True
+def test_backend_pool_mutually_exclusive():
+    pool = ThreadPool(1)
+    try:
+        with pytest.raises(ValueError, match="not both"):
+            Executor(backend="thread", pool=pool)
+    finally:
+        pool.close()
+    with pytest.raises(ValueError, match="unknown backend"):
+        Executor(backend="gpu")
+
+
+def test_wait_idle_reports_timeout_as_bool(tex):
+    tex.submit(lambda: time.sleep(0.4))
+    assert tex.wait_idle(0.01) is False
+    assert tex.wait_idle(10) is True
 
 
 # ---------------------------------------------------------------------------
-# condition tasks: branching
+# condition tasks: branching (all backends)
 # ---------------------------------------------------------------------------
 
 
 def test_condition_selects_single_branch(ex):
-    ran = []
     g = TaskGraph("branch")
     src = g.add(lambda: None, name="src")
     pick = g.add(lambda: 1, kind="condition", name="pick")
     pick.after(src)
-    left = g.add(lambda: ran.append("left"), name="left")
-    right = g.add(lambda: ran.append("right"), name="right")
+    left = g.add(lambda: "L", name="left")
+    right = g.add(lambda: "R", name="right")
     pick.precede(left, right)  # branch order = wiring order
     assert ex.run(g).result(10) is None
-    assert ran == ["right"]
-    assert not left.started
+    # every member of a condition graph re-arms after running (clearing
+    # `started` for the next pass), so assert on results — rearm keeps them
+    assert right.result == "R"
+    assert left.result is None  # branch not taken
 
 
 def test_branch_not_taken_resets_cleanly_across_runs(ex):
     """Un-run branches leave no residue: across run_count > 1 each run
     releases exactly the branch its condition names."""
-    ran = []
     sel = {"v": 0}
     g = TaskGraph()
-    pick = g.add(lambda: sel["v"], kind="condition")
-    a = g.add(lambda: ran.append("a"))
-    b = g.add(lambda: ran.append("b"))
+    pick = g.add(lambda: sel["v"], kind="condition")  # conditions run in-parent
+    a = g.add(lambda: "a")
+    b = g.add(lambda: "b")
     pick.precede(a, b)
-    assert ex.run(g).result(10) is None
-    sel["v"] = 1
-    g.reset()
-    assert ex.run(g).result(10) is None
-    sel["v"] = 0
-    g.reset()
-    assert ex.run(g).result(10) is None
-    assert ran == ["a", "b", "a"]
+    taken = []
+    for v in (0, 1, 0):
+        sel["v"] = v
+        if taken:
+            g.reset()
+        assert ex.run(g).result(10) is None
+        assert (a.result is None) != (b.result is None)  # exactly one branch ran
+        taken.append(a.result or b.result)
+    assert taken == ["a", "b", "a"]
     assert g.run_count == 3
 
 
 def test_condition_out_of_range_ends_run(ex):
     """A non-int / out-of-range return selects nothing — the loop's exit."""
     g = TaskGraph()
-    dead = []
     c = g.add(lambda: 99, kind="condition")
-    c.precede(g.add(lambda: dead.append(1)))
+    dead = g.add(lambda: "never")
+    c.precede(dead)
     assert ex.run(g).result(10) is None
-    assert dead == []
+    assert dead.result is None  # branch never released
 
 
 def test_condition_plus_runtime_rejected():
@@ -164,20 +222,25 @@ def test_weak_edges_skip_countdown_and_slots():
 
 
 # ---------------------------------------------------------------------------
-# condition tasks: weak-edge cycles
+# condition tasks: weak-edge cycles (all backends)
 # ---------------------------------------------------------------------------
 
 
 def _build_loop(iters):
-    """entry -> body -> more? with a weak back-edge to body."""
+    """entry -> body -> more? with a weak back-edge to body.
+
+    Loop state lives in the *condition* body — conditions always execute
+    scheduler-side, so the counter is authoritative on every backend.
+    """
     g = TaskGraph("loop")
     state = {"i": 0, "runs": 0}
-    entry = g.add(lambda: state.update(i=0), name="entry")
-    body = g.add(lambda: state.update(runs=state["runs"] + 1), name="body")
+    entry = g.add(lambda: state.update(i=0), name="entry", affinity="local")
+    body = g.add(lambda: None, name="body")  # remote-eligible each pass
     body.after(entry)
 
     def more():
         state["i"] += 1
+        state["runs"] += 1
         return 0 if state["i"] < iters else 1
 
     cond = g.add(more, kind="condition", name="more")
@@ -231,14 +294,17 @@ def test_validate_permits_condition_closed_cycle():
 def test_condition_loop_failure_resolves_future(ex):
     boom = {"at": 3, "i": 0}
     g = TaskGraph()
-    entry = g.add(lambda: boom.update(i=0), name="entry")
+    entry = g.add(lambda: boom.update(i=0), name="entry", affinity="local")
 
+    # pass counting and the triggered failure stay scheduler-side
+    # (affinity="local"): the loop machinery under test is identical on
+    # every backend, and the counter must be authoritative
     def body():
         boom["i"] += 1
         if boom["i"] == boom["at"]:
             raise ValueError("pass 3 failed")
 
-    bt = g.add(body, name="body")
+    bt = g.add(body, name="body", affinity="local")
     bt.after(entry)
     # the condition consumes the body's value edge, so a body failure
     # propagates into it (skip + adopt) and the loop stops that pass
@@ -254,7 +320,7 @@ def test_condition_loop_failure_resolves_future(ex):
     assert boom["i"] == 3  # the loop stopped at the failing pass
 
 
-def test_condition_loop_cancellation(ex):
+def test_condition_loop_cancellation(tex):
     """Cancelling the run future stops a spinning loop cooperatively."""
     g = TaskGraph()
     hits = []
@@ -264,7 +330,7 @@ def test_condition_loop_cancellation(ex):
     cond = g.add(lambda: 0, kind="condition")  # would loop forever
     cond.after(body)
     cond.precede(body)
-    fut = ex.run(g)
+    fut = tex.run(g)
     while not hits:
         time.sleep(0.001)
     assert fut.cancel() is True
@@ -273,31 +339,29 @@ def test_condition_loop_cancellation(ex):
     n = len(hits)
     time.sleep(0.05)
     assert len(hits) == n  # the loop genuinely stopped
-    ex.wait_idle(10)
+    tex.wait_idle(10)
 
 
 # ---------------------------------------------------------------------------
-# dynamic subflows
+# dynamic subflows (all backends)
 # ---------------------------------------------------------------------------
 
 
 def test_subflow_join_before_successor(ex):
     """Every runtime-spawned task completes before the spawner's successor
     runs, and the gather's result is visible through the spawner."""
-    order = []
     g = TaskGraph()
 
     def spawn(rt):
-        ws = [rt.add(lambda i=i: order.append(i) or i * i, name=f"w{i}") for i in range(8)]
+        ws = [rt.add(lambda i=i: i * i, name=f"w{i}") for i in range(8)]
         return rt.gather(ws)
 
     sp = g.add(spawn, takes_runtime=True, name="spawn")
     # the spawner's dataflow value is the gather's result (join unwraps it)
-    done = g.then(sp, lambda vals: order.append(("joined", sorted(vals))))
+    done = g.then(sp, lambda vals: sorted(vals))
     assert ex.run(g).result(10) is None
-    assert done.result is None
-    assert order[-1] == ("joined", [i * i for i in range(8)])
-    assert sorted(order[:-1]) == list(range(8))
+    assert done.result == [i * i for i in range(8)]
+    assert all(w.done for w in sp._spawned)  # joined before the successor
 
 
 def test_subflow_sized_by_runtime_data(ex):
@@ -331,6 +395,50 @@ def test_subflow_failure_propagates_to_future(ex):
         ex.run(g).result(10)
     assert isinstance(sp.exception, RuntimeError)  # adopted by the spawner
     ex.wait_idle(10)  # pool not poisoned
+
+
+def test_nested_subflow_spawner(ex):
+    """A spawned task may itself be a takes_runtime spawner; the outer
+    successor still waits for the innermost join."""
+    g = TaskGraph()
+
+    def outer_spawn(rt):
+        def inner_spawn(rt2):
+            return rt2.gather([rt2.add(lambda i=i: ("inner", i)) for i in range(3)])
+
+        return rt.add(inner_spawn, takes_runtime=True, name="inner")
+
+    sp = g.add(outer_spawn, takes_runtime=True, name="outer")
+    after = g.then(sp, lambda inner_vals: sorted(inner_vals))
+    assert ex.run(g).result(10) is None
+    assert after.result == [("inner", i) for i in range(3)]
+
+
+def test_subflow_serial_executor():
+    order = []
+    g = TaskGraph()
+
+    def spawn(rt):
+        for i in range(3):
+            rt.add(lambda i=i: order.append(i))
+
+    sp = g.add(spawn, takes_runtime=True)
+    g.add(lambda: order.append("after")).after(sp)
+    SerialExecutor().run(g)
+    assert order[-1] == "after" and sorted(order[:-1]) == [0, 1, 2]
+
+
+def test_subflow_priority_inherited_from_spawner(ex):
+    g = TaskGraph()
+    captured = []
+
+    def spawn(rt):  # spawner bodies always run scheduler-side
+        captured.append(rt.add(lambda: None).priority)
+        captured.append(rt.add(lambda: None, priority=-1.0).priority)
+
+    g.add(spawn, takes_runtime=True, priority=2.5)
+    ex.run(g).result(10)
+    assert captured == [2.5, -1.0]
 
 
 def test_subflow_cancellation_in_flight():
@@ -404,7 +512,7 @@ def test_subflow_cancellation_mid_spawner_body():
         pool.close()
 
 
-def test_run_same_task_repeatedly_does_not_chain_callbacks(ex):
+def test_run_same_task_repeatedly_does_not_chain_callbacks(tex):
     """Re-running one Task through the facade must not stack resolver
     wrappers (leak) — each round resolves its own future exactly once."""
     runs = []
@@ -414,87 +522,47 @@ def test_run_same_task_repeatedly_does_not_chain_callbacks(ex):
     t.on_done = lambda _t: base_hits.append(1)
     for expect in (1, 2, 3):
         t.reset()
-        assert ex.run(t).result(10) == expect
+        assert tex.run(t).result(10) == expect
     assert t.on_done._wrapped.__name__ == "<lambda>"  # base cb, not a wrapper
     assert len(base_hits) == 3  # fired once per round, not 1+2+3 times
 
 
-def test_run_iterable_rerun_waits_for_completion(ex):
+def test_run_iterable_rerun_waits_for_completion(tex):
     """Regression: re-running the same task iterable must return a future
     that resolves only after the bodies ran (a stale hidden completion
     task from the previous wrapper graph must not hide the sinks)."""
     runs = []
     t = Task(lambda: (time.sleep(0.05), runs.append(1)))
     t.propagate_errors = False
-    assert ex.run([t]).result(10) is None
+    assert tex.run([t]).result(10) is None
     t.reset()
-    fut = ex.run([t])
+    fut = tex.run([t])
     fut.result(10)
     assert len(runs) == 2  # second run actually executed before resolving
     with pytest.raises(TimeoutError):
         # and a third run's future is live, not pre-resolved
         t.reset()
-        ex.run([t]).result(0.001)
-    ex.wait_idle(10)
-
-
-def test_nested_subflow_spawner(ex):
-    """A spawned task may itself be a takes_runtime spawner; the outer
-    successor still waits for the innermost join."""
-    order = []
-    g = TaskGraph()
-
-    def outer_spawn(rt):
-        def inner_spawn(rt2):
-            for i in range(3):
-                rt2.add(lambda i=i: order.append(("inner", i)))
-
-        rt.add(inner_spawn, takes_runtime=True, name="inner")
-
-    sp = g.add(outer_spawn, takes_runtime=True, name="outer")
-    g.add(lambda: order.append("after")).after(sp)
-    assert ex.run(g).result(10) is None
-    assert order[-1] == "after"
-    assert sorted(order[:-1]) == [("inner", i) for i in range(3)]
-
-
-def test_subflow_serial_executor():
-    order = []
-    g = TaskGraph()
-
-    def spawn(rt):
-        for i in range(3):
-            rt.add(lambda i=i: order.append(i))
-
-    sp = g.add(spawn, takes_runtime=True)
-    g.add(lambda: order.append("after")).after(sp)
-    SerialExecutor().run(g)
-    assert order[-1] == "after" and sorted(order[:-1]) == [0, 1, 2]
-
-
-def test_subflow_priority_inherited_from_spawner(ex):
-    g = TaskGraph()
-    captured = []
-
-    def spawn(rt):
-        captured.append(rt.add(lambda: None).priority)
-        captured.append(rt.add(lambda: None, priority=-1.0).priority)
-
-    g.add(spawn, takes_runtime=True, priority=2.5)
-    ex.run(g).result(10)
-    assert captured == [2.5, -1.0]
+        tex.run([t]).result(0.001)
+    tex.wait_idle(10)
 
 
 # ---------------------------------------------------------------------------
-# run_until + asyncio bridge
+# run_until + asyncio bridge (all backends)
 # ---------------------------------------------------------------------------
 
 
 def test_run_until_reruns_to_convergence(ex):
+    # convergence state is carried by the task's own result: the predicate
+    # reads parent-side task state, valid on every backend
     state = {"x": 100.0}
     g = TaskGraph()
-    g.add(lambda: state.update(x=state["x"] / 2))
-    rounds = ex.run_until(g, lambda: state["x"] < 1.0)
+
+    def halve():
+        state["x"] /= 2
+        return state["x"]
+
+    t = g.add(halve, affinity="local")  # caller-side loop, caller-side state
+    rounds = ex.run_until(g, lambda: t.result < 1.0)
     assert rounds == 7  # 100 / 2^7 < 1
     assert g.run_count == 7
 
@@ -552,7 +620,7 @@ def test_co_run_concurrent_awaits(ex):
     assert asyncio.run(main()) == [0, 10, 20, 30, 40]
 
 
-def test_future_add_done_callback_fires_once(ex):
+def test_future_add_done_callback_fires_once():
     hits = []
     fut = Future()
     fut.add_done_callback(lambda f: hits.append("cb"))
@@ -567,7 +635,7 @@ def test_future_add_done_callback_fires_once(ex):
 # ---------------------------------------------------------------------------
 
 
-def test_to_dot_condition_edges_dashed_and_subflow_cluster(ex):
+def test_to_dot_condition_edges_dashed_and_subflow_cluster(tex):
     g = TaskGraph("render")
     pick = g.add(lambda: 0, kind="condition", name="pick")
     a = g.add(lambda: None, name="branch-a")
@@ -582,7 +650,18 @@ def test_to_dot_condition_edges_dashed_and_subflow_cluster(ex):
     assert "shape=diamond" in dot  # condition node
     assert "style=dashed" in dot and 'label="0"' in dot  # weak branch edge
     assert "cluster" not in dot  # subflow only exists after a run
-    ex.run(g).result(10)
+    tex.run(g).result(10)
     dot = g.to_dot()
     assert 'subgraph "cluster_' in dot and "spawned0" in dot
     assert "style=dotted" in dot  # spawner -> subflow link
+
+
+def test_single_prewired_task_runs_on_every_backend(ex):
+    """Submitting one pre-wired (non-source) Task runs exactly that task,
+    as ThreadPool._schedule does — the serial backend must not reject it
+    as a sourceless graph (review fix)."""
+    t1 = Task(lambda: "unrun")
+    t2 = Task(lambda x: (x, "ran"), takes_inputs=True)
+    t2.succeed(t1)
+    t2.propagate_errors = False
+    assert ex.run(t2).result(10) == (None, "ran")  # t1 never ran: slot is None

@@ -150,3 +150,76 @@ def test_prefetcher_close_waits_for_running_task():
     time.sleep(0.01)  # let at least one produce start
     pf.close()
     assert done, "running produce was abandoned instead of drained"
+
+
+def _pid_stamp(batch):
+    """Module-level transform so the process backend can ship it."""
+    import os
+
+    return {**batch, "transform_pid": np.asarray(os.getpid())}
+
+
+def test_prefetcher_process_backend_transforms_cross_processes():
+    """backend="process": the same lane graphs run with transform bodies
+    in worker processes (DESIGN.md §11) — batches arrive in order and the
+    transform demonstrably executed in another pid."""
+    import os
+
+    src = SyntheticTokens(101, 8, 4, seed=4)
+    with Prefetcher(src, depth=2, backend="process", put_fn=_pid_stamp) as pf:
+        batches = [pf.get() for _ in range(3)]
+    for step, b in enumerate(batches):
+        np.testing.assert_array_equal(
+            np.asarray(b["tokens"]), src.batch(step)["tokens"]
+        )
+        assert int(b["transform_pid"]) != os.getpid()
+
+
+def test_prefetcher_backend_serial_floor():
+    """backend="serial": same pipeline, zero threads — the deterministic
+    debugging configuration."""
+    src = SyntheticTokens(101, 8, 4, seed=5)
+    with Prefetcher(src, depth=2, backend="serial", put_fn=lambda b: b) as pf:
+        b0 = pf.get()
+        b1 = pf.get()
+    np.testing.assert_array_equal(b0["tokens"], src.batch(0)["tokens"])
+    np.testing.assert_array_equal(b1["tokens"], src.batch(1)["tokens"])
+
+
+def test_prefetcher_process_backend_requires_explicit_put_fn():
+    """The default transform is device_put-shaped; on the process backend
+    that is both wrong-device and jax-in-fork, so it fails loudly."""
+    src = SyntheticTokens(101, 8, 4, seed=6)
+    with pytest.raises(ValueError, match="put_fn"):
+        Prefetcher(src, backend="process")
+
+
+def test_prefetcher_guard_applies_to_adopted_process_pool():
+    """The put_fn guard checks the *resolved* backend: handing in a
+    ProcessPool via pool= must not bypass it (review fix)."""
+    from repro.dist import ProcessPool
+
+    src = SyntheticTokens(101, 8, 4, seed=7)
+    with ProcessPool(1) as pp:
+        with pytest.raises(ValueError, match="put_fn"):
+            Prefetcher(src, pool=pp)
+
+
+def test_produce_pinned_local_by_contract():
+    """produce must be pinned in-parent explicitly (affinity), not by the
+    accident of its bound method failing to pickle (review fix)."""
+    src = SyntheticTokens(101, 8, 4, seed=8)
+    with Prefetcher(src, depth=1, backend="process", put_fn=lambda b: b) as pf:
+        lane = pf._lanes[0]
+        assert lane.produce.affinity == "local"
+        assert lane.deliver.affinity == "local"
+        pf.get()
+
+
+def test_prefetcher_rejects_pool_plus_backend():
+    """backend= with an adopted pool would be silently ignored — rejected
+    up front, matching Executor's contract (review fix)."""
+    src = SyntheticTokens(101, 8, 4, seed=10)
+    with ThreadPool(1) as tp:
+        with pytest.raises(ValueError, match="not both"):
+            Prefetcher(src, pool=tp, backend="process", put_fn=lambda b: b)

@@ -1,0 +1,128 @@
+"""Shared-memory arena: pooled recycling, ephemeral receipt, lifetimes."""
+import numpy as np
+
+from repro.dist.shm_arena import ArrayRef, ShmArena, _bucket
+
+
+def test_round_trip_pooled():
+    arena = ShmArena(threshold=0)
+    try:
+        a = np.arange(24, dtype=np.int64).reshape(4, 6)
+        ref = arena.put(a)
+        assert not ref.ephemeral
+        out = arena.get(ref)
+        np.testing.assert_array_equal(out, a)
+        arena.recycle(ref)
+    finally:
+        arena.close()
+
+
+def test_pooled_segments_are_recycled():
+    arena = ShmArena(threshold=0)
+    try:
+        a = np.zeros(1000, dtype=np.float64)
+        r1 = arena.put(a)
+        arena.recycle(r1)
+        r2 = arena.put(a + 1)  # same bucket: must reuse the freed segment
+        assert r2.name == r1.name
+        assert arena.get(r2)[0] == 1.0
+        arena.recycle(r2)
+        assert len(arena._owned) == 1  # one segment served both jobs
+    finally:
+        arena.close()
+
+
+def test_distinct_buckets_get_distinct_segments():
+    arena = ShmArena(threshold=0)
+    try:
+        r_small = arena.put(np.zeros(10, dtype=np.int8))
+        r_big = arena.put(np.zeros(1 << 20, dtype=np.int8))
+        assert r_small.name != r_big.name
+        arena.recycle(r_small)
+        arena.recycle(r_big)
+    finally:
+        arena.close()
+
+
+def test_ephemeral_result_copied_and_unlinked():
+    producer = ShmArena(threshold=0, attach_only=True)
+    consumer = ShmArena(threshold=0)
+    try:
+        a = np.arange(128, dtype=np.float32)
+        ref = producer.put(a)
+        assert ref.ephemeral
+        out = consumer.get(ref)
+        np.testing.assert_array_equal(out, a)
+        out[0] = 99.0  # the copy is owned: segment already gone
+        # re-attach must fail: receipt unlinked the segment
+        import pytest
+        from multiprocessing import shared_memory
+
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=ref.name)
+    finally:
+        producer.close()
+        consumer.close()
+
+
+def test_noncontiguous_and_zero_dim_arrays():
+    arena = ShmArena(threshold=0)
+    try:
+        a = np.arange(64).reshape(8, 8)[:, ::2]  # non-contiguous view
+        ref = arena.put(a)
+        np.testing.assert_array_equal(arena.get(ref), a)
+        arena.recycle(ref)
+        scalar = np.float64(3.5).reshape(())
+        ref2 = arena.put(scalar)
+        assert arena.get(ref2).item() == 3.5
+        arena.recycle(ref2)
+    finally:
+        arena.close()
+
+
+def test_bucket_rounding():
+    assert _bucket(1) == 4096
+    assert _bucket(4096) == 4096
+    assert _bucket(4097) == 8192
+    assert _bucket(3 << 20) == 4 << 20
+
+
+def test_array_ref_pickles():
+    import pickle
+
+    ref = ArrayRef("seg", (2, 3), "float32", 24, True)
+    out = pickle.loads(pickle.dumps(ref))
+    assert (out.name, out.shape, out.dtype, out.nbytes, out.ephemeral) == (
+        "seg",
+        (2, 3),
+        "float32",
+        24,
+        True,
+    )
+
+
+def test_close_unlinks_owned_segments():
+    arena = ShmArena(threshold=0)
+    ref = arena.put(np.zeros(16))
+    name = ref.name
+    arena.close()
+    import pytest
+    from multiprocessing import shared_memory
+
+    with pytest.raises(FileNotFoundError):
+        shared_memory.SharedMemory(name=name)
+
+
+def test_freelist_keyed_by_requested_bucket_not_os_size():
+    """recycle must file segments under the checkout bucket: the OS may
+    page-round seg.size (macOS: 16 KiB), which would make every lookup
+    miss and grow the pool unboundedly (review fix)."""
+    arena = ShmArena(threshold=0)
+    try:
+        ref = arena.put(np.zeros(100, dtype=np.int8))  # bucket 4096
+        arena.recycle(ref)
+        assert list(arena._free) == [4096]  # keyed by bucket, whatever fstat says
+        ref2 = arena.put(np.zeros(200, dtype=np.int8))
+        assert ref2.name == ref.name  # reused even if seg.size were rounded
+    finally:
+        arena.close()

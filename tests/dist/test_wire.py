@@ -1,0 +1,231 @@
+"""Wire-format unit tests: function shipping (pickle + code-object
+fallback), value/argument packs, exception transport."""
+import functools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.dist.shm_arena import ShmArena
+from repro.dist.wire import (
+    UnpicklableTaskError,
+    dumps_args,
+    dumps_exception,
+    dumps_fn,
+    dumps_value,
+    loads_args,
+    loads_exception,
+    loads_fn,
+    loads_value,
+    shm_refs,
+)
+
+
+def module_level(x):
+    return x * 3
+
+
+MODULE_CONST = 17
+
+
+def test_plain_function_round_trips_by_reference():
+    fn = loads_fn(dumps_fn(module_level))
+    assert fn(4) == 12
+
+
+def test_lambda_round_trips_via_code_wire():
+    fn = loads_fn(dumps_fn(lambda x: x + 1))
+    assert fn(41) == 42
+
+
+def test_closure_cells_are_captured_by_value():
+    def make(k):
+        return lambda x: x * k
+
+    fn = loads_fn(dumps_fn(make(5)))
+    assert fn(6) == 30
+
+
+def test_defaults_and_nested_lambdas_ship():
+    base = 100
+
+    def make():
+        inner = lambda v: v + base  # noqa: E731 - nested closure on purpose
+        return lambda x, off=7: inner(x) + off
+
+    fn = loads_fn(dumps_fn(make()))
+    assert fn(1) == 108
+
+
+def test_referenced_globals_ship_by_value():
+    # the loaded function must see the submission-time global, not rely on
+    # the destination module state (fork-time snapshots go stale)
+    fn = loads_fn(dumps_fn(lambda: MODULE_CONST * 2))
+    g = fn.__globals__
+    assert g["MODULE_CONST"] == 17
+    assert fn() == 34
+
+
+def test_partial_round_trips():
+    fn = loads_fn(dumps_fn(functools.partial(module_level, 9)))
+    assert fn() == 27
+
+
+def test_recursive_lambda_global_does_not_recurse_forever():
+    # fact references itself through its module globals; the dump guard
+    # must break the cycle instead of recursing to a stack overflow
+    import sys
+
+    mod = sys.modules[__name__]
+    mod.fact = eval("lambda n: 1 if n <= 1 else n * fact(n - 1)", mod.__dict__)
+    try:
+        wire = dumps_fn(mod.fact)
+        assert wire is not None
+    finally:
+        del mod.fact
+
+
+def test_closure_over_module_ships_by_name():
+    def make():
+        import numpy as np_local
+
+        return lambda: np_local.arange(3).sum()
+
+    fn = loads_fn(dumps_fn(make()))
+    assert fn() == 3
+
+
+def test_unpicklable_closure_raises_clear_error():
+    lock = threading.Lock()
+    with pytest.raises(UnpicklableTaskError, match="does not pickle"):
+        dumps_fn(lambda: lock.acquire())
+
+
+def test_bound_method_of_stateful_object_raises():
+    class Holder:
+        def __init__(self):
+            self.lock = threading.Lock()
+
+        def body(self):
+            return 1
+
+    with pytest.raises(UnpicklableTaskError, match="not a plain function"):
+        dumps_fn(Holder().body)
+
+
+def test_value_pack_small_arrays_pickle_large_use_arena():
+    arena = ShmArena(threshold=1024)
+    try:
+        small = np.arange(4)
+        large = np.arange(1024, dtype=np.float64)  # 8 KiB >= threshold
+        pack = dumps_args((small, large, "tag"), arena)
+        refs = shm_refs(pack)
+        assert len(refs) == 1 and refs[0].nbytes == large.nbytes
+        s, l, t = loads_args(pack, arena)
+        np.testing.assert_array_equal(s, small)
+        np.testing.assert_array_equal(l, large)
+        assert t == "tag"
+        for ref in refs:
+            arena.recycle(ref)
+    finally:
+        arena.close()
+
+
+def test_callable_value_falls_back_to_fn_wire():
+    k = 5
+    wire = dumps_value(lambda v: v * k)
+    assert loads_value(wire)(3) == 15
+
+
+def test_exception_transport_preserves_type():
+    exc = loads_exception(dumps_exception(ValueError("worker boom")))
+    assert isinstance(exc, ValueError) and "worker boom" in str(exc)
+
+
+def test_unpicklable_exception_degrades_to_runtime_error():
+    class Weird(Exception):
+        def __init__(self):
+            super().__init__("weird")
+            self.lock = threading.Lock()
+
+    exc = loads_exception(dumps_exception(Weird()))
+    assert isinstance(exc, RuntimeError) and "weird" in str(exc)
+
+
+def test_failed_pack_recycles_partial_arena_blocks():
+    """A pack that fails mid-serialization must return already-allocated
+    pooled segments to the freelist (review fix: no leak-until-close)."""
+    arena = ShmArena(threshold=1024)
+    try:
+        big = np.zeros(4096, dtype=np.float64)
+        with pytest.raises(Exception):
+            dumps_args((big, threading.Lock()), arena)
+        # the segment created for `big` is back in the freelist
+        assert sum(len(v) for v in arena._free.values()) == len(arena._owned) == 1
+        with pytest.raises(Exception):
+            dumps_args(({"a": big, "bad": threading.Lock()},), arena)
+        assert sum(len(v) for v in arena._free.values()) == len(arena._owned) == 1
+    finally:
+        arena.close()
+
+
+def test_failed_result_pack_unlinks_ephemeral_segments():
+    """Worker-side cleanup contract: a result pack that fails mid-
+    serialization unlinks the ephemeral segments already created (review
+    fix: recycle handles ephemeral refs — nothing persists in /dev/shm)."""
+    from multiprocessing import shared_memory
+
+    arena = ShmArena(threshold=1024, attach_only=True)
+    try:
+        big = np.zeros(4096, dtype=np.float64)
+        ref = arena.put(big)  # simulate the first element of a failing pack
+        arena.recycle(ref)
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=ref.name)
+        with pytest.raises(Exception):
+            dumps_value({"a": big, "bad": threading.Lock()}, arena)
+    finally:
+        arena.close()
+
+
+def test_main_module_functions_ship_by_value():
+    """A __main__-level function must ride the code wire: its pickle
+    reference dangles in any worker forked before the definition ran
+    (review-drive fix — the adopted-pool Prefetcher scenario)."""
+    k = []  # ensure no accidental closure
+
+    def f(x):
+        return x * 4
+
+    f.__module__ = "__main__"  # simulate a script-level def
+    wire = dumps_fn(f)
+    assert wire[0] != 0  # not a bare pickle reference
+    assert loads_fn(wire)(5) == 20 and not k
+
+
+def test_recursive_inner_function_fails_fast_with_clear_error():
+    """A self-referential closure cannot ship by value: the wire reports
+    it immediately (no RecursionError stack burn) with an actionable
+    message (review fix)."""
+
+    def make():
+        def fact(n):
+            return 1 if n <= 1 else n * fact(n - 1)
+
+        return fact
+
+    with pytest.raises(UnpicklableTaskError, match="self-referential"):
+        dumps_fn(make())
+
+
+def test_cyclic_container_edge_value_falls_back_to_pickle():
+    """A small self-referential container ships via pickle (which handles
+    cycles) instead of recursing in the arena scan (review fix)."""
+    arena = ShmArena(threshold=1024)
+    try:
+        cyc = []
+        cyc.append(cyc)
+        out = loads_value(dumps_value(cyc, arena), arena)
+        assert out[0] is out
+    finally:
+        arena.close()
