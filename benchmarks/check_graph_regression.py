@@ -14,6 +14,17 @@ The cpu-bound shape is excluded from the *overhead* gate: its wall time
 is compute, so "overhead over the serial floor" there measures parallel
 speedup jitter, not scheduler cost.
 
+The §12 replay gate runs entirely inside the fresh payload: the chain
+shape's ``ws-replay`` row must beat its own ``ws-fast`` row within the
+noise envelope (``--replay-slack-us``) — the fused-segment dispatch that
+replay exists for must stay cheaper than live dispatch of the same chain,
+on the same host, in the same run. Fusion-poor shapes (wavefront,
+random-dag) legitimately track live dispatch, so only the chain shapes
+participate. Additionally ``--full-baseline`` (default: the committed
+full-size ``BENCH_graph.json``) enforces the absolute §12 acceptance
+figure: the committed chain ``ws-replay`` overhead at the gate thread
+count must stay at or below ``--replay-chain-max-us``.
+
 Rows are matched by **shape prefix** (``chain(1024)`` and ``chain(8192)``
 both match ``chain``), so a baseline at one size can in principle gate a
 run at another. In practice CI gates quick-vs-quick: per-task overhead at
@@ -46,8 +57,8 @@ def shape_prefix(bench: str) -> str:
     return bench.split("(", 1)[0]
 
 
-def ws_rows(payload: dict, threads: int) -> dict[str, float]:
-    """Map shape-prefix -> overhead_us_per_task for ws-fast rows.
+def ws_rows(payload: dict, threads: int, executor: str = "ws-fast") -> dict[str, float]:
+    """Map shape-prefix -> overhead_us_per_task for one executor's rows.
 
     Rows written before the --threads sweep carry no ``threads`` field;
     they were all recorded at the default worker count. The cpu-bound
@@ -55,7 +66,7 @@ def ws_rows(payload: dict, threads: int) -> dict[str, float]:
     """
     out: dict[str, float] = {}
     for row in payload["rows"]:
-        if row.get("executor") != "ws-fast":
+        if row.get("executor") != executor:
             continue
         if row.get("threads", DEFAULT_THREADS) != threads:
             continue
@@ -87,6 +98,26 @@ def main() -> int:
         default=0.9,
         help="floor for ws-process speedup_vs_thread on the cpu-bound shape "
         "(sanity bound for shared runners; see module docs)",
+    )
+    ap.add_argument(
+        "--replay-slack-us",
+        type=float,
+        default=0.5,
+        help="noise envelope for the §12 gate: the fresh chain ws-replay row "
+        "must not exceed the fresh chain ws-fast row by more than this (µs)",
+    )
+    ap.add_argument(
+        "--replay-chain-max-us",
+        type=float,
+        default=0.06,
+        help="absolute §12 acceptance bound on the committed full-size chain "
+        "ws-replay overhead (µs/task)",
+    )
+    ap.add_argument(
+        "--full-baseline",
+        default=str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_graph.json"),
+        help="committed full-size BENCH_graph.json for the absolute replay "
+        "bound (pass an empty string to skip)",
     )
     args = ap.parse_args()
 
@@ -129,7 +160,49 @@ def main() -> int:
         if speed < args.min_process_speedup:
             speedup_failures.append(shape)
 
-    if failures or speedup_failures:
+    # §12 gate A: chain replay beats chain live, fresh run vs itself
+    replay_failures: list[str] = []
+    fresh_replay = ws_rows(new_payload, args.threads, executor="ws-replay")
+    for shape in sorted(fresh_replay):
+        if not shape.startswith("chain"):
+            continue  # fusion-poor shapes track live dispatch (module docs)
+        if shape not in fresh:
+            continue
+        live, replayed = fresh[shape], fresh_replay[shape]
+        limit = live + args.replay_slack_us
+        verdict = "ok" if replayed <= limit else "REGRESSION"
+        print(
+            f"{shape:<18}ws-replay {replayed:.2f}us vs ws-fast {live:.2f}us "
+            f"(limit {limit:.2f}us)  {verdict}"
+        )
+        if replayed > limit:
+            replay_failures.append(shape)
+    if not any(s.startswith("chain") for s in fresh_replay):
+        print("FAIL: no fresh chain ws-replay row — the §12 gate compared nothing")
+        replay_failures.append("chain (missing)")
+
+    # §12 gate B: the committed full-size chain replay figure holds
+    if args.full_baseline:
+        full_path = pathlib.Path(args.full_baseline)
+        full_replay = ws_rows(
+            json.loads(full_path.read_text()), args.threads, executor="ws-replay"
+        )
+        chain_full = {s: v for s, v in full_replay.items() if s.startswith("chain")}
+        if not chain_full:
+            print(f"FAIL: no chain ws-replay row in {full_path}")
+            replay_failures.append("chain (full baseline missing)")
+        for shape, ovh in sorted(chain_full.items()):
+            verdict = "ok" if ovh <= args.replay_chain_max_us else "REGRESSION"
+            print(
+                f"{shape:<18}committed ws-replay {ovh:.3f}us "
+                f"(max {args.replay_chain_max_us:.3f}us)  {verdict}"
+            )
+            if ovh > args.replay_chain_max_us:
+                replay_failures.append(f"{shape} (committed)")
+
+    if failures or speedup_failures or replay_failures:
+        if replay_failures:
+            print(f"\nFAIL: §12 replay gate: {', '.join(replay_failures)}")
         if failures:
             print(
                 f"\nFAIL: overhead regression >{args.threshold}x in: "

@@ -15,7 +15,13 @@ GIL serializes on threads and the process backend parallelizes. Its
 best ws-fast wall of the same shape), the headline §11 figure. Each
 shape runs on:
 
-  ws-fast     the paper's work-stealing pool (FastDeque)
+  ws-fast     the paper's work-stealing pool (FastDeque), live dispatch
+              every pass (``pool.run``: full reset + countdown walk)
+  ws-replay   the same pool dispatching from the graph's captured
+              ReplayPlan (DESIGN.md §12): pass 1 runs live and records,
+              pass 2 compiles + first-replays — both excluded as warm-up
+              — and the timed passes re-arm and dispatch fused segments
+              with no ``reset()`` walk (steady-state shapes only)
   ws-process  the same scheduler, bodies in worker processes
               (repro.dist.ProcessPool; cpu-bound shape only — per-task
               IPC buys nothing for no-op bodies)
@@ -189,6 +195,10 @@ def build_cpu_bound(g: TaskGraph, width: int, iters: int) -> None:
 STDLIB_UNSUPPORTED = ("condition-loop", "subflow-fanout", "cpu-bound")
 # the one shape whose bodies are heavy enough to amortize per-job IPC
 PROCESS_SHAPES = ("cpu-bound",)
+# steady-state shapes that get a §12 ws-replay row ("chain" also matches
+# chain-dataflow); subflow-fanout is spawn-dominated and cpu-bound is
+# compute-dominated — replay rows there would measure nothing new
+REPLAY_SHAPES = ("chain", "random-dag", "wavefront", "fanout-join", "condition-loop")
 
 
 def shapes(quick: bool) -> dict[str, Callable[[TaskGraph], Optional[int]]]:
@@ -238,6 +248,32 @@ def _time_graph(make_executor, build, repeats: int) -> tuple[float, float, int]:
     return best_wall, best_cpu, ntasks
 
 
+def _time_graph_replay(nthreads: int, build, repeats: int) -> tuple[float, float, int]:
+    """Best-of-N replayed passes (DESIGN.md §12).
+
+    Pass 1 runs live and records the schedule; pass 2 compiles the
+    ReplayPlan and takes the first replayed pass — both are warm-up and
+    excluded. The timed passes dispatch purely from the plan: no
+    ``reset()`` (plan re-arm subsumes it), no live countdown walk."""
+    g = TaskGraph()
+    ntasks = build(g) or len(g)
+    best_wall, best_cpu = float("inf"), float("inf")
+    with ThreadPool(nthreads) as pool:
+        g.as_future(pool).result(300)  # live: record + settle the structure
+        g.as_future(pool).result(300)  # compile + first replay
+        if g.replay_plan is None:
+            raise RuntimeError("replay plan failed to compile for bench shape")
+        for _ in range(repeats):
+            w0, c0 = time.perf_counter(), time.process_time()
+            g.as_future(pool).result(300)
+            w1, c1 = time.perf_counter(), time.process_time()
+            best_wall = min(best_wall, w1 - w0)
+            best_cpu = min(best_cpu, c1 - c0)
+        if g.replay_plan is None or g.replay_plan.replays < repeats:
+            raise RuntimeError("timed passes fell back to live dispatch")
+    return best_wall, best_cpu, ntasks
+
+
 def run_bench(
     quick: bool, thread_counts: list[int], shape_filter: Optional[str] = None
 ) -> list[dict]:
@@ -276,6 +312,20 @@ def run_bench(
                     us_per_task=wall * 1e6 / ntasks,
                 )
             )
+        if shape.startswith(REPLAY_SHAPES):
+            for t in thread_counts:
+                wall, cpu, ntasks = _time_graph_replay(t, build, repeats)
+                rows.append(
+                    dict(
+                        bench=shape,
+                        executor="ws-replay",
+                        threads=t,
+                        tasks=ntasks,
+                        wall_ms=wall * 1e3,
+                        cpu_ms=cpu * 1e3,
+                        us_per_task=wall * 1e6 / ntasks,
+                    )
+                )
     # dependency-counting overhead: scheduler cost over the serial floor.
     # The cpu-bound shape is compute- not dispatch-dominated: its "overhead"
     # would be parallel speedup noise, so it records speedup instead.

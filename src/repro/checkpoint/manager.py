@@ -117,6 +117,15 @@ class CheckpointManager:
     in worker processes, overlapping CPU-bound ``tobytes`` encoding
     across cores; the snapshot (device→host copy), the spawner and the
     commit/GC step stay in-parent by the §11 placement rule.
+
+    The save graph's *shape* is save-invariant (prepare → shard →
+    commit; the per-leaf writers are runtime-sized by the spawner), so
+    the manager builds it once and feeds each save's payload through a
+    slot dict the task bodies read at run time. Sequential saves then
+    replay the captured :class:`~repro.core.ReplayPlan` (DESIGN.md §12)
+    instead of building + wiring a fresh graph per step. Overlapping
+    saves keep their old semantics: while the template graph is still
+    draining a save, the next one runs on a disposable one-off graph.
     """
 
     def __init__(
@@ -142,6 +151,11 @@ class CheckpointManager:
             self._own_pool = True
         self.keep = keep
         self._pending: list = []
+        # §12 steady-state template: one cached save graph, replayed per
+        # save; the payload slots are what each pass's bodies read.
+        self._tpl_graph: Optional[TaskGraph] = None
+        self._tpl_state: dict[str, Any] = {}
+        self._tpl_busy: Optional[Any] = None  # run future of the template's save
 
     # -- save -----------------------------------------------------------------
 
@@ -149,17 +163,47 @@ class CheckpointManager:
         """Snapshot NOW (device->host, blocking only for the copy), then
         serialize + write + commit + gc in the background as a task graph."""
         flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
-        directory = self.root / f"step_{step:08d}"
         # unique tmp per save: concurrent saves of the same step (or a crashed
         # writer's leftovers) can never corrupt each other; commit is a rename
-        tmp = self.root / f"step_{step:08d}.tmp{id(tree) & 0xffff:x}{int(time.time() * 1e3) & 0xffff:x}"
+        payload = {
+            "flat": flat,
+            "directory": self.root / f"step_{step:08d}",
+            "tmp": self.root
+            / f"step_{step:08d}.tmp{id(tree) & 0xffff:x}{int(time.time() * 1e3) & 0xffff:x}",
+            "meta": meta or {},
+            "step": step,
+        }
+        self._pending.append(self._run_save(payload))
+
+    def _run_save(self, payload: dict) -> Any:
+        """Route a save through the cached template graph when it is idle
+        (replayed from the second save on), or a disposable graph when an
+        earlier save is still draining the template."""
+        if self._tpl_graph is None:
+            self._tpl_state = dict(payload)
+            self._tpl_graph = self._build_save_graph(self._tpl_state)
+            self._tpl_busy = fut = self._exec.run(self._tpl_graph)
+            return fut
+        busy = self._tpl_busy
+        if busy is None or busy.done():
+            self._tpl_state.clear()
+            self._tpl_state.update(payload)
+            self._tpl_busy = fut = self._exec.run(self._tpl_graph)
+            return fut
+        return self._exec.run(self._build_save_graph(dict(payload)))
+
+    def _build_save_graph(self, state: dict) -> TaskGraph:
+        """prepare -> shard{ v:leaf -> w:leaf ... }::join -> commit(+gc),
+        with every save-specific value read from ``state`` at run time so
+        the same graph object serves save after save."""
 
         def prepare():
+            tmp = state["tmp"]
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
 
-        def write_leaf(key: str, arr: np.ndarray) -> tuple[str, dict]:
+        def write_leaf(tmp: pathlib.Path, key: str, arr: np.ndarray) -> tuple[str, dict]:
             fname = key.replace("/", "_") + ".bin"
             (tmp / fname).write_bytes(arr.tobytes())
             return key, {
@@ -170,31 +214,36 @@ class CheckpointManager:
 
         # Shard writers as a dynamic subflow (DESIGN.md §10): one writer
         # per leaf, spawned inside the worker and sized by the leaf count
-        # of THIS tree; the subflow's gather collects the manifest entries
-        # and the join guarantees commit sees all of them. Each leaf array
-        # reaches its writer along a dataflow edge from a pinned-local
-        # value task — on the process backend that routes the bytes
-        # through the §11 shared-memory arena instead of pickling them
-        # into the writer's wire (and keeps wiring cost flat: the array
-        # itself is never serialized with the function).
+        # of THIS pass's tree — the runtime sizing is exactly what lets a
+        # replayed pass (§12) save a differently-shaped tree through the
+        # same plan. Each leaf array reaches its writer along a dataflow
+        # edge from a pinned-local value task — on the process backend
+        # that routes the bytes through the §11 shared-memory arena
+        # instead of pickling them into the writer's wire (and keeps
+        # wiring cost flat: the array itself is never serialized with the
+        # function).
         def shard(rt: Runtime):
+            tmp = state["tmp"]
             writers = []
-            for key, arr in flat.items():
+            for key, arr in state["flat"].items():
                 val = rt.add(lambda a=arr: a, name=f"v:{key[:24]}", affinity="local")
                 writers.append(
-                    rt.then(val, lambda a, k=key: write_leaf(k, a), name=f"w:{key[:24]}")
+                    rt.then(
+                        val,
+                        lambda a, k=key, t=tmp: write_leaf(t, k, a),
+                        name=f"w:{key[:24]}",
+                    )
                 )
             return rt.gather(writers, name="entries")
-
-        g = TaskGraph(f"ckpt-{step}")
-        prep = g.add(prepare, name="prepare")
-        shard_t = g.add(shard, name="shard", takes_runtime=True)
-        shard_t.after(prep)
 
         def commit(entries: list) -> None:
             # the spawner's value IS the gathered entry list: the join
             # unwrapped the subflow task the body returned (DESIGN.md §10)
-            manifest = {"leaves": dict(entries), "meta": {**(meta or {}), "step": step}}
+            tmp, directory = state["tmp"], state["directory"]
+            manifest = {
+                "leaves": dict(entries),
+                "meta": {**state["meta"], "step": state["step"]},
+            }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             if directory.exists():
                 shutil.rmtree(directory)
@@ -204,8 +253,12 @@ class CheckpointManager:
                 shutil.rmtree(tmp, ignore_errors=True)  # lost a same-step race
             self._gc()
 
+        g = TaskGraph("ckpt-save")
+        prep = g.add(prepare, name="prepare")
+        shard_t = g.add(shard, name="shard", takes_runtime=True)
+        shard_t.after(prep)
         g.then(shard_t, commit, name="commit")
-        self._pending.append(self._exec.run(g))
+        return g
 
     def wait(self, timeout: float = 600.0) -> None:
         """Block until every save queued by *this manager* has committed.

@@ -11,6 +11,7 @@ from .executor import Executor
 from .graph import CycleError, Module, Runtime, TaskGraph
 from .observer import ChromeTraceObserver, PoolObserver, StatsObserver
 from .pool import Future, RunContext, ThreadPool
+from .replay import ReplayPlan
 from .schedule import (
     PipelineOp,
     SimResult,
@@ -40,6 +41,7 @@ __all__ = [
     "Future",
     "RunContext",
     "ThreadPool",
+    "ReplayPlan",
     "PoolObserver",
     "StatsObserver",
     "ChromeTraceObserver",

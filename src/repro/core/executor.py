@@ -153,6 +153,7 @@ class Executor:
         work: Union[TaskGraph, Task, Callable[[], Any], Iterable[Task]],
         *,
         priority: Optional[float] = None,
+        replay: bool = True,
     ) -> Future:
         """Submit ``work`` and return a :class:`Future` for its completion.
 
@@ -167,11 +168,18 @@ class Executor:
         ``priority`` (when given) follows the ``ThreadPool.submit``
         contract everywhere: for graphs and iterables it overrides every
         member task that never chose an explicit band of its own.
+
+        ``replay`` (graphs only, DESIGN.md §12): re-running an unchanged
+        graph dispatches from its captured :class:`~repro.core.ReplayPlan`
+        — the first pass runs live and records, later passes skip the
+        per-task countdown walk. Any structural change, divergent
+        condition branch or cancellation falls back to live dispatch
+        transparently; pass ``replay=False`` to force live dispatch.
         """
         if isinstance(work, TaskGraph):
             if priority is not None:
                 self._apply_priority(work.tasks, priority)
-            return work.as_future(self.pool)
+            return work.as_future(self.pool, replay=replay)
         if isinstance(work, Task):
             task = work
             fut = Future(canceller=task.cancel)
@@ -267,11 +275,12 @@ class Executor:
         work: Union[TaskGraph, Task, Callable[[], Any], Iterable[Task]],
         *,
         priority: Optional[float] = None,
+        replay: bool = True,
     ) -> Any:
         """``await executor.co_run(graph)``: submit from an event loop and
         await the result without blocking the loop (``Future.__await__``
         transfers completion via ``call_soon_threadsafe``)."""
-        return await self.run(work, priority=priority)
+        return await self.run(work, priority=priority, replay=replay)
 
     # -- lifecycle --------------------------------------------------------------
 

@@ -240,6 +240,14 @@ class TaskGraph:
         self._sinks: dict[int, Task] = {}  # tasks currently wired into _fin
         self._run_count = 0
         self._num_conditions = 0
+        # -- §12 capture & replay bookkeeping (replay.py). `_epoch` is the
+        # structure fingerprint: every add/adopt/succeed/after bumps it.
+        # `_settled_epoch` records the epoch as of the last completed live
+        # submission — compilation waits for structure to settle so a plan
+        # never captures a graph whose sink reconciliation hasn't run.
+        self._epoch = 0
+        self._settled_epoch = -1
+        self._plan: Any = None
 
     # -- construction -----------------------------------------------------------
 
@@ -278,6 +286,7 @@ class TaskGraph:
         )
         t.graph = self
         self.tasks.append(t)
+        self._epoch += 1
         if t.is_condition:
             self._num_conditions += 1
         return t
@@ -296,6 +305,7 @@ class TaskGraph:
             if t.graph is not self:
                 t.graph = self
             self.tasks.append(t)
+            self._epoch += 1
             if t.is_condition:
                 self._num_conditions += 1
 
@@ -421,7 +431,53 @@ class TaskGraph:
         """Called by ``ThreadPool.submit`` when the graph is submitted."""
         self._run_count += 1
 
-    def as_future(self, pool) -> "Future":  # noqa: F821 - forward ref (pool.py)
+    # -- §12 capture & replay ------------------------------------------------------
+
+    @property
+    def replay_plan(self):
+        """The compiled §12 :class:`~repro.core.ReplayPlan`, or ``None``
+        when the graph has not yet settled (or was invalidated)."""
+        return self._plan
+
+    def invalidate_plan(self) -> None:
+        """Drop the compiled replay plan explicitly.
+
+        The next submission dispatches live and a fresh plan compiles once
+        the structure settles again. Needed only for mutations the epoch
+        fingerprint cannot see — e.g. rebinding ``task.fn`` on a §11
+        process backend wants re-wiring semantics decided here (plan
+        re-arm does refresh wires every pass, so plain ``fn`` rebinding is
+        already safe; use this as the explicit escape hatch for anything
+        else out-of-band).
+        """
+        self._plan = None
+
+    def _mark_plan_diverged(self) -> None:
+        p = self._plan
+        if p is not None:
+            p.diverged = True
+
+    def _usable_plan(self, pool):
+        """Return a plan ready to replay on ``pool``, compiling one when
+        the structure has settled; an invalidated plan (mutated graph,
+        divergence, different pool) is dropped so the caller takes the
+        live path — whose full per-task reset clears any stale state —
+        and the next settled submission recompiles."""
+        plan = self._plan
+        if plan is not None:
+            if plan.usable(pool, self._epoch):
+                return plan
+            self._plan = None
+            return None
+        if self._run_count >= 1 and self._epoch == self._settled_epoch:
+            from .replay import compile_plan, replay_eligible
+
+            if replay_eligible(pool):
+                self._plan = compile_plan(self, pool)
+                return self._plan
+        return None
+
+    def as_future(self, pool, *, replay: bool = True) -> "Future":  # noqa: F821
         """Submit the whole graph and return a :class:`~repro.core.Future`.
 
         The future resolves to ``None`` when every task has completed, or to
@@ -442,11 +498,23 @@ class TaskGraph:
         weak cycles re-run tasks, so "every sink finished" is not a
         termination signal — instead the run resolves when its in-flight
         task count drains to zero.
+
+        **Replay (DESIGN.md §12)** is on by default: once the graph's
+        structure has settled over one live run, subsequent calls dispatch
+        from the compiled :class:`~repro.core.ReplayPlan` — skipping the
+        per-task reset walk, sink reconciliation and live fan-out. Any
+        divergence (mutation, cancellation, a failed pass, a different
+        pool) transparently falls back to live dispatch and recompiles on
+        the next settled run. ``replay=False`` forces live dispatch for
+        one call without dropping the plan.
         """
         from .pool import Future  # local import: graph.py must not cycle
 
         if self._num_conditions:
-            return self._as_future_counted(pool)
+            return self._as_future_counted(pool, replay=replay)
+        plan = self._usable_plan(pool) if replay else None
+        if plan is not None:
+            return self._replay_dag(pool, plan)
         if self._fin is None:
             # Priority 0.0, deliberately: the completion task is only ever
             # ready once every sink has finished, so boosting it buys
@@ -479,6 +547,9 @@ class TaskGraph:
         graph_tasks = list(self.tasks)
 
         def _canceller() -> bool:
+            # cancellation consumes claims mid-run: any compiled plan is
+            # state-divergent now and must fall back to live dispatch
+            self._mark_plan_diverged()
             won = fin.cancel()
             for t in graph_tasks:
                 t.cancel()
@@ -507,21 +578,116 @@ class TaskGraph:
         fin.on_done = _resolve
         pool.submit(list(self.tasks) + [fin])
         self._run_count += 1
+        self._settled_epoch = self._epoch  # structure settled: §12 may compile
         return fut
 
-    def _as_future_counted(self, pool) -> "Future":  # noqa: F821 - forward ref
+    def _replay_dag(self, pool, plan) -> "Future":  # noqa: F821 - forward ref
+        """Replay submission for plain-DAG graphs (DESIGN.md §12): fresh
+        future + resolver, plan re-arm instead of the O(n) reset walk,
+        pre-bound roots instead of source discovery. Topology is unchanged
+        by fingerprint, so sink reconciliation is skipped entirely."""
+        from .pool import Future  # local import: graph.py must not cycle
+
+        fin = self._fin
+        graph_tasks = plan.scan_tasks
+
+        def _canceller() -> bool:
+            plan.diverged = True  # claims consumed mid-run: next pass is live
+            won = fin.cancel()
+            for t in graph_tasks:
+                t.cancel()
+                for st in t._spawned or ():
+                    st.cancel()
+            return won
+
+        fut = Future(canceller=_canceller)
+
+        def _resolve(_t: Task) -> None:
+            cancelled_exc: Optional[BaseException] = None
+            for t in graph_tasks:
+                if t.exception is not None:
+                    if not isinstance(t.exception, CancelledError):
+                        plan.diverged = True
+                        fut.set_exception(t.exception)
+                        return
+                    cancelled_exc = t.exception
+            if cancelled_exc is not None or any(t.cancelled for t in graph_tasks):
+                plan.diverged = True
+                fut.set_exception(cancelled_exc or CancelledError("task graph cancelled"))
+                return
+            fut.set_result(None)
+
+        fin.on_done = _resolve
+        plan.rearm()
+        self._run_count += 1
+        plan.schedule(pool)
+        return fut
+
+    def _as_future_counted(self, pool, *, replay: bool = True) -> "Future":  # noqa: F821
         """Counted-completion submission (condition graphs, DESIGN.md §10).
 
         A :class:`~repro.core.pool.RunContext` counts scheduled-but-
         unfinished tasks of this run; the worker that drains the count to
         zero resolves the future. Subflow tasks spawned during the run are
         counted (and cancelled) through the same context.
+
+        Replay (§12) composes: condition branch targets are pre-bound weak
+        meta-edges, so a loop that branches *differently* between passes
+        (serve ticks, prefetch lanes) keeps one plan — the context simply
+        counts meta nodes instead of member tasks, and loop members
+        self-re-arm inside their segment.
         """
         from .pool import Future, RunContext  # local import: no cycle
+
+        plan = self._usable_plan(pool) if replay else None
+        if plan is not None:
+            graph_tasks = plan.scan_tasks
+
+            def _plan_canceller() -> bool:
+                plan.diverged = True  # claims consumed mid-run: next pass live
+                won = False
+                for t in graph_tasks:
+                    if t.cancel():
+                        won = True
+                    for st in t._spawned or ():
+                        if st.cancel():
+                            won = True
+                return won
+
+            fut = Future(canceller=_plan_canceller)
+
+            def _resolve_replayed() -> None:
+                cancelled_exc: Optional[BaseException] = None
+                saw_cancel = False
+                for t in graph_tasks:
+                    spawned = t._spawned or ()
+                    for x in (t, *spawned):
+                        if x.exception is not None:
+                            if not isinstance(x.exception, CancelledError):
+                                plan.diverged = True
+                                fut.set_exception(x.exception)
+                                return
+                            cancelled_exc = x.exception
+                        saw_cancel = saw_cancel or x.cancelled
+                if cancelled_exc is not None or saw_cancel:
+                    plan.diverged = True
+                    fut.set_exception(
+                        cancelled_exc or CancelledError("task graph cancelled")
+                    )
+                    return
+                fut.set_result(None)
+
+            ctx = RunContext(_resolve_replayed)
+            plan.rearm()
+            self._run_count += 1
+            ctx.update(len(plan.roots))
+            plan.schedule(pool, ctx)
+            return fut
 
         graph_tasks = list(self.tasks)
 
         def _canceller() -> bool:
+            self._mark_plan_diverged()  # claims consumed: plan is stale now
             won = False
             for t in graph_tasks:
                 if t.cancel():
@@ -552,7 +718,9 @@ class TaskGraph:
 
         ctx = RunContext(_resolve_counted)
         self._run_count += 1
-        if not pool._submit_with_context(graph_tasks, ctx):
+        submitted = pool._submit_with_context(graph_tasks, ctx)
+        self._settled_epoch = self._epoch  # structure settled: §12 may compile
+        if not submitted:
             _resolve_counted()  # nothing to run: resolve immediately
         return fut
 

@@ -424,7 +424,20 @@ class ThreadPool:
             self._schedule(task)
         else:
             notify = getattr(work, "_notify_submitted", None)
-            if notify is not None:  # TaskGraph bumps its run_count
+            if notify is not None:  # a TaskGraph: run_count + §12 replay
+                plan = work._usable_plan(self)
+                if plan is not None:
+                    # replay (DESIGN.md §12): plan re-arm folds reset() in,
+                    # pre-bound roots replace source discovery; completion
+                    # is wait_idle-observable exactly like live dispatch.
+                    notify()
+                    fin = work._fin
+                    if fin is not None:
+                        fin.on_done = None  # no future this round: stale
+                        # as_future resolvers must not fire on old futures
+                    plan.rearm()
+                    plan.schedule(self)
+                    return
                 notify()
             tasks = list(work)
             graph = iter_graph(tasks)
@@ -623,7 +636,9 @@ class ThreadPool:
         by ``_ext_lock``. Either way, at most one parked worker is woken.
         """
         if self._observers:
-            self._notify("on_submit", task)
+            # §12 replay meta nodes report as their head member, so queue
+            # events always name real tasks (observer parity with live)
+            self._notify("on_submit", task.first if task._seg else task)
         idx = getattr(self._tls, "index", None)
         if idx is not None:
             self._claimed[idx] += 1
@@ -703,7 +718,9 @@ class ThreadPool:
                 if self._parked and len(vd):
                     self._wake_one(index)
                 if self._observers:
-                    self._notify("on_steal", task, index, victim)
+                    self._notify(
+                        "on_steal", task.first if task._seg else task, index, victim
+                    )
                 return task
         return EMPTY
 
@@ -723,7 +740,9 @@ class ThreadPool:
         own = self._deques[index]
         task: Optional[Task] = first
         while task is not None:
-            if self._observers:
+            if self._observers and not task._seg:
+                # §12 segments fire per-member start/finish from their own
+                # run loop; a seg-level pair would double-count
                 self._notify("on_start", task, index)
             slow = task._slow
             rt: Optional[Runtime] = None
@@ -751,7 +770,7 @@ class ThreadPool:
                         if self._first_error is None:
                             self._first_error = exc
             self._executed[index] += 1
-            if self._observers:
+            if self._observers and not task._seg:
                 self._notify("on_finish", task, index)
             cb = task.on_done
             if cb is not None:
@@ -778,14 +797,14 @@ class ThreadPool:
                     inline_pr = s.priority
                 elif s.priority > inline_pr:
                     if self._observers:
-                        self._notify("on_submit", inline)
+                        self._notify("on_submit", inline.first if inline._seg else inline)
                     own.push(inline)
                     pushed += 1
                     inline = s
                     inline_pr = s.priority
                 else:
                     if self._observers:
-                        self._notify("on_submit", s)
+                        self._notify("on_submit", s.first if s._seg else s)
                     own.push(s)
                     pushed += 1
             if pushed and self._parked:
@@ -840,6 +859,21 @@ class ThreadPool:
                 # (defer) instead of raising inside the scheduler loop
                 self._wire_tasks(sub, defer=True)
             task._spawned = sub
+            if task._seg:
+                # §12 replay spawner proxy: the splice operated on the meta
+                # (so the hidden join releases *meta* successors), but
+                # results and failure adoption must land on the wrapped
+                # member, where dataflow consumers and the graph resolver
+                # read them — mirror the join's verdict back.
+                inner = task.first
+                inner._spawned = sub
+
+                def _mirror(j, _fj=join.on_done, _meta=task, _inner=inner):
+                    _fj(j)
+                    _inner.result = _meta.result
+                    _inner.exception = _meta.exception
+
+                join.on_done = _mirror
             scheduled = [t for t in sub if t.is_source]
             if join.num_predecessors == 0:  # empty-sink degenerate case
                 scheduled.append(join)
@@ -871,14 +905,14 @@ class ThreadPool:
                 inline_pr = s.priority
             elif s.priority > inline_pr:
                 if self._observers:
-                    self._notify("on_submit", inline)
+                    self._notify("on_submit", inline.first if inline._seg else inline)
                 own.push(inline)
                 pushed += 1
                 inline = s
                 inline_pr = s.priority
             else:
                 if self._observers:
-                    self._notify("on_submit", s)
+                    self._notify("on_submit", s.first if s._seg else s)
                 own.push(s)
                 pushed += 1
         if pushed and self._parked:

@@ -153,6 +153,11 @@ class Task:
         3
     """
 
+    # Class-level flag, overridden by the §12 replay layer's meta nodes
+    # (``replay.py``): lets the pool route queue-side observer events to
+    # member tasks with a single attribute check and zero per-instance cost.
+    _seg = False
+
     __slots__ = (
         "fn",
         "name",
@@ -269,6 +274,9 @@ class Task:
         position of ``self`` in the condition's successor list is its
         branch index.
         """
+        g = self.graph
+        if g is not None:
+            g._epoch += 1  # §12 structure fingerprint: wiring mutates shape
         for p in predecessors:
             p.successors.append(self)
             if p.kind == "condition":
@@ -276,6 +284,9 @@ class Task:
             else:
                 self.num_predecessors += 1
                 self.inputs.append(p)
+            pg = p.graph
+            if pg is not None and pg is not g:
+                pg._epoch += 1
         self._pending[:] = range(self.num_predecessors)
         return self
 
@@ -284,12 +295,18 @@ class Task:
         an argument slot. Use for control dependencies (e.g. "the directory
         must exist") feeding into dataflow tasks. An edge from a condition
         task is weak here too (see :meth:`succeed`)."""
+        g = self.graph
+        if g is not None:
+            g._epoch += 1  # §12 structure fingerprint: wiring mutates shape
         for p in predecessors:
             p.successors.append(self)
             if p.kind == "condition":
                 self.num_weak_predecessors += 1
             else:
                 self.num_predecessors += 1
+            pg = p.graph
+            if pg is not None and pg is not g:
+                pg._epoch += 1
         self._pending[:] = range(self.num_predecessors)
         return self
 

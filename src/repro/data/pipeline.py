@@ -18,6 +18,13 @@ future from its completion callback. A lane is only re-*submitted* when a
 step arrives after its loop exited — under a steady consumer the graph
 loops in the workers indefinitely.
 
+Lane graphs are built once and never mutated, so every re-submission
+after the first replays the lane's captured
+:class:`~repro.core.ReplayPlan` (DESIGN.md §12): restarting an idle lane
+is a plan re-arm — no per-task reset walk, no re-wiring beyond the §11
+placement refresh — and the produce→transform→deliver loop runs as fused
+replay segments.
+
 ``depth`` lanes run concurrently on the work-stealing pool, so host-side
 data work overlaps device steps (the GIL-releasing regime the pool
 targets — DESIGN.md §2). The pipeline cursor is just the step index:

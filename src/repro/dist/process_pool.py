@@ -28,6 +28,14 @@ the normal §8 route (dataflow adoption / future delivery / ``wait_idle``
 raise). The pool never hangs on a dead worker and never loses capacity.
 Started bodies are at-most-once: a job whose worker died is *not* retried
 (its side effects may have happened).
+
+Replay (DESIGN.md §12) composes through the two §11 seams rather than
+around them: a captured :class:`~repro.core.ReplayPlan` re-arm calls
+``_wire_tasks`` over the *member* tasks every pass, so placement decisions
+(and any ``fn`` rebinding a consumer did between passes) are re-evaluated
+exactly as a live submission would, and the replay run loop offloads each
+wired member through ``_offload`` — fused segments ship their bodies one
+by one, they are never serialized as a unit.
 """
 from __future__ import annotations
 

@@ -31,6 +31,13 @@ work arrives on an idle engine, handed off through the run future's done
 callback so a restart can never overlap a draining run. Admission and
 queue bookkeeping stay lock-protected and may run from any thread.
 
+Because the tick graph never changes shape, every restart after the first
+dispatches from its captured :class:`~repro.core.ReplayPlan` (DESIGN.md
+§12): the ``[decode-tick, more?]`` pair runs as one fused segment whose
+weak back-edge loops without re-walking the live graph, and re-starting a
+drained run costs a plan re-arm instead of a full reset + re-wire.
+``stats()["tick_replays"]`` counts how many restarts took the replay path.
+
 ``submit_async`` rides the same facade's asyncio bridge: an async server
 can ``tokens = await engine.submit_async(prompt, n)`` without blocking its
 event loop.
@@ -325,12 +332,14 @@ class ServeEngine:
         """
         with self._lock:
             occ = self._occupancy_sum / self._ticks if self._ticks else 0.0
+            plan = self._tick_graph.replay_plan
             return {
                 "requests": self._requests,
                 "completed": self._completed,
                 "truncations": self._truncations,
                 "tokens_out": self._tokens_out,
                 "ticks": self._ticks,
+                "tick_replays": plan.replays if plan is not None else 0,
                 "mean_occupancy": occ,
                 "kv": self.kv.stats(),
                 "pool": self.pool.stats(),
@@ -404,7 +413,8 @@ class ServeEngine:
         if self._tick_live or self._broken is not None:
             return
         self._tick_live = True
-        # counted submission (the graph holds a condition) re-arms every task
+        # counted submission (the graph holds a condition) re-arms every
+        # task; from the second restart on this is a §12 plan re-arm
         fut = self._exec.run(self._tick_graph)
         fut.add_done_callback(self._tick_run_done)
 
