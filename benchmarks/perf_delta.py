@@ -1,5 +1,9 @@
 """§Perf before/after tables: artifacts_baseline/ vs artifacts/.
 
+Emits the graph-overhead table (roofline cells) and, when both directories
+hold a ``BENCH_serve.json``, a serve-latency table diffing tokens/s, p50/p99
+TTFT and p50/p99 inter-token latency per server row.
+
     PYTHONPATH=src python -m benchmarks.perf_delta [--update-experiments]
 """
 from __future__ import annotations
@@ -74,11 +78,69 @@ def table(rs) -> str:
     return "\n".join(out)
 
 
+def serve_rows():
+    """Before/after serve-latency rows from BENCH_serve.json in each dir."""
+    b_file, a_file = BASE / "BENCH_serve.json", AFTER / "BENCH_serve.json"
+    if not (b_file.exists() and a_file.exists()):
+        return []
+    b = {r["server"]: r for r in json.loads(b_file.read_text())["rows"]}
+    a = {r["server"]: r for r in json.loads(a_file.read_text())["rows"]}
+    out = []
+    for server in sorted(set(b) & set(a)):
+        rb, ra = b[server], a[server]
+
+        def pct(r, fam, q):
+            return r.get(fam, {}).get(q)
+
+        out.append(
+            dict(
+                server=server,
+                tps_b=rb["tokens_per_s"],
+                tps_a=ra["tokens_per_s"],
+                ttft50_b=pct(rb, "ttft_ms", "p50"),
+                ttft50_a=pct(ra, "ttft_ms", "p50"),
+                ttft99_b=pct(rb, "ttft_ms", "p99"),
+                ttft99_a=pct(ra, "ttft_ms", "p99"),
+                itl50_b=pct(rb, "itl_ms", "p50"),
+                itl50_a=pct(ra, "itl_ms", "p50"),
+                itl99_b=pct(rb, "itl_ms", "p99"),
+                itl99_a=pct(ra, "itl_ms", "p99"),
+            )
+        )
+    return out
+
+
+def _ms_pair(b, a):
+    if b is None or a is None:
+        return "—"
+    return f"{b:.0f} → **{a:.0f}**"
+
+
+def serve_table(rs) -> str:
+    out = [
+        "| server | tokens/s (before→after) | TTFT p50 ms | TTFT p99 ms "
+        "| ITL p50 ms | ITL p99 ms |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rs:
+        out.append(
+            f"| {r['server']} | {r['tps_b']:.0f} → **{r['tps_a']:.0f}** "
+            f"| {_ms_pair(r['ttft50_b'], r['ttft50_a'])} "
+            f"| {_ms_pair(r['ttft99_b'], r['ttft99_a'])} "
+            f"| {_ms_pair(r['itl50_b'], r['itl50_a'])} "
+            f"| {_ms_pair(r['itl99_b'], r['itl99_a'])} |"
+        )
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--update-experiments", action="store_true")
     args = ap.parse_args()
     t = table(rows())
+    srs = serve_rows()
+    if srs:
+        t += "\n\nServe latency (overload Poisson trace):\n\n" + serve_table(srs)
     print(t)
     if args.update_experiments and EXP.exists():
         import re

@@ -1,26 +1,43 @@
-"""Serving benchmark: continuous batching vs static batching, Poisson trace.
+"""Serving benchmark: overload Poisson trace through three servers.
 
-Replays one arrival trace (Poisson interarrivals, per-request token budgets)
-through two servers over the same model and params:
+Replays one arrival trace (Poisson interarrivals, per-request token budgets,
+arrival rate deliberately beyond the service rate — an *overload* trace)
+through three servers over the same model and params:
 
 * **static**  — the classic batch server (what examples/serve_lm.py used to
   be): wait until ``batch`` requests have arrived, prefill them together,
   decode the whole batch in lockstep until the *longest* member finishes,
   repeat. Slots of finished sequences burn compute; late arrivals wait for
   the next batch to form.
-* **continuous** — ``repro.serve.ServeEngine``: iteration-level batching on
-  the work-stealing pool (low-priority prefill tasks, high-priority decode
-  ticks, join/retire between ticks).
+* **continuous-flat** — ``repro.serve.ServeEngine`` with the whole-slot
+  ``SlotKVCache`` (one ``max_len`` reservation per sequence, unbounded
+  admit queue): iteration-level batching on the work-stealing pool.
+* **continuous-paged** — the same engine with the §13 paged KV pool plus
+  admission control: a bounded admit queue (``max_waiting = 2×slots``,
+  ``QueueFull`` backpressure — the client retries, modelling a closed
+  loop) and per-request deadlines grading the §9 prefill bands.
 
-Both count only each request's own budgeted tokens, so the tokens/s ratio
-isolates scheduling quality. A verification pass checks the engine's output
-for every request is bit-identical (token-for-token) to sequential
-single-request decode.
+Every continuous request is **streamed**, so the report carries end-to-end
+latency percentiles: TTFT (submit → first token) and inter-token latency
+(gaps between ``RequestHandle.token_times``), p50/p90/p99 in ms. Static
+has no per-request delivery times — it reports wall/throughput only.
+
+All servers count only each request's own budgeted tokens, so tokens/s
+isolates scheduling quality. A verification pass checks both engines'
+outputs for every request are bit-identical (token-for-token) to
+sequential single-request decode; ``max_len`` is rounded up to a page
+multiple so all four programs attend over equally-sized caches (in bf16,
+reduction tiling over differently-padded widths can flip greedy argmax at
+a near-tie, which is numerics, not scheduling).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--arch tinyllama-1.1b]
-        [--requests 24] [--slots 8] [--out benchmarks/artifacts/serve_bench.json]
+        [--quick] [--requests 32] [--slots 8]
+        [--out benchmarks/artifacts/BENCH_serve.json]
 
-Runs on CPU with the arch's reduced config in ~a minute; emits a JSON report.
+``--quick`` presets CI-sized dimensions (the committed gate baseline
+``benchmarks/BENCH_serve_quick.json`` is a ``--quick`` run; the serve gate
+in ``check_graph_regression.py`` compares quick-vs-quick). Runs on CPU
+with the arch's reduced config; emits a JSON report.
 """
 from __future__ import annotations
 
@@ -37,7 +54,7 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_reduced
 from repro.models import build_model
 from repro.models.lm import extend_caches
-from repro.serve import ServeEngine
+from repro.serve import QueueFull, ServeEngine
 
 
 def make_trace(rng, n, prompt_len, min_new, max_new, mean_gap_s):
@@ -51,6 +68,31 @@ def make_trace(rng, n, prompt_len, min_new, max_new, mean_gap_s):
 
 def clip_vocab(prompts, vocab):
     return [np.asarray(p % vocab, np.int32) for p in prompts]
+
+
+def _pcts(xs_s: list) -> dict:
+    """p50/p90/p99/max of a list of seconds, reported in ms."""
+    a = np.asarray(xs_s, np.float64) * 1e3
+    return {
+        "p50": round(float(np.percentile(a, 50)), 2),
+        "p90": round(float(np.percentile(a, 90)), 2),
+        "p99": round(float(np.percentile(a, 99)), 2),
+        "max": round(float(a.max()), 2),
+    }
+
+
+def latency_summary(handles) -> dict:
+    """TTFT + inter-token latency percentiles from streamed handles."""
+    ttfts = [h.ttft for h in handles]
+    assert all(t is not None for t in ttfts), "a request never delivered a token"
+    itls = []
+    for h in handles:
+        ts = h.token_times
+        itls.extend(b - a for a, b in zip(ts, ts[1:]))
+    out = {"ttft_ms": _pcts(ttfts)}
+    if itls:
+        out["itl_ms"] = _pcts(itls)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -140,35 +182,129 @@ def sequential_reference(model, params, prompts, budgets, width=None):
 # ---------------------------------------------------------------------------
 
 
-def serve_continuous(engine, prompts, budgets, arrivals, t0):
+def serve_continuous(engine, prompts, budgets, arrivals, t0, deadline=None):
+    """Replay the trace; returns (handles, outputs, admit_retries).
+
+    ``QueueFull`` backpressure is handled as a closed loop: the feeder
+    retries the rejected submit after a short sleep — work is delayed at
+    the client, never dropped.
+    """
     handles = [None] * len(prompts)
+    retries = 0
 
     def feeder():
+        nonlocal retries
         for i, (p, n) in enumerate(zip(prompts, budgets)):
             wait = t0 + arrivals[i] - time.perf_counter()
             if wait > 0:
                 time.sleep(wait)
-            handles[i] = engine.submit(p, n)
+            while True:
+                try:
+                    handles[i] = engine.submit(p, n, deadline=deadline)
+                    break
+                except QueueFull:
+                    retries += 1
+                    time.sleep(0.002)
 
     th = threading.Thread(target=feeder)
     th.start()
     th.join()
-    return [list(map(int, h.result(600))) for h in handles]
+    outs = [list(map(int, h.result(600))) for h in handles]
+    return handles, outs, retries
+
+
+def run_engine(model, params, args, layout, trace, max_len, buckets):
+    """One timed replay through a fresh engine; returns (row, outputs)."""
+    prompts, budgets, arrivals = trace
+    kw = {}
+    deadline = None
+    if layout == "paged":
+        kw.update(page_size=args.page_size, max_waiting=2 * args.slots)
+        deadline = args.deadline_s
+    engine = ServeEngine(
+        model,
+        params,
+        max_slots=args.slots,
+        max_len=max_len,
+        kv_layout=layout,
+        prefill_buckets=buckets,
+        **kw,
+    )
+    engine.generate(prompts[: args.slots], 2)  # warmup compiles
+    pre = engine.stats()
+    t0 = time.perf_counter()
+    handles, outs, retries = serve_continuous(
+        engine, prompts, budgets, arrivals, t0, deadline=deadline
+    )
+    engine.drain(600)
+    wall = time.perf_counter() - t0
+    stats = engine.stats()
+    engine.close()
+
+    assert all(len(o) == b for o, b in zip(outs, budgets))
+    total_tokens = sum(budgets)
+    ticks = stats["ticks"] - pre["ticks"]
+    row = {
+        "server": f"continuous-{layout}",
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(total_tokens / wall, 2),
+        "ticks": ticks,
+        # occupancy over the timed replay only (warmup ticks excluded)
+        "mean_occupancy": round(
+            (
+                stats["mean_occupancy"] * stats["ticks"]
+                - pre["mean_occupancy"] * pre["ticks"]
+            )
+            / max(ticks, 1),
+            3,
+        ),
+        "completed": stats["completed"] - pre["completed"],
+        "preemptions": stats["preemptions"],
+        "rejected": stats["rejected"],
+        "deadline_misses": stats["deadline_misses"],
+        "admit_retries": retries,
+        "pool_steals": stats["pool"]["steals"],
+        "kv": {
+            "page_size": stats["kv"]["page_size"],
+            "pages_total": stats["kv"]["pages_total"],
+            # flat slots are one page each, so slot peak == page peak there
+            "peak_pages_live": stats["kv"].get("peak_pages_live", stats["kv"]["peak_live"]),
+            "fragmentation": stats["kv"]["fragmentation"],
+        },
+        **latency_summary(handles),
+    }
+    return row, outs
+
+
+QUICK = dict(requests=24, slots=4, prompt_len=16, min_new=8, max_new=16, mean_gap_ms=2.0)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_NAMES)
+    ap.add_argument("--quick", action="store_true", help="CI-sized preset (see QUICK)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--min-new", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--mean-gap-ms", type=float, default=3.0)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument(
+        "--deadline-s",
+        type=float,
+        default=600.0,
+        help="per-request TTFT deadline on the paged server (generous by "
+        "default: exercises the §9 deadline bands without ever shedding "
+        "work, so throughput stays comparable across servers)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+    if args.quick:
+        for k, v in QUICK.items():
+            setattr(args, k, v)
 
     cfg = get_reduced(args.arch)
     model = build_model(cfg)
@@ -179,8 +315,12 @@ def main() -> None:
         args.mean_gap_ms / 1e3,
     )
     prompts = clip_vocab(prompts, cfg.vocab_size)
+    trace = (prompts, budgets, arrivals)
     total_tokens = sum(budgets)
-    max_len = args.prompt_len + args.max_new + 1
+    # round up to a page multiple so flat slots, paged gathers and the
+    # sequential reference all attend over the same cache width (bit-identity)
+    need = args.prompt_len + args.max_new + 1
+    max_len = -(-need // args.page_size) * args.page_size
     buckets = (args.prompt_len,) if ServeEngine.supports_prefill_buckets(cfg) else None
 
     # -- static baseline (warmup compiles, then timed replay) ---------------
@@ -189,55 +329,51 @@ def main() -> None:
     t0 = time.perf_counter()
     static_outs = static.serve(prompts, budgets, arrivals, t0)
     static_wall = time.perf_counter() - t0
-
-    # -- continuous engine (same warmup treatment, same trace) --------------
-    engine = ServeEngine(
-        model, params, max_slots=args.slots, max_len=max_len, prefill_buckets=buckets
-    )
-    engine.generate(prompts[: args.slots], 2)  # warmup
-    pre_stats = engine.stats()
-    t0 = time.perf_counter()
-    cont_outs = serve_continuous(engine, prompts, budgets, arrivals, t0)
-    engine.drain(600)
-    cont_wall = time.perf_counter() - t0
-    stats = engine.stats()
-    engine.close()
-
     assert all(len(o) == b for o, b in zip(static_outs, budgets))
-    assert all(len(o) == b for o, b in zip(cont_outs, budgets))
+
+    # -- continuous engines (same warmup treatment, same trace) -------------
+    flat_row, flat_outs = run_engine(model, params, args, "flat", trace, max_len, buckets)
+    paged_row, paged_outs = run_engine(
+        model, params, args, "paged", trace, max_len, buckets
+    )
 
     identical = None
     if not args.no_verify:
         refs = sequential_reference(model, params, prompts, budgets, width=max_len)
-        identical = all(r == c for r, c in zip(refs, cont_outs))
+        identical = all(r == c for r, c in zip(refs, flat_outs)) and all(
+            r == c for r, c in zip(refs, paged_outs)
+        )
 
     report = {
-        "arch": cfg.name,
-        "requests": args.requests,
-        "slots": args.slots,
-        "prompt_len": args.prompt_len,
-        "budgets": {"min": args.min_new, "max": args.max_new, "total_tokens": total_tokens},
-        "mean_gap_ms": args.mean_gap_ms,
-        "static": {
-            "wall_s": round(static_wall, 4),
-            "tokens_per_s": round(total_tokens / static_wall, 2),
+        "meta": {
+            "arch": cfg.name,
+            "quick": args.quick,
+            "requests": args.requests,
+            "slots": args.slots,
+            "prompt_len": args.prompt_len,
+            "max_len": max_len,
+            "page_size": args.page_size,
+            "budgets": {
+                "min": args.min_new,
+                "max": args.max_new,
+                "total_tokens": total_tokens,
+            },
+            "mean_gap_ms": args.mean_gap_ms,
+            "seed": args.seed,
         },
-        "continuous": {
-            "wall_s": round(cont_wall, 4),
-            "tokens_per_s": round(total_tokens / cont_wall, 2),
-            "ticks": stats["ticks"] - pre_stats["ticks"],
-            # occupancy over the timed replay only (warmup ticks excluded)
-            "mean_occupancy": round(
-                (
-                    stats["mean_occupancy"] * stats["ticks"]
-                    - pre_stats["mean_occupancy"] * pre_stats["ticks"]
-                )
-                / max(stats["ticks"] - pre_stats["ticks"], 1),
-                3,
-            ),
-            "pool_steals": stats["pool"]["steals"],
-        },
-        "speedup": round(static_wall / cont_wall, 3),
+        "rows": [
+            {
+                "server": "static",
+                "wall_s": round(static_wall, 4),
+                "tokens_per_s": round(total_tokens / static_wall, 2),
+            },
+            flat_row,
+            paged_row,
+        ],
+        "speedup_vs_static": round(static_wall / paged_row["wall_s"], 3),
+        "paged_over_flat_tokens_per_s": round(
+            paged_row["tokens_per_s"] / flat_row["tokens_per_s"], 3
+        ),
         "outputs_match_sequential_decode": identical,
     }
     print(json.dumps(report, indent=2))

@@ -300,3 +300,14 @@ class PriorityDeque:
         # iterate the _order snapshot, not the dict: a concurrent first push
         # to a new band may grow _bands mid-iteration
         return sum(len(self._bands[p]) for p in self._order)
+
+    def depths(self) -> dict[float, int]:
+        """Per-band queue depth, highest priority first (DESIGN.md §13).
+
+        A monitoring snapshot with the same consistency as ``__len__``:
+        exact when quiesced, transiently stale against concurrent pushes.
+        Empty bands are reported too — a band that existed once can refill.
+        """
+        if not self._banded:
+            return {0.0: len(self._fast)}
+        return {p: len(self._bands[p]) for p in self._order}

@@ -572,7 +572,7 @@ class ThreadPool:
         for t in self._threads:
             t.join()
 
-    def stats(self) -> dict[str, int]:
+    def stats(self) -> dict[str, Any]:
         """Execution statistics, summed over the per-worker counters.
 
         Each worker increments only its own cell, so reads race at worst
@@ -580,12 +580,21 @@ class ThreadPool:
         any quiesced pool and monotonically consistent for a live one.
         ``parked`` counts park events (a worker going to sleep); ``wakeups``
         counts targeted wakeups issued by submitters and the wake chain.
+        ``band_depths`` sums the per-band queue depth across the inbox and
+        every worker deque (DESIGN.md §13): on a prioritized workload it
+        shows where waiting work sits — e.g. near-deadline prefills piling
+        up in their promoted band while decode drains band 1.0 first.
         """
+        depths: dict[float, int] = {}
+        for dq in (self._inbox, *self._deques):
+            for pr, n in dq.depths().items():
+                depths[pr] = depths.get(pr, 0) + n
         return {
             "executed": sum(self._executed),
             "steals": sum(self._steals),
             "parked": sum(self._parked_ct),
             "wakeups": sum(self._wakeups),
+            "band_depths": dict(sorted(depths.items(), reverse=True)),
         }
 
     def __enter__(self) -> "ThreadPool":

@@ -214,3 +214,20 @@ def test_priority_deque_fast_path_items_visible_after_promotion():
             break
         got.append(item.tag)
     assert got == list(range(8)) + ["lo"]  # higher band drains first, FIFO
+
+
+def test_priority_deque_depths_snapshot():
+    """§13 monitoring: per-band depth, highest band first, empty bands kept."""
+    from repro.core import PriorityDeque
+
+    dq = PriorityDeque()
+    assert dq.depths() == {0.0: 0}  # fast path reports band 0.0
+    dq.push(_Item("a"))
+    dq.push(_Item("b", 1.0))
+    dq.push(_Item("c", 1.0))
+    dq.push(_Item("d", -0.5))
+    assert dq.depths() == {1.0: 2, 0.0: 1, -0.5: 1}
+    assert list(dq.depths()) == [1.0, 0.0, -0.5]  # descending priority
+    dq.pop()
+    dq.pop()
+    assert dq.depths() == {1.0: 0, 0.0: 1, -0.5: 1}  # drained band persists

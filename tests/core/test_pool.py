@@ -260,7 +260,10 @@ def test_stats_expose_parked_and_wakeups():
     try:
         s = pool.stats()
         assert set(s) >= {"executed", "steals", "parked", "wakeups"}
-        assert all(isinstance(v, int) for v in s.values())
+        counters = ("executed", "steals", "parked", "wakeups")
+        assert all(isinstance(s[k], int) for k in counters)
+        # §13: queue depth per priority band (idle pool -> all empty)
+        assert all(n == 0 for n in s["band_depths"].values())
         # idle workers park (spin-then-park, no poll ticks)
         deadline = time.monotonic() + 5.0
         while pool.stats()["parked"] < 2 and time.monotonic() < deadline:

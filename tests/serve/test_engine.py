@@ -1,6 +1,9 @@
 """End-to-end engine tests: continuous-batched greedy decode must equal
 sequential single-request decode token-for-token; eviction, cancellation and
 input validation."""
+import threading
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -10,7 +13,7 @@ from repro.configs import get_reduced
 from repro.core import CancelledError, ThreadPool
 from repro.models import build_model
 from repro.models.lm import extend_caches
-from repro.serve import ServeEngine
+from repro.serve import RequestHandle, ServeEngine
 
 
 def _build(arch):
@@ -183,15 +186,18 @@ def test_replayed_tick_keeps_trace_and_stats_truthful(tmp_path):
         model, params, max_slots=2, max_len=16, trace_path=str(trace_file)
     ) as engine:
         prompt = np.arange(3, dtype=np.int32) % cfg.vocab_size
-        # sequential generates: the engine drains to idle in between, so
-        # each later batch restarts the tick graph — a §12 replay
+        # sequential generates with an explicit drain in between: results
+        # resolve *inside* the tick body, so without the drain a fast next
+        # submit can join the still-live run and no restart would happen —
+        # the drain guarantees each later batch restarts the tick graph,
+        # a §12 replay
         for _ in range(3):
             outs = engine.generate([prompt], 2, timeout=300)
             assert len(outs[0]) == 2
-        # token futures resolve *inside* the tick body: quiesce the pool so
-        # the final tick's on_finish has fired before the trace is written
-        engine.drain(60)
-        engine.pool.wait_idle(30)
+            engine.drain(60)
+            engine.pool.wait_idle(30)
+        # the pool quiesce also ensures the final tick's on_finish has
+        # fired before the trace is written
         s = engine.stats()
     assert s["tick_replays"] >= 1  # at least one restart took the replay path
     trace = json.loads(trace_file.read_text())
@@ -222,4 +228,256 @@ def test_prefill_failure_readmits_waiting_requests():
         assert len(good.result(120)) == 4  # admitted after the failure
         engine.drain(60)
     finally:
+        engine.close(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# §13: paged serving — streaming, deadlines, backpressure, preemption
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_iterator_matches_result():
+    """Tokens arrive per decode tick through the blocking iterator and match
+    the final result; TTFT and per-token marks are recorded."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    with ServeEngine(model, params, max_slots=2, max_len=16) as engine:
+        h = engine.submit(prompt, 6)
+        streamed = list(h)  # blocks per token, ends at completion
+        assert streamed == list(map(int, h.result(0)))
+        assert len(streamed) == 6
+        assert h.ttft is not None and h.ttft >= 0.0
+        assert len(h.token_times) == 6
+        assert h.token_times == sorted(h.token_times)
+        assert h.first_token_t == h.token_times[0]
+        # a second iteration replays the now-complete stream
+        assert list(h) == streamed
+
+
+def test_streaming_async_for():
+    """§10 asyncio bridge: ``async for`` delivers the same tokens without
+    blocking the event loop."""
+    import asyncio
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32) for _ in range(2)]
+    with ServeEngine(model, params, max_slots=2, max_len=16) as engine:
+        sync_outs = engine.generate(prompts, 5, timeout=300)
+
+        async def consume(p):
+            h = engine.submit(p, 5)
+            return [tok async for tok in h]
+
+        async def main():
+            return await asyncio.gather(*(consume(p) for p in prompts))
+
+        async_outs = asyncio.run(main())
+    for s, a in zip(sync_outs, async_outs):
+        assert a == list(map(int, s))
+
+
+def test_deadline_miss_fails_fast():
+    """A request whose deadline lapses before its prefill starts resolves
+    with DeadlineExceeded; deadline-free traffic behind it still completes."""
+    import threading as th
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ThreadPool(1, name="serve-dl") as pool:
+        engine = ServeEngine(model, params, max_slots=1, max_len=16, pool=pool)
+        gate = th.Event()
+        pool.submit(lambda: gate.wait(30))  # stall the only worker
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        doomed = engine.submit(prompt, 4, deadline=0.05)
+        ok = engine.submit(prompt, 4)
+        time.sleep(0.3)  # let the deadline lapse while the worker is held
+        gate.set()
+        from repro.serve import DeadlineExceeded
+
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(60)
+        assert len(ok.result(120)) == 4
+        assert engine.stats()["deadline_misses"] == 1
+        engine.drain(60)
+        engine.close(drain=False)
+
+
+def test_deadline_bands_promote_with_urgency():
+    """§13 -> §9 mapping: waiting prefills are graded into priority bands by
+    remaining deadline headroom; resumes are always urgent."""
+    from repro.serve import PREFILL_PRIORITY, PREFILL_SOON, PREFILL_URGENT
+    from repro.serve.engine import GenRequest, _Pending
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ServeEngine(model, params, max_slots=1, max_len=8) as engine:
+        req = GenRequest(np.arange(3, dtype=np.int32), 2, deadline=1.0)
+        now = 100.0
+        fresh = _Pending(object.__new__(RequestHandle), req, now + 1.0, 0)
+        assert engine._band(fresh, now) == PREFILL_PRIORITY
+        assert engine._band(fresh, now + 0.6) == PREFILL_SOON
+        assert engine._band(fresh, now + 0.8) == PREFILL_URGENT
+        nodeadline = _Pending(object.__new__(RequestHandle), GenRequest(req.prompt, 2), None, 1)
+        assert engine._band(nodeadline, now) == PREFILL_PRIORITY
+        resumed = _Pending(object.__new__(RequestHandle), req, now + 1.0, 2)
+        resumed.tokens = [7]
+        assert engine._band(resumed, now) == PREFILL_URGENT
+
+
+def test_bounded_admit_queue_rejects_with_queue_full():
+    """Backpressure: beyond max_waiting queued requests, submit raises
+    QueueFull instead of growing the queue without bound."""
+    import threading as th
+
+    from repro.serve import QueueFull
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ThreadPool(1, name="serve-bp") as pool:
+        engine = ServeEngine(
+            model, params, max_slots=1, max_len=16, pool=pool,
+            prefill_lookahead=0, max_waiting=2,
+        )
+        gate = th.Event()
+        pool.submit(lambda: gate.wait(30))
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        handles = [engine.submit(prompt, 3) for _ in range(3)]  # 1 inflight + 2 waiting
+        with pytest.raises(QueueFull):
+            engine.submit(prompt, 3)
+        gate.set()
+        for h in handles:
+            assert len(h.result(120)) == 3
+        st = engine.stats()
+        assert st["rejected"] == 1
+        assert st["completed"] == 3
+        engine.close(drain=False)
+
+
+def test_page_pressure_preempts_and_resumes_bit_identical():
+    """The §13 tentpole invariant: with the page pool oversubscribed, the
+    engine preempts the youngest resident to the admit queue and resumes it
+    by re-prefill — and every request's tokens still equal the sequential
+    single-request reference exactly. Preemption moves work, never drops it."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    MAX_LEN = 24
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32) for _ in range(3)]
+    budgets = [12, 11, 10]
+    refs = [
+        sequential_decode(model, params, p, b, MAX_LEN) for p, b in zip(prompts, budgets)
+    ]
+    # 2 residents x 6 pages/seq would need 12 pages; grant only 6 (the
+    # one-full-sequence floor) so concurrent growth must hit page pressure
+    # whichever order the prefills land in
+    with ServeEngine(
+        model, params, max_slots=2, max_len=MAX_LEN, page_size=4, num_pages=6
+    ) as engine:
+        outs = engine.generate(prompts, budgets, timeout=300)
+        stats = engine.stats()
+    for ref, out in zip(refs, outs):
+        assert list(map(int, out)) == ref  # token-for-token across preemption
+    assert stats["preemptions"] >= 1
+    assert stats["completed"] == 3
+    assert stats["kv"]["pages_live"] == 0  # everything returned to the pool
+
+
+def test_close_drain_never_strands_racing_submits():
+    """Regression (§13 satellite): ``close(drain=True)`` used to mark the
+    engine closed only *after* draining, so a submit landing in that window
+    was admitted onto a pool about to be torn down — its prefill was
+    abandoned and the handle never resolved. Now close rejects first, then
+    drains: every accepted handle must resolve."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    engine = ServeEngine(model, params, max_slots=1, max_len=24)
+    prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+    first = engine.submit(prompt, 16)  # a long decode keeps the tick busy
+    accepted, stop = [first], False
+
+    def spam():
+        while not stop:
+            try:
+                accepted.append(engine.submit(prompt, 2))
+            except RuntimeError:
+                return  # engine closed: the race window is shut
+            time.sleep(0.002)
+
+    t = threading.Thread(target=spam)
+    t.start()
+    time.sleep(0.05)
+    engine.close(drain=True)  # races the spammer
+    stop = True
+    t.join(60)
+    with pytest.raises(RuntimeError):
+        engine.submit(prompt, 2)  # closed engines reject
+    for h in accepted:  # nobody stranded: every accepted handle resolved
+        assert len(h.result(10)) >= 1
+
+
+def test_close_drain_waits_for_queued_low_priority_prefill():
+    """The documented race shape: a low-priority prefill queued behind the
+    decode tick on a single worker. close(drain=True) must complete it, not
+    abandon it."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ThreadPool(1, name="serve-close") as pool:
+        engine = ServeEngine(model, params, max_slots=1, max_len=24, pool=pool)
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        h1 = engine.submit(prompt, 12)  # decode tick occupies the worker
+        h2 = engine.submit(prompt, 3)  # prefill waits at PREFILL_PRIORITY
+        engine.close(drain=True)
+        assert len(h1.result(5)) == 12
+        assert len(h2.result(5)) == 3
+
+
+def test_async_cancellation_before_first_token_frees_everything():
+    """§13 satellite: cancelling the awaitable before the first token
+    releases the request (no pages were or will be held) and the handle
+    resolves with CancelledError — never with tokens."""
+    import asyncio
+    import threading as th
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ThreadPool(1, name="serve-cx") as pool:
+        engine = ServeEngine(model, params, max_slots=1, max_len=16, pool=pool)
+        gate = th.Event()
+        pool.submit(lambda: gate.wait(30))  # the prefill can never start
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+
+        async def main():
+            task = asyncio.ensure_future(engine.submit_async(prompt, 4))
+            await asyncio.sleep(0.05)
+            task.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await task
+
+        asyncio.run(main())
+        gate.set()
+        engine.drain(60)
+        st = engine.stats()
+        assert st["completed"] == 0 and st["tokens_out"] == 0
+        kvs = st["kv"]
+        assert kvs["live"] == 0 and kvs["pages_live"] == 0
+        assert kvs["page_allocs"] == 0  # never even touched the page pool
+        engine.close(drain=False)
+
+
+def test_cancel_mid_prefill_never_joins():
+    """Cancelling while the prefill task is queued/running drops its result
+    instead of joining the batch; the future resolves with CancelledError."""
+    import threading as th
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    with ThreadPool(1, name="serve-cx2") as pool:
+        engine = ServeEngine(model, params, max_slots=1, max_len=16, pool=pool)
+        gate = th.Event()
+        pool.submit(lambda: gate.wait(30))
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        h = engine.submit(prompt, 4)  # prefill task queued behind the gate
+        assert h.cancel()
+        gate.set()
+        with pytest.raises(CancelledError):
+            h.result(30)
+        engine.drain(60)
+        assert engine.stats()["kv"]["pages_live"] == 0
+        # the stream surface agrees: iteration raises, yields nothing
+        with pytest.raises(CancelledError):
+            list(h)
         engine.close(drain=False)

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import build_model
-from repro.serve.kv import SlotKVCache, pad_caches_to, ring_modulus
+from repro.serve.kv import PagedKVCache, SlotKVCache, pad_caches_to, ring_modulus
 
 
 def _tiny_model(arch="tinyllama-1.1b"):
@@ -129,3 +129,114 @@ def test_write_rejects_dead_slot_and_overflow():
     slot = kv.alloc()
     with pytest.raises(ValueError):
         kv.write(slot, cache, 9)  # exceeds max_len
+
+
+# ---------------------------------------------------------------------------
+# paged pool (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_page_accounting():
+    _cfg, model, _params = _tiny_model()
+    kv = PagedKVCache(model, max_slots=3, max_len=24, page_size=8)
+    assert kv.pages_per_seq == 3 and kv.num_pages == 9
+    s = kv.alloc(kv.pages_for(5))  # 5 tokens -> 1 page
+    assert kv.capacity_tokens(s) == 8 and kv.pages_live == 1
+    assert kv.grow_to(s, 17)  # 3 pages
+    assert kv.capacity_tokens(s) == 24
+    assert not kv.grow_to(s, 25)  # beyond max_len
+    t = kv.alloc(2)
+    assert kv.pages_live == 5 and kv.free_pages == 4
+    kv.free(t)
+    assert kv.pages_live == 3 and kv.free_pages == 6
+    st = kv.stats()
+    assert st["page_allocs"] == 5 and st["page_frees"] == 2
+    assert st["peak_pages_live"] == 5
+
+
+def test_paged_grow_is_all_or_nothing():
+    """Page pressure: a grow that cannot be fully served allocates nothing
+    (the engine preempts instead of holding a partial claim)."""
+    _cfg, model, _params = _tiny_model()
+    kv = PagedKVCache(model, max_slots=2, max_len=16, page_size=4, num_pages=4)
+    a = kv.alloc(1)
+    b = kv.alloc(2)
+    assert kv.free_pages == 1
+    assert not kv.grow_to(a, 12)  # needs 2 more, only 1 free
+    assert kv.capacity_tokens(a) == 4  # nothing was taken
+    assert kv.grow_to(a, 8)  # 1 more page fits
+    assert kv.free_pages == 0
+    kv.free(b)
+    assert kv.grow_to(a, 12)  # freed pages are reusable
+    assert kv.alloc(1) == b  # the slot too
+
+
+def test_paged_validates_sizing():
+    _cfg, model, _params = _tiny_model()
+    with pytest.raises(ValueError):  # pool cannot hold one full sequence
+        PagedKVCache(model, max_slots=2, max_len=16, page_size=4, num_pages=3)
+    kv = PagedKVCache(model, max_slots=1, max_len=6, page_size=64)
+    assert kv.page_size == 6  # clamped to max_len
+    assert kv.alloc(kv.pages_per_seq + 1) is None  # over per-seq table size
+
+
+def test_paged_occupancy_and_fragmentation_stats():
+    """§13 satellite: both cache layouts report page-occupancy and internal
+    fragmentation; the paged layout's fragmentation is bounded by the page
+    size while the flat layout reserves max_len whatever the need."""
+    _cfg, model, _params = _tiny_model()
+    MAX = 32
+    flat = SlotKVCache(model, max_slots=2, max_len=MAX)
+    paged = PagedKVCache(model, max_slots=2, max_len=MAX, page_size=8)
+    for kv in (flat, paged):
+        st = kv.stats()
+        assert st["pages_live"] == 0 and st["page_occupancy"] == 0.0
+        assert st["fragmentation"] == 0.0  # vacuously: nothing live
+
+    fs = flat.alloc()
+    flat.grow_to(fs, 10)  # a 10-token sequence in a 32-token slot
+    st = flat.stats()
+    assert st["page_size"] == MAX and st["pages_total"] == 2
+    assert st["page_occupancy"] == 0.5
+    assert st["fragmentation"] == pytest.approx(1 - 10 / 32)  # 22 wasted
+
+    ps = paged.alloc(paged.pages_for(10))  # 2 pages of 8
+    paged.grow_to(ps, 10)
+    st = paged.stats()
+    assert st["pages_live"] == 2 and st["page_occupancy"] == 2 / 8
+    assert st["fragmentation"] == pytest.approx(1 - 10 / 16)  # only 6 wasted
+    paged.free(ps)
+    assert paged.stats()["fragmentation"] == 0.0
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-1.3b"])
+def test_paged_write_read_matches_flat(arch):
+    """Bit-identity invariant: a prefill written to pages and gathered back
+    equals the flat slot layout exactly (zero page == zero padding)."""
+    cfg, model, params = _tiny_model(arch)
+    S, MAX = 5, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0, cfg.vocab_size)
+    _logits, cache = jax.jit(model.prefill)(params, {"tokens": tokens})
+
+    flat = SlotKVCache(model, max_slots=2, max_len=MAX)
+    paged = PagedKVCache(model, max_slots=2, max_len=MAX, page_size=4)
+    fs, ps = flat.alloc(), paged.alloc(paged.pages_for(S))
+    flat.write(fs, cache, S)
+    paged.write(ps, cache, S)
+    a, b = flat.read_slot(fs), paged.read_slot(ps)
+    eq = jax.tree.map(lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)
+    assert all(jax.tree.leaves(eq)), eq
+
+
+def test_paged_write_validates():
+    cfg, model, params = _tiny_model()
+    tokens = jnp.zeros((1, 4), jnp.int32)
+    _logits, cache = jax.jit(model.prefill)(params, {"tokens": tokens})
+    kv = PagedKVCache(model, max_slots=1, max_len=8, page_size=4)
+    with pytest.raises(ValueError):
+        kv.write(0, cache, 4)  # not allocated
+    slot = kv.alloc(1)
+    with pytest.raises(ValueError):
+        kv.write(slot, cache, 9)  # exceeds max_len
+    with pytest.raises(ValueError):
+        kv.write(slot, cache, 8)  # needs 2 pages, slot holds 1
