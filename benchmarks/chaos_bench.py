@@ -1,0 +1,175 @@
+"""Chaos benchmark: §14 fault tolerance under deterministic injection.
+
+Runs one graph shape — a wide fan-out of small compute bodies feeding a
+gather sink, every body carrying a ``RetryPolicy`` — through three
+configurations of the work-stealing pool:
+
+  no-fault     plain pool, no injector installed: the §14 machinery's
+               *passive* cost (policy fields checked on the failure path
+               only — this row must track graph_bench's fan-out numbers)
+  seam-only    a :class:`repro.core.FaultInjector` installed with every
+               rate at 0: the cost of routing dispatch through the §11
+               ``_offload`` seam with no fault ever fired
+  chaos        the seeded injector firing real faults (body failures,
+               delays, synthetic worker loss) — every failure retried
+               through the scheduler's deferred-backoff path
+
+Each row reports wall time, injected-fault counts, the retries/timeouts
+the pool actually performed, and **correct**: whether every task's final
+value survived the faults bit-identically (the point of §14 — chaos
+changes the schedule, never the answer). A final self-check re-runs the
+chaos row with the same seed and asserts the injected schedule is
+byte-identical — the determinism contract, enforced on every bench run.
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py [--quick] \
+        [--out BENCH_chaos.json] [--seed 7] [--threads 4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+from typing import Optional
+
+from repro.core import (
+    ChaosError,
+    FaultInjector,
+    RetryPolicy,
+    TaskGraph,
+    ThreadPool,
+)
+from repro.dist.process_pool import WorkerDiedError
+
+POLICY = RetryPolicy(
+    max_attempts=10, backoff=0.0, retry_on=(ChaosError, WorkerDiedError)
+)
+
+
+def build_graph(n: int) -> tuple[TaskGraph, object]:
+    g = TaskGraph("chaos-bench")
+    tasks = [
+        g.add(lambda i=i: sum(range(64)) + i, name=f"b:{i}", retry=POLICY)
+        for i in range(n)
+    ]
+    sink = g.gather(tasks, name="collect")
+    return g, sink
+
+
+def run_once(
+    pool: ThreadPool, n: int, inj: Optional[FaultInjector]
+) -> tuple[float, bool]:
+    g, sink = build_graph(n)
+    t0 = time.perf_counter()
+    if inj is not None:
+        with inj.on(pool):
+            pool.run(g)
+    else:
+        pool.run(g)
+    wall = time.perf_counter() - t0
+    expect = [sum(range(64)) + i for i in range(n)]
+    return wall, list(sink.result) == expect
+
+
+def bench(quick: bool, threads: int, seed: int) -> list[dict]:
+    n = 300 if quick else 2000
+    repeats = 3 if quick else 5
+    rates = dict(fail_rate=0.15, delay_rate=0.05, kill_rate=0.02, delay_s=0.0005)
+    rows = []
+    with ThreadPool(threads) as pool:
+        run_once(pool, n, None)  # warm-up
+        for label in ("no-fault", "seam-only", "chaos"):
+            before = pool.stats()
+            walls, correct, counts = [], True, {"fail": 0, "delay": 0, "kill": 0}
+            for rep in range(repeats):
+                if label == "no-fault":
+                    inj = None
+                elif label == "seam-only":
+                    inj = FaultInjector(seed=seed)
+                else:
+                    inj = FaultInjector(seed=seed + rep, **rates)
+                wall, ok = run_once(pool, n, inj)
+                walls.append(wall)
+                correct = correct and ok
+                if inj is not None:
+                    for k, v in inj.counts().items():
+                        counts[k] += v
+            after = pool.stats()
+            rows.append(
+                {
+                    "config": label,
+                    "tasks": n,
+                    "repeats": repeats,
+                    "wall_ms": min(walls) * 1e3,
+                    "us_per_task": min(walls) / n * 1e6,
+                    "injected": counts,
+                    "retries": after["retries"] - before["retries"],
+                    "timeouts": after["timeouts"] - before["timeouts"],
+                    "correct": correct,
+                }
+            )
+        # determinism self-check: same seed => byte-identical schedule
+        a = FaultInjector(seed=seed, **rates)
+        b = FaultInjector(seed=seed, **rates)
+        run_once(pool, n, a)
+        run_once(pool, n, b)
+        assert a.schedule() == b.schedule(), "chaos schedule is not deterministic"
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small sizes / fewer repeats (CI)")
+    ap.add_argument("--out", default=None, help="also write a JSON perf record")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--threads", type=int, default=4)
+    args = ap.parse_args()
+
+    rows = bench(args.quick, args.threads, args.seed)
+    print(
+        f"{'config':<12}{'tasks':>7}{'wall_ms':>10}{'us/task':>9}"
+        f"{'fail':>6}{'delay':>7}{'kill':>6}{'retries':>9}{'correct':>9}"
+    )
+    for r in rows:
+        inj = r["injected"]
+        print(
+            f"{r['config']:<12}{r['tasks']:>7}{r['wall_ms']:>10.2f}"
+            f"{r['us_per_task']:>9.2f}{inj['fail']:>6}{inj['delay']:>7}"
+            f"{inj['kill']:>6}{r['retries']:>9}{str(r['correct']):>9}"
+        )
+    if not all(r["correct"] for r in rows):
+        print("FAILED: surviving results diverged from the no-fault values")
+        return 1
+    chaos = next(r for r in rows if r["config"] == "chaos")
+    if chaos["retries"] < chaos["injected"]["fail"]:
+        print("FAILED: fewer retries than injected failures — recovery leaked")
+        return 1
+    print("determinism self-check: same seed produced an identical schedule")
+
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(
+            json.dumps(
+                {
+                    "meta": {
+                        "bench": "chaos_bench",
+                        "quick": args.quick,
+                        "seed": args.seed,
+                        "threads": args.threads,
+                        "cpu_count": os.cpu_count(),
+                        "timestamp": time.time(),
+                    },
+                    "rows": rows,
+                },
+                indent=1,
+            )
+        )
+        print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
-from repro.core import Executor, Runtime, TaskGraph, ThreadPool
+from repro.core import Executor, RetryPolicy, Runtime, TaskGraph, ThreadPool
 
 _SEP = "."
 
@@ -135,6 +135,7 @@ class CheckpointManager:
         pool: Optional[ThreadPool] = None,
         backend: Optional[str] = None,
         keep: int = 3,
+        write_retries: int = 2,
     ) -> None:
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
@@ -150,6 +151,14 @@ class CheckpointManager:
             self.pool = self._exec.pool
             self._own_pool = True
         self.keep = keep
+        # §14: shard writes are idempotent (same bytes, same file), so
+        # transient IO failures retry with a short backoff before the save
+        # graph surfaces the error
+        self._write_retry = (
+            RetryPolicy(max_attempts=1 + write_retries, backoff=0.01, retry_on=OSError)
+            if write_retries > 0
+            else None
+        )
         self._pending: list = []
         # §12 steady-state template: one cached save graph, replayed per
         # save; the payload slots are what each pass's bodies read.
@@ -227,13 +236,14 @@ class CheckpointManager:
             writers = []
             for key, arr in state["flat"].items():
                 val = rt.add(lambda a=arr: a, name=f"v:{key[:24]}", affinity="local")
-                writers.append(
-                    rt.then(
-                        val,
-                        lambda a, k=key, t=tmp: write_leaf(t, k, a),
-                        name=f"w:{key[:24]}",
-                    )
+                w = rt.then(
+                    val,
+                    lambda a, k=key, t=tmp: write_leaf(t, k, a),
+                    name=f"w:{key[:24]}",
                 )
+                w.retry_policy = self._write_retry
+                w.idempotent = True  # rewriting the same bytes is safe
+                writers.append(w)
             return rt.gather(writers, name="entries")
 
         def commit(entries: list) -> None:

@@ -6,11 +6,12 @@ The public front door is the :class:`Executor` facade (DESIGN.md §10):
 condition tasks, dynamic subflows, futures and the asyncio bridge all hang
 off it. The lower layers remain importable for drop-in paper fidelity."""
 from .baseline import NaiveThreadPool, SerialExecutor, SerialPool
+from .chaos import ChaosError, FaultInjector
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
 from .executor import Executor
 from .graph import CycleError, Module, Runtime, TaskGraph
 from .observer import ChromeTraceObserver, PoolObserver, StatsObserver
-from .pool import Future, RunContext, ThreadPool
+from .pool import Future, RunContext, ThreadPool, checkpoint
 from .replay import ReplayPlan
 from .schedule import (
     PipelineOp,
@@ -23,12 +24,17 @@ from .schedule import (
     schedule_to_table,
     simulate,
 )
-from .task import CancelledError, Task, iter_graph
+from .task import CancelledError, RetryPolicy, Task, TaskTimeoutError, iter_graph
 
 __all__ = [
     "NaiveThreadPool",
     "SerialExecutor",
     "SerialPool",
+    "ChaosError",
+    "FaultInjector",
+    "RetryPolicy",
+    "TaskTimeoutError",
+    "checkpoint",
     "EMPTY",
     "ChaseLevDeque",
     "FastDeque",

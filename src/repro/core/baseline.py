@@ -16,10 +16,11 @@ paper positions itself against in §1–2:
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque as _pydeque
 from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
-from .task import CancelledError, Task, iter_graph
+from .task import CancelledError, Task, TaskTimeoutError, iter_graph
 
 __all__ = ["NaiveThreadPool", "SerialExecutor", "SerialPool"]
 
@@ -213,12 +214,23 @@ class SerialPool:
     set (pending bodies are skipped with :class:`CancelledError`, exactly
     like a poisoned thread pool), and is re-raised by :meth:`wait_idle` or
     delivered through the attached future.
+
+    §14 fault tolerance holds serially too: a retriable failure re-runs
+    the body inline after sleeping the policy's backoff, ``timeout=``
+    deadlines fire at ``checkpoint()`` calls, and ``stats()`` reports the
+    same ``retries`` / ``timeouts`` counters as the thread backends.
     """
+
+    # §14 body-dispatch seam (same shape as ``ThreadPool._offload``): a
+    # FaultInjector wraps it; None means "call the body directly".
+    _offload: Optional[Callable[[Task, int], None]] = None
 
     def __init__(self, observers: Any = ()) -> None:
         self._observers: list[Any] = list(observers)
         self._first_error: Optional[BaseException] = None
         self._executed = 0
+        self._retries = 0
+        self._timeouts = 0
         self._stop = False
 
     # -- pool protocol ---------------------------------------------------------
@@ -304,7 +316,14 @@ class SerialPool:
     def stats(self) -> dict[str, int]:
         """`ThreadPool.stats` shape: ``executed`` counts real task
         executions; steals/parks/wakeups are structurally zero serially."""
-        return {"executed": self._executed, "steals": 0, "parked": 0, "wakeups": 0}
+        return {
+            "executed": self._executed,
+            "steals": 0,
+            "parked": 0,
+            "wakeups": 0,
+            "retries": self._retries,
+            "timeouts": self._timeouts,
+        }
 
     def close(self) -> None:
         self._stop = True
@@ -335,25 +354,67 @@ class SerialPool:
 
     def _run_stack(self, stack: list) -> None:
         from .graph import Runtime, select_branch, splice_subflow
+        from .pool import _current  # §14 checkpoint state (deferred import)
 
         while stack:
             t = stack.pop()
-            rt = Runtime(t) if t.takes_runtime else None
+            rt: Any = None
             if self._observers:
                 self._notify("on_start", t, 0)
-            try:
-                if self._first_error is not None and t.propagate_errors:
-                    t.exception = CancelledError("predecessor failed")
-                    t._done = True  # noqa: SLF001 - pool-side protocol
-                elif rt is not None:
-                    t._spawned = rt.sub.tasks
-                    t.run(rt)
-                else:
-                    t.run()
-            except BaseException as exc:  # noqa: BLE001 - recorded, raised in wait
-                t.exception = exc
-                if t.propagate_errors and self._first_error is None:
-                    self._first_error = exc
+            while True:  # §14 retries happen inline — there is one thread
+                _current.task = t
+                _current.deadline = (
+                    None if t.timeout is None else time.monotonic() + t.timeout
+                )
+                try:
+                    if self._first_error is not None and t.propagate_errors:
+                        t.exception = CancelledError("predecessor failed")
+                        t._done = True  # noqa: SLF001 - pool-side protocol
+                    elif t.takes_runtime:
+                        rt = Runtime(t)  # fresh per attempt: no stale spawns
+                        t._spawned = rt.sub.tasks
+                        t.run(rt)
+                    elif self._offload is not None:
+                        self._offload(t, 0)
+                    else:
+                        t.run()
+                except BaseException as exc:  # noqa: BLE001 - recorded, raised in wait
+                    if isinstance(exc, TaskTimeoutError):
+                        self._timeouts += 1
+                        if self._observers:
+                            self._notify("on_timeout", t, 0)
+                    pol = t.retry_policy
+                    if (
+                        pol is not None
+                        and pol.matches(exc)
+                        and not (getattr(exc, "started", False) and not t.idempotent)
+                        and t._attempt + 1 < pol.max_attempts
+                    ):
+                        t._attempt += 1
+                        if exc.__context__ is None and t._last_exc is not None:
+                            exc.__context__ = t._last_exc
+                        t._last_exc = exc
+                        t._claim[:] = (0,)
+                        t._started = False
+                        t._timed_out = False
+                        t.exception = None
+                        self._retries += 1
+                        if self._observers:
+                            self._notify("on_retry", t, t._attempt, 0)
+                        delay = pol.delay(t._attempt)
+                        if delay > 0:
+                            time.sleep(delay)
+                        continue
+                    if (
+                        t._last_exc is not None
+                        and exc.__context__ is None
+                        and exc is not t._last_exc
+                    ):
+                        exc.__context__ = t._last_exc
+                    t.exception = exc
+                    if t.propagate_errors and self._first_error is None:
+                        self._first_error = exc
+                break
             self._executed += 1
             if self._observers:
                 self._notify("on_finish", t, 0)
@@ -381,3 +442,6 @@ class SerialPool:
             for s in t.successors:
                 if s.decrement():
                     stack.append(s)
+        # the serial pool borrows the *caller's* thread: leave no dangling
+        # checkpoint state behind for code running after the submission
+        _current.task = None

@@ -40,7 +40,7 @@ from typing import Any, Callable, Iterable, Optional, Sequence, Union
 from .baseline import SerialPool
 from .graph import Runtime, TaskGraph
 from .pool import Future, ThreadPool
-from .task import Task
+from .task import RetryPolicy, Task
 
 __all__ = ["Executor", "Runtime"]
 
@@ -113,7 +113,7 @@ class Executor:
             self.pool = pool
             if isinstance(pool, SerialPool):
                 self.backend = "serial"
-            elif getattr(pool, "_offload", None) is not None:  # dist.ProcessPool
+            elif hasattr(pool, "_procs"):  # dist.ProcessPool
                 self.backend = "process"
             else:
                 self.backend = "thread"
@@ -154,6 +154,9 @@ class Executor:
         *,
         priority: Optional[float] = None,
         replay: bool = True,
+        retry: Optional[RetryPolicy] = None,
+        timeout: Optional[float] = None,
+        idempotent: bool = False,
     ) -> Future:
         """Submit ``work`` and return a :class:`Future` for its completion.
 
@@ -175,7 +178,22 @@ class Executor:
         per-task countdown walk. Any structural change, divergent
         condition branch or cancellation falls back to live dispatch
         transparently; pass ``replay=False`` to force live dispatch.
+
+        ``retry`` / ``timeout`` / ``idempotent`` (DESIGN.md §14, callable
+        submissions only) wrap the callable in a task carrying that fault
+        policy; graphs and pre-built tasks declare theirs per task at
+        construction (``TaskGraph.add(..., retry=..., timeout=...)``).
         """
+        if retry is not None or timeout is not None or idempotent:
+            if not callable(work) or isinstance(work, (Task, TaskGraph)):
+                raise ValueError(
+                    "retry=/timeout=/idempotent= apply to callable submissions; "
+                    "graphs and tasks declare fault policy per task "
+                    "(TaskGraph.add / Task constructor)"
+                )
+            task = Task(work, retry=retry, timeout=timeout, idempotent=idempotent)
+            task.propagate_errors = False
+            return self.run(task, priority=priority)
         if isinstance(work, TaskGraph):
             if priority is not None:
                 self._apply_priority(work.tasks, priority)
@@ -227,8 +245,21 @@ class Executor:
             if not t._explicit_pr:
                 t.priority = priority
 
-    def submit(self, fn: Callable[[], Any], *, priority: float = 0.0) -> Future:
-        """Fire-and-collect a callable (alias of ``submit_future``)."""
+    def submit(
+        self,
+        fn: Callable[[], Any],
+        *,
+        priority: float = 0.0,
+        retry: Optional[RetryPolicy] = None,
+        timeout: Optional[float] = None,
+        idempotent: bool = False,
+    ) -> Future:
+        """Fire-and-collect a callable (alias of ``submit_future``); the
+        §14 fault-policy keywords match :meth:`run`."""
+        if retry is not None or timeout is not None or idempotent:
+            return self.run(
+                fn, priority=priority, retry=retry, timeout=timeout, idempotent=idempotent
+            )
         return self.pool.submit_future(fn, priority=priority)
 
     def run_until(

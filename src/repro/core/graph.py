@@ -33,7 +33,7 @@ from __future__ import annotations
 from collections import deque as _pydeque
 from typing import Any, Callable, Iterator, Optional, Sequence
 
-from .task import CancelledError, Task
+from .task import CancelledError, RetryPolicy, Task
 
 __all__ = ["TaskGraph", "Module", "Runtime", "CycleError"]
 
@@ -115,13 +115,18 @@ class Runtime:
         kind: str = "static",
         takes_runtime: bool = False,
         affinity: str = "any",
+        retry: Optional[RetryPolicy] = None,
+        timeout: Optional[float] = None,
+        idempotent: bool = False,
     ) -> Task:
         """Spawn one subflow task. Nested ``takes_runtime`` spawners are
         supported, as is ``kind="condition"`` with two constraints: acyclic
         branching only (subflow tasks are not re-armed, so weak *cycles*
         must live in the outer graph), and branches must re-converge before
         the subflow's sinks (the hidden join waits on every sink — a sink
-        reachable only through an untaken branch would never release it)."""
+        reachable only through an untaken branch would never release it).
+        ``retry``/``timeout``/``idempotent`` attach §14 fault-tolerance
+        policy exactly as on :meth:`TaskGraph.add`."""
         t = self.sub.add(
             fn,
             name=name,
@@ -130,6 +135,9 @@ class Runtime:
             kind=kind,
             takes_runtime=takes_runtime,
             affinity=affinity,
+            retry=retry,
+            timeout=timeout,
+            idempotent=idempotent,
         )
         t._explicit_pr = self.task._explicit_pr if priority is None else True
         return t
@@ -261,6 +269,9 @@ class TaskGraph:
         kind: str = "static",
         takes_runtime: bool = False,
         affinity: str = "any",
+        retry: Optional[RetryPolicy] = None,
+        timeout: Optional[float] = None,
+        idempotent: bool = False,
     ) -> Task:
         """Create a :class:`Task` owned by this graph and return it.
 
@@ -270,9 +281,12 @@ class TaskGraph:
         ``kind="condition"`` makes a §10 branching task, ``takes_runtime``
         hands the body a :class:`Runtime` for subflow spawning, and
         ``affinity`` constrains §11 process-backend placement
-        (``"any"`` / ``"local"`` / ``"remote"``). An omitted ``name``
-        defaults to ``t<index>``; an omitted ``priority`` is inheritable
-        (see ``Task.priority``). Raises ``ValueError`` for an unknown
+        (``"any"`` / ``"local"`` / ``"remote"``). ``retry`` attaches a §14
+        :class:`~repro.core.RetryPolicy`, ``timeout`` a per-attempt
+        deadline, and ``idempotent`` marks the body safe to re-run after a
+        started-but-lost §11 attempt. An omitted ``name`` defaults to
+        ``t<index>``; an omitted ``priority`` is inheritable (see
+        ``Task.priority``). Raises ``ValueError`` for an unknown
         ``kind``/``affinity`` or a condition task that takes a runtime.
         """
         t = Task(
@@ -283,6 +297,9 @@ class TaskGraph:
             kind=kind,
             takes_runtime=takes_runtime,
             affinity=affinity,
+            retry=retry,
+            timeout=timeout,
+            idempotent=idempotent,
         )
         t.graph = self
         self.tasks.append(t)

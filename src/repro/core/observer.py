@@ -9,6 +9,12 @@ and calls every attached observer at each of them —
                                     skipped as cancelled/poisoned)
     on_steal(task, thief, victim)   `thief` took the task from `victim`'s
                                     deque (inbox drains are not steals)
+    on_retry(task, attempt, worker) a §14 retry: the failed attempt was
+                                    re-armed and re-scheduled (`attempt`
+                                    counts failed attempts so far, 1-based)
+    on_timeout(task, worker)        an attempt exceeded its `timeout=`
+                                    deadline (cooperative checkpoint raise,
+                                    or a §11 hard worker kill)
 
 Hooks run on the pool's worker threads (``on_submit`` on the submitting
 thread), so implementations must be cheap and thread-safe; the pool
@@ -63,6 +69,12 @@ class PoolObserver:
     def on_steal(self, task: Task, thief: int, victim: int) -> None:  # noqa: B027
         pass
 
+    def on_retry(self, task: Task, attempt: int, worker: int) -> None:  # noqa: B027
+        pass
+
+    def on_timeout(self, task: Task, worker: int) -> None:  # noqa: B027
+        pass
+
 
 class StatsObserver(PoolObserver):
     """Aggregate execution statistics.
@@ -90,6 +102,8 @@ class StatsObserver(PoolObserver):
         self.finished = 0
         self.stolen = 0
         self.errors = 0
+        self.retried = 0
+        self.timed_out = 0
         self.by_name: dict[str, list] = {}  # name -> [count, total_seconds]
 
     def on_submit(self, task: Task) -> None:
@@ -119,6 +133,14 @@ class StatsObserver(PoolObserver):
         with self._lock:
             self.stolen += 1
 
+    def on_retry(self, task: Task, attempt: int, worker: int) -> None:
+        with self._lock:
+            self.retried += 1
+
+    def on_timeout(self, task: Task, worker: int) -> None:
+        with self._lock:
+            self.timed_out += 1
+
     def summary(self) -> dict[str, Any]:
         with self._lock:
             return {
@@ -127,6 +149,8 @@ class StatsObserver(PoolObserver):
                 "finished": self.finished,
                 "stolen": self.stolen,
                 "errors": self.errors,
+                "retried": self.retried,
+                "timed_out": self.timed_out,
                 "by_name": {
                     k: {"count": c, "total_s": s, "mean_us": (s / c * 1e6 if c else 0.0)}
                     for k, (c, s) in sorted(self.by_name.items())
@@ -193,6 +217,39 @@ class ChromeTraceObserver(PoolObserver):
                     "pid": self.pid,
                     "tid": thief,
                     "args": {"victim": victim},
+                }
+            )
+
+    def on_retry(self, task: Task, attempt: int, worker: int) -> None:
+        # the failed attempt produced no finish slice (the task is not done
+        # yet) — the instant event marks it on the worker's lane instead
+        now = time.perf_counter()
+        with self._lock:
+            t0 = self._starts.pop(id(task), now)
+            self._events.append(
+                {
+                    "name": f"retry:{task.name or 'task'}",
+                    "cat": "fault",
+                    "ph": "X",
+                    "ts": self._us(t0),
+                    "dur": max(0.0, (now - t0) * 1e6),
+                    "pid": self.pid,
+                    "tid": worker,
+                    "args": {"attempt": attempt},
+                }
+            )
+
+    def on_timeout(self, task: Task, worker: int) -> None:
+        with self._lock:
+            self._events.append(
+                {
+                    "name": f"timeout:{task.name or 'task'}",
+                    "cat": "fault",
+                    "ph": "i",
+                    "s": "t",
+                    "ts": self._us(time.perf_counter()),
+                    "pid": self.pid,
+                    "tid": worker,
                 }
             )
 

@@ -55,10 +55,21 @@ spawner's successors, and a per-run :class:`RunContext` counts in-flight
 tasks so graphs whose branches never run (or that loop) still terminate
 their futures deterministically.
 
+**Fault tolerance (DESIGN.md §14).** A task carrying a
+:class:`~repro.core.RetryPolicy` whose body fails with a matching exception
+is re-armed and re-scheduled through the same §9 fast path — backoff is a
+pool-timed deferred requeue on a lazy timer thread, so no worker ever
+sleeps it off. Per-task ``timeout=`` deadlines are cooperative here
+(bodies observe them at :func:`checkpoint`); ``ProcessPool`` escalates to
+a hard worker kill. Retried-then-succeeded passes never poison the pool
+(``_first_error``) or diverge a §12 replay plan — only the *final* failure
+surfaces, carrying earlier attempts on its ``__context__`` chain.
+
 Differences from the C++ original are documented in DESIGN.md §2.1.
 """
 from __future__ import annotations
 
+import heapq
 import os
 import threading
 import time
@@ -67,12 +78,104 @@ from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 from .deque import EMPTY, ChaseLevDeque, FastDeque, PriorityDeque
 from .graph import Runtime, select_branch, splice_subflow
-from .task import CancelledError, Task, iter_graph
+from .task import CancelledError, Task, TaskTimeoutError, iter_graph
 
-__all__ = ["ThreadPool", "Future", "RunContext"]
+__all__ = ["ThreadPool", "Future", "RunContext", "checkpoint"]
 
 _SPIN_SWEEPS = 2  # extra full sweeps (with GIL yields) before parking
 _PARK_BACKSTOP_S = 0.5  # safety net only; targeted wakeups are the fast path
+
+# Cooperative checkpoint state: the executing worker publishes its current
+# task (and the attempt's absolute deadline) here around every body call,
+# on every backend. Two plain stores — no tuple allocation on the hot path.
+_current = threading.local()
+
+
+def checkpoint() -> None:
+    """Cooperative cancellation / timeout checkpoint (DESIGN.md §14).
+
+    Long-running task bodies call this periodically. It raises
+    :class:`~repro.core.CancelledError` if the task was cancelled after it
+    started, and :class:`~repro.core.TaskTimeoutError` once the attempt's
+    ``timeout=`` deadline has passed. Outside a task body (or inside a
+    ``ProcessPool`` worker process, where the parent-side deadline is not
+    visible) it is a no-op — bodies stay portable across backends.
+    """
+    task = getattr(_current, "task", None)
+    if task is None:
+        return
+    if task._cancel_req:
+        raise CancelledError(f"task {task.name!r} cancelled at checkpoint")
+    deadline = _current.deadline
+    if deadline is not None and time.monotonic() >= deadline:
+        task._timed_out = True
+        raise TaskTimeoutError(
+            f"task {task.name!r} exceeded its {task.timeout}s timeout"
+        )
+
+
+class _Retry(BaseException):
+    """Internal §14 signal: a §12 segment member failed retriably; the
+    segment has re-armed itself (``_resume_at`` set) and must be requeued
+    after ``delay`` seconds. ``BaseException`` so body-level ``except
+    Exception`` handlers can never swallow it."""
+
+    __slots__ = ("delay",)
+
+    def __init__(self, delay: float) -> None:
+        self.delay = delay
+
+
+class _Timer:
+    """Lazy pool timer: one daemon thread draining a monotonic-deadline heap.
+
+    Serves both §14 uses — deferred retry requeues (backoff without a
+    sleeping worker) and hard-timeout watchdog callbacks (``ProcessPool``).
+    Created on first use, so pools that never retry or time out pay
+    nothing. Entries are ``(when, seq, fn)``; cancellation is lazy — an
+    expired callback re-checks whether its target is still relevant.
+    """
+
+    def __init__(self, name: str) -> None:
+        self._cv = threading.Condition()
+        self._heap: list = []
+        self._seq = 0
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._run, name=f"{name}-timer", daemon=True
+        )
+        self._thread.start()
+
+    def add(self, when: float, fn: Callable[[], None]) -> None:
+        with self._cv:
+            self._seq += 1
+            heapq.heappush(self._heap, (when, self._seq, fn))
+            self._cv.notify()
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify()
+        self._thread.join()
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stop:
+                    if self._heap:
+                        delay = self._heap[0][0] - time.monotonic()
+                        if delay <= 0:
+                            break
+                        self._cv.wait(delay)
+                    else:
+                        self._cv.wait()
+                if self._stop:
+                    return
+                _, _, fn = heapq.heappop(self._heap)
+            try:
+                fn()
+            except BaseException:  # noqa: BLE001 - timer callbacks never die
+                pass
 
 
 class RunContext:
@@ -353,6 +456,12 @@ class ThreadPool:
         self._steals = [0] * (n + 1)
         self._parked_ct = [0] * (n + 1)
         self._wakeups = [0] * (n + 1)
+        # -- §14 fault tolerance: retry/timeout cells plus the lazy timer
+        # (deferred requeues + watchdog); ProcessPool binds `_hard_timeout`.
+        self._retries = [0] * (n + 1)
+        self._timeouts = [0] * (n + 1)
+        self._timer: Optional[_Timer] = None
+        self._name = name
         self._observers: list[Any] = list(observers)
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), name=f"{name}-{i}", daemon=True)
@@ -571,6 +680,9 @@ class ThreadPool:
             ev.set()
         for t in self._threads:
             t.join()
+        timer = self._timer
+        if timer is not None:
+            timer.close()
 
     def stats(self) -> dict[str, Any]:
         """Execution statistics, summed over the per-worker counters.
@@ -584,6 +696,9 @@ class ThreadPool:
         every worker deque (DESIGN.md §13): on a prioritized workload it
         shows where waiting work sits — e.g. near-deadline prefills piling
         up in their promoted band while decode drains band 1.0 first.
+        §14 adds ``retries`` (re-scheduled failed attempts, including §12
+        segment members) and ``timeouts`` (attempts that exceeded their
+        ``timeout=`` deadline).
         """
         depths: dict[float, int] = {}
         for dq in (self._inbox, *self._deques):
@@ -594,6 +709,8 @@ class ThreadPool:
             "steals": sum(self._steals),
             "parked": sum(self._parked_ct),
             "wakeups": sum(self._wakeups),
+            "retries": sum(self._retries),
+            "timeouts": sum(self._timeouts),
             "band_depths": dict(sorted(depths.items(), reverse=True)),
         }
 
@@ -608,6 +725,97 @@ class ThreadPool:
             self.close()
         except Exception:
             pass
+
+    # -- fault tolerance (DESIGN.md §14) ----------------------------------------
+
+    # Hard-timeout escalation hook: None on thread/serial backends (the
+    # deadline is cooperative — `checkpoint()`); ProcessPool overrides with
+    # a kill-the-stuck-worker callback registered on the pool timer.
+    _hard_timeout: Optional[Callable[..., None]] = None
+
+    def _timer_get(self) -> _Timer:
+        """The pool's lazy timer thread (created on first §14 use)."""
+        timer = self._timer
+        if timer is None:
+            with self._ext_lock:
+                timer = self._timer
+                if timer is None:
+                    timer = self._timer = _Timer(self._name)
+        return timer
+
+    def _retry_policy_for(self, task: Task, exc: BaseException) -> Any:
+        """The policy governing this failure, or None (no retry).
+
+        Base pools consult only the task's own :class:`RetryPolicy`;
+        ``ProcessPool`` also supplies an implicit single retry for
+        transport-level worker loss (DESIGN.md §11/§14).
+        """
+        pol = task.retry_policy
+        if pol is not None and pol.matches(exc):
+            return pol
+        return None
+
+    def _maybe_retry(self, task: Task, exc: BaseException, index: int) -> bool:
+        """Re-arm and re-schedule a retriable failed attempt.
+
+        Returns True when a retry was scheduled (the failure must not
+        surface). The retry instance is *claimed before* the failed
+        attempt's completion cell is bumped, so ``_outstanding()`` can
+        never transiently hit zero while a backoff is pending — waiters
+        stay blocked until the retried task truly completes.
+
+        At-most-once gate: an exception flagged ``started=True`` (the body
+        began executing and was lost — ``WorkerDiedError`` from a §11 hard
+        kill) is retried only for ``idempotent`` tasks.
+        """
+        pol = self._retry_policy_for(task, exc)
+        if pol is None:
+            return False
+        if getattr(exc, "started", False) and not task.idempotent:
+            return False
+        attempt = task._attempt + 1
+        if attempt >= pol.max_attempts:
+            return False
+        task._attempt = attempt
+        if exc.__context__ is None and task._last_exc is not None:
+            exc.__context__ = task._last_exc  # chain attempt N-1 behind N
+        task._last_exc = exc
+        # re-arm just this task: claim refilled, started cleared so a
+        # cancel() landing between attempts wins the refilled claim and
+        # the requeued dispatch skips the body.
+        task._claim[:] = (0,)
+        task._started = False
+        task._timed_out = False
+        task.exception = None
+        self._retries[index] += 1
+        if self._observers:
+            self._notify("on_retry", task.first if task._seg else task, attempt, index)
+        self._requeue(task, pol.delay(attempt), index)
+        return True
+
+    def _requeue(self, task: Task, delay: float, index: int) -> None:
+        """Schedule an already-claimed retry: now (own deque) or deferred
+        through the pool timer — no worker sleeps off the backoff."""
+        self._claimed[index] += 1
+        if delay <= 0:
+            if self._observers:
+                self._notify("on_submit", task.first if task._seg else task)
+            self._deques[index].push(task)
+            if self._parked:
+                self._wake_one(index)
+        else:
+            self._timer_get().add(
+                time.monotonic() + delay, lambda: self._requeue_now(task)
+            )
+
+    def _requeue_now(self, task: Task) -> None:
+        """Timer-thread side of a deferred requeue (claim already counted)."""
+        if self._observers:
+            self._notify("on_submit", task.first if task._seg else task)
+        with self._ext_lock:
+            self._inbox.push_external(task)
+            if self._parked:
+                self._wake_one(-1)
 
     # -- scheduling internals ---------------------------------------------------
 
@@ -755,6 +963,11 @@ class ThreadPool:
                 self._notify("on_start", task, index)
             slow = task._slow
             rt: Optional[Runtime] = None
+            # §14 cooperative checkpoint state: two plain stores per task
+            _current.task = task
+            _current.deadline = (
+                None if task.timeout is None else time.monotonic() + task.timeout
+            )
             try:
                 if self._first_error is not None and task.propagate_errors:
                     # fail-fast: skip bodies once the graph is poisoned, but
@@ -772,7 +985,31 @@ class ThreadPool:
                     self._offload(task, index)
                 else:
                     task.run()
+            except _Retry as sig:
+                # §14 via §12: a segment member failed retriably; the
+                # segment re-armed itself (resume point saved) — requeue
+                # it whole and end this dispatch without surfacing.
+                self._requeue(task, sig.delay, index)
+                self._executed[index] += 1
+                self._completed[index] += 1
+                task = None
+                continue
             except BaseException as exc:  # noqa: BLE001 - recorded + re-raised in wait
+                if isinstance(exc, TaskTimeoutError):
+                    self._timeouts[index] += 1
+                    if self._observers:
+                        self._notify("on_timeout", task, index)
+                if self._maybe_retry(task, exc, index):
+                    self._executed[index] += 1
+                    self._completed[index] += 1
+                    task = None
+                    continue
+                if (
+                    task._last_exc is not None
+                    and exc.__context__ is None
+                    and exc is not task._last_exc
+                ):  # exhausted retries surface the whole attempt chain
+                    exc.__context__ = task._last_exc
                 task.exception = exc
                 if task.propagate_errors:
                     with self._err_lock:

@@ -67,10 +67,11 @@ Design rules (the ones that make this safe, in order of importance):
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Optional
 
-from .pool import ThreadPool
-from .task import CancelledError, Task, iter_graph
+from .pool import ThreadPool, _current, _Retry
+from .task import CancelledError, Task, TaskTimeoutError, iter_graph
 
 __all__ = ["ReplayPlan", "compile_plan", "replay_eligible"]
 
@@ -86,7 +87,7 @@ class _SegTask(Task):
     traces and counters name real tasks, never plan internals.
     """
 
-    __slots__ = ("steps", "first", "_pool", "_rearm_members")
+    __slots__ = ("steps", "first", "_pool", "_rearm_members", "_resume_at")
 
     _seg = True
 
@@ -111,6 +112,9 @@ class _SegTask(Task):
         self.auto_rearm = loop_mode
         if loop_mode:
             self._slow = True
+        # §14: after a retriable member failure the segment requeues itself
+        # and resumes at the failed member — earlier members never re-run.
+        self._resume_at = 0
 
     def run(self, runtime: Any = None, invoke: Any = None) -> None:
         if runtime is not None:
@@ -146,9 +150,18 @@ class _SegTask(Task):
         observers = pool._observers
         rearm = self._rearm_members
         steps = self.steps
-        for t in steps:
+        start = self._resume_at
+        if start:  # resuming a §14 retried pass mid-segment
+            self._resume_at = 0
+            steps_iter = steps[start:]
+        else:
+            steps_iter = steps
+        for t in steps_iter:
             if observers:
                 pool._notify("on_start", t, index)
+            if t.timeout is not None:  # §14 member deadline (rare branch)
+                _current.task = t
+                _current.deadline = time.monotonic() + t.timeout
             try:
                 if pool._first_error is not None and t.propagate_errors:
                     # fail-fast parity with _execute: skip bodies once the
@@ -160,6 +173,43 @@ class _SegTask(Task):
                 else:
                     t.run()
             except BaseException as exc:  # noqa: BLE001 - recorded, pool-funneled
+                if isinstance(exc, TaskTimeoutError):
+                    pool._timeouts[index] += 1
+                    if observers:
+                        pool._notify("on_timeout", t, index)
+                pol = pool._retry_policy_for(t, exc)
+                if (
+                    pol is not None
+                    and not (getattr(exc, "started", False) and not t.idempotent)
+                    and t._attempt + 1 < pol.max_attempts
+                ):
+                    # §14 member retry: re-arm the member and the segment,
+                    # record the resume point, and signal _execute to
+                    # requeue this node whole. Members before `t` stay
+                    # completed; a retried-to-success pass leaves no trace
+                    # (the plan stays valid, no divergence).
+                    t._attempt += 1
+                    if exc.__context__ is None and t._last_exc is not None:
+                        exc.__context__ = t._last_exc
+                    t._last_exc = exc
+                    t._claim[:] = _CLAIM
+                    t._started = False
+                    t._timed_out = False
+                    t.exception = None
+                    self._resume_at = steps.index(t)
+                    self._claim[:] = _CLAIM
+                    self._started = False
+                    pool._retries[index] += 1
+                    if observers:
+                        pool._notify("on_retry", t, t._attempt, index)
+                    pool._executed[index] += steps.index(t) - start
+                    raise _Retry(pol.delay(t._attempt)) from None
+                if (
+                    t._last_exc is not None
+                    and exc.__context__ is None
+                    and exc is not t._last_exc
+                ):  # exhausted retries surface the whole attempt chain
+                    exc.__context__ = t._last_exc
                 t.exception = exc
                 if t.propagate_errors:
                     with pool._err_lock:
@@ -176,7 +226,7 @@ class _SegTask(Task):
             if rearm:
                 t.rearm()
         # the pool's _execute adds 1 for this node; members make up the rest
-        pool._executed[index] += len(steps) - 1
+        pool._executed[index] += len(steps_iter) - 1
         if self.kind == "condition":
             # select_branch reads the dispatched task: surface the tail's
             # integer verdict (None on a failed/cancelled pass — no branch)
@@ -258,11 +308,15 @@ class ReplayPlan:
             t._done = False
             t._started = False
             t._cancelled = False
+            if t._attempt:  # §14: fresh retry budget per pass (rare branch)
+                t._attempt = 0
+                t._last_exc = None
         for m, proto in self._arm:
             m._pending[:] = proto
             m._claim[:] = _CLAIM
             m._done = False
             m._started = False
+            m._resume_at = 0  # §14 invariant: consumed by pass end; defensive
 
     def schedule(self, pool: "ThreadPool", ctx: Any = None) -> None:
         """Dispatch the pre-bound roots (counted runs bind ``ctx`` to the

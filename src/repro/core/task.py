@@ -73,12 +73,83 @@ from __future__ import annotations
 
 from typing import Any, Callable, Iterable, Optional
 
-__all__ = ["Task", "CancelledError"]
+__all__ = ["Task", "CancelledError", "RetryPolicy", "TaskTimeoutError"]
 
 
 class CancelledError(RuntimeError):
     """Raised for tasks skipped because a predecessor failed or the task
     (or its future) was cancelled before it started."""
+
+
+class TaskTimeoutError(TimeoutError):
+    """A task body exceeded its ``timeout=`` budget (DESIGN.md §14).
+
+    On the thread/serial backends the deadline is *cooperative*: the body
+    observes it at :func:`~repro.core.pool.checkpoint` calls. On
+    ``ProcessPool`` the watchdog hard-kills the worker process hosting the
+    overdue body and the scheduler surfaces this error in its place.
+    """
+
+
+class RetryPolicy:
+    """Declarative retry policy for a task body (DESIGN.md §14).
+
+    A failed attempt whose exception matches ``retry_on`` is re-armed and
+    re-scheduled through the §9 fast path, after a deterministic backoff
+    delay of ``backoff * factor**(attempt-1)`` seconds (capped by
+    ``max_backoff``). The delay is implemented as a pool-timed deferred
+    requeue — no worker ever sleeps it off. When ``max_attempts`` is
+    exhausted the final exception surfaces with the previous attempt's
+    exception attached as its ``__context__`` chain.
+
+    ``retry_on`` may be an exception type or a tuple of types; cancellation
+    (:class:`CancelledError`) is never retried regardless.
+
+        >>> from repro.core import RetryPolicy
+        >>> p = RetryPolicy(max_attempts=3, backoff=0.1, factor=2.0)
+        >>> [p.delay(a) for a in (1, 2)]
+        [0.1, 0.2]
+    """
+
+    __slots__ = ("max_attempts", "backoff", "factor", "max_backoff", "retry_on")
+
+    def __init__(
+        self,
+        max_attempts: int = 3,
+        backoff: float = 0.0,
+        *,
+        factor: float = 2.0,
+        max_backoff: Optional[float] = None,
+        retry_on: Any = Exception,
+    ) -> None:
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if backoff < 0:
+            raise ValueError("backoff must be >= 0 seconds")
+        self.max_attempts = max_attempts
+        self.backoff = backoff
+        self.factor = factor
+        self.max_backoff = max_backoff
+        self.retry_on = retry_on
+
+    def matches(self, exc: BaseException) -> bool:
+        """Whether ``exc`` is retriable under this policy."""
+        if isinstance(exc, CancelledError):
+            return False
+        return isinstance(exc, self.retry_on)
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before re-running after failed attempt ``attempt`` (1-based)."""
+        d = self.backoff * (self.factor ** (attempt - 1))
+        if self.max_backoff is not None and d > self.max_backoff:
+            return self.max_backoff
+        return d
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"RetryPolicy(max_attempts={self.max_attempts}, "
+            f"backoff={self.backoff}, factor={self.factor})"
+        )
 
 
 class Task:
@@ -131,6 +202,22 @@ class Task:
         Thread and serial backends ignore the field entirely. Control-flow
         bodies — conditions, ``takes_runtime`` spawners — always run
         in-parent regardless, because they drive the scheduler itself.
+    retry_policy:
+        Optional :class:`RetryPolicy` (also the ``retry=`` constructor
+        keyword): a matching body failure re-arms the task and re-schedules
+        it after a deterministic backoff instead of surfacing (DESIGN.md
+        §14). Exhausted retries surface the final exception with earlier
+        attempts on its ``__context__`` chain.
+    timeout:
+        Optional per-attempt deadline in seconds. Cooperative on thread/
+        serial backends (the body must call
+        :func:`~repro.core.pool.checkpoint`); enforced by a hard worker
+        kill on ``ProcessPool``.
+    idempotent:
+        Declares the body safe to re-execute after it *started* and was
+        lost (worker death / hard timeout kill on ``ProcessPool``). Bodies
+        default to at-most-once: a started-but-lost non-idempotent body is
+        never retried, even under a matching :class:`RetryPolicy`.
 
     The paper's ``(a+b)*(c+d)`` graph, wired exactly as in §2.2::
 
@@ -186,6 +273,13 @@ class Task:
         "_started",
         "_cancelled",
         "exception",
+        "retry_policy",
+        "timeout",
+        "idempotent",
+        "_attempt",
+        "_last_exc",
+        "_timed_out",
+        "_cancel_req",
     )
 
     def __init__(
@@ -198,11 +292,16 @@ class Task:
         kind: str = "static",
         takes_runtime: bool = False,
         affinity: str = "any",
+        retry: Optional[RetryPolicy] = None,
+        timeout: Optional[float] = None,
+        idempotent: bool = False,
     ) -> None:
         if kind not in ("static", "condition"):
             raise ValueError(f"unknown task kind {kind!r}")
         if affinity not in ("any", "local", "remote"):
             raise ValueError(f"unknown task affinity {affinity!r}")
+        if timeout is not None and timeout <= 0:
+            raise ValueError("timeout must be positive seconds")
         if kind == "condition" and takes_runtime:
             # the subflow splice would take over the weak successor list and
             # strongly decrement edges that hold no countdown tokens — every
@@ -247,6 +346,19 @@ class Task:
         self._started = False
         self._cancelled = False
         self.exception: Optional[BaseException] = None
+        # Fault tolerance (DESIGN.md §14): `retry_policy` governs re-arming
+        # after a matching body failure, `timeout` bounds one attempt,
+        # `idempotent` declares that a started-but-lost body (worker death
+        # mid-execution, ProcessPool) is safe to run again. `_attempt`
+        # counts completed failed attempts this arming; `_last_exc` chains
+        # them; `_timed_out` is the watchdog's hard-kill mark.
+        self.retry_policy = retry
+        self.timeout = timeout
+        self.idempotent = idempotent
+        self._attempt = 0
+        self._last_exc: Optional[BaseException] = None
+        self._timed_out = False
+        self._cancel_req = False
 
     @property
     def is_condition(self) -> bool:
@@ -367,6 +479,10 @@ class Task:
         self.exception = None
         self._spawned = None  # per-run record; a skipped spawner must not
         # surface a previous run's subflow to resolution or rendering
+        self._attempt = 0
+        self._last_exc = None
+        self._timed_out = False
+        self._cancel_req = False
 
     def rearm(self) -> None:
         """Re-arm for re-triggering *within* the same run (condition
@@ -384,6 +500,9 @@ class Task:
             self._claim[:] = (0,)
             self._started = False
         self._done = False
+        if self._attempt:  # fresh retry budget per loop pass (rare branch)
+            self._attempt = 0
+            self._last_exc = None
 
     def decrement(self) -> bool:
         """Atomically decrement the pending count; True when it reaches zero.
@@ -405,7 +524,10 @@ class Task:
         run); False if the task already started or finished. Dependency
         bookkeeping is unaffected either way — a cancelled task still
         completes (with :class:`CancelledError`) and releases successors.
+        A body already running can observe the request cooperatively via
+        :func:`~repro.core.pool.checkpoint` (DESIGN.md §14).
         """
+        self._cancel_req = True  # visible to checkpoint() even once started
         if self._started or self._done:
             return False
         try:

@@ -45,7 +45,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core import Executor, Future, Task, TaskGraph, ThreadPool
+from repro.core import Executor, Future, RetryPolicy, Task, TaskGraph, ThreadPool
 
 
 class _SkipSentinel:
@@ -94,7 +94,14 @@ class _Lane:
         "_current",
     )
 
-    def __init__(self, index: int, source: Any, put_fn: Callable[[dict], Any], executor: Executor) -> None:
+    def __init__(
+        self,
+        index: int,
+        source: Any,
+        put_fn: Callable[[dict], Any],
+        executor: Executor,
+        transform_retry: Optional[RetryPolicy] = None,
+    ) -> None:
         self._exec = executor
         self._source = source
         self._lk = threading.Lock()
@@ -120,6 +127,12 @@ class _Lane:
             lambda b: b if b is _SKIP else put_fn(b),
             name=f"transform:{index}",
         )
+        if transform_retry is not None:
+            # §14: the transform is the lane's only stateless body (pure
+            # batch -> batch), so it alone may carry a retry policy —
+            # produce mutates lane state and must stay exactly-once
+            self.transform.retry_policy = transform_retry
+            self.transform.idempotent = True
         self.deliver = self.transform.then(lambda b: b, name=f"deliver:{index}")
         self.deliver.affinity = "local"
         self.cond = g.add(self._more, kind="condition", name=f"more:{index}")
@@ -244,6 +257,7 @@ class Prefetcher:
         depth: int = 2,
         start_step: int = 0,
         put_fn: Optional[Callable[[dict], Any]] = None,  # e.g. sharded device_put
+        transform_retry: Optional[RetryPolicy] = None,  # §14: retry flaky transforms
     ) -> None:
         self.source = source
         if pool is not None and backend is not None:
@@ -275,7 +289,10 @@ class Prefetcher:
             )
         self.depth = max(1, depth)
         self.put_fn = put_fn or (lambda b: jax.tree.map(jax.numpy.asarray, b))
-        self._lanes = [_Lane(i, source, self.put_fn, self._exec) for i in range(self.depth)]
+        self._lanes = [
+            _Lane(i, source, self.put_fn, self._exec, transform_retry)
+            for i in range(self.depth)
+        ]
         self._inflight: dict[int, Future] = {}
         self._next_submit = start_step
         self._next_read = start_step

@@ -21,13 +21,21 @@ the body cannot ship. Remote bodies see a snapshot of their closures —
 mutations do not travel back; results, exceptions and dataflow edge
 values do (large arrays via the shared-memory arena).
 
-Fault model: a worker that dies mid-job (``os._exit``, OOM, segfault)
-fails **that task** with :class:`WorkerDiedError` — the dispatcher thread
-observes the broken pipe, respawns a fresh worker, and the failure takes
-the normal §8 route (dataflow adoption / future delivery / ``wait_idle``
-raise). The pool never hangs on a dead worker and never loses capacity.
-Started bodies are at-most-once: a job whose worker died is *not* retried
-(its side effects may have happened).
+Fault model (DESIGN.md §14): a worker that dies fails **that task** with
+:class:`WorkerDiedError` — the dispatcher thread observes the broken
+pipe, respawns a fresh worker, and the failure takes the normal §8 route
+(dataflow adoption / future delivery / ``wait_idle`` raise). The pool
+never hangs on a dead worker and never loses capacity. The error's
+``started`` flag records *when* the worker died: ``False`` means the job
+never left the parent (send hit a closed pipe — always safe to retry, and
+the pool's implicit transport-loss :class:`~repro.core.RetryPolicy`
+resubmits it once through the normal §14 machinery), ``True`` means the
+body may have partially run. Started bodies are at-most-once by default —
+retried only for tasks declared ``idempotent=True`` (and then only under
+a matching policy, implicit or task-supplied). Tasks with ``timeout=``
+get a hard watchdog: a timer kills the stuck worker process, the
+dispatcher's blocked ``recv`` sees EOF, and the task fails with
+:class:`~repro.core.TaskTimeoutError` instead.
 
 Replay (DESIGN.md §12) composes through the two §11 seams rather than
 around them: a captured :class:`~repro.core.ReplayPlan` re-arm calls
@@ -42,10 +50,11 @@ from __future__ import annotations
 import multiprocessing as mp
 import os
 import threading
+import time
 from typing import Any, Optional, Sequence
 
 from repro.core.pool import ThreadPool
-from repro.core.task import Task
+from repro.core.task import RetryPolicy, Task, TaskTimeoutError
 
 from .shm_arena import DEFAULT_THRESHOLD, ShmArena
 from .wire import (
@@ -62,11 +71,25 @@ __all__ = ["ProcessPool", "WorkerDiedError"]
 
 
 class WorkerDiedError(RuntimeError):
-    """The worker process executing a task body died before replying.
+    """The worker process assigned a task body died before replying.
 
-    The task fails (it is not retried — its body may have partially run);
-    the pool respawns the worker and keeps serving.
+    ``started`` gates the §14 retry decision: ``False`` means the job never
+    reached the worker (the send hit a closed pipe) so a retry cannot
+    double-execute anything; ``True`` means the body may have partially run
+    — the pool retries it only for ``idempotent=True`` tasks. Either way
+    the worker is respawned and the pool keeps serving.
     """
+
+    def __init__(self, message: str, *, started: bool = False) -> None:
+        super().__init__(message)
+        self.started = started
+
+
+# Transport loss is the pool's fault, not the body's: one implicit retry
+# (DESIGN.md §14) replaces the old hardcoded "retry the send once" path,
+# so send failures flow through the same observable machinery (on_retry,
+# stats()["retries"]) as user-declared policies.
+_TRANSPORT_RETRY = RetryPolicy(max_attempts=2, backoff=0.0, retry_on=WorkerDiedError)
 
 
 class _WireError:
@@ -144,6 +167,8 @@ class ProcessPool(ThreadPool):
         self._job_seq = [0] * n  # per-worker job ids (one in flight each)
         self._remote_jobs = [0] * n
         self._restarts = [0] * n
+        self._worker_kills = [0] * n  # watchdog SIGKILLs (§14 hard timeout)
+        self._current_remote: list[Any] = [None] * n  # in-flight task per slot
         self._proc_lock = threading.Lock()  # serializes respawn bookkeeping
         # workers first (before any parent thread exists — fork safety),
         # then the scheduler, then the dispatch hooks
@@ -219,32 +244,50 @@ class ProcessPool(ThreadPool):
                 ) from exc
             return fn(*args)
         refs = shm_refs(args_wire)
+        watched = task.timeout is not None
+        if watched:
+            # arm the §14 watchdog: remote bodies cannot reach the parent's
+            # cooperative checkpoint, so the deadline escalates to a kill
+            task._timed_out = False  # a prior kill may have raced the reply
+            self._current_remote[index] = task
+            self._timer_get().add(
+                time.monotonic() + task.timeout,
+                lambda a=task._attempt: self._hard_timeout(task, index, a),
+            )
         try:
             conn = self._conns[index]
             try:
                 conn.send((job_id, fn_wire, args_wire))
             except (BrokenPipeError, OSError):
-                # worker died while idle: the job never left, safe to retry
+                # worker died while idle: the job never left the parent —
+                # respawn, then let the implicit transport-loss RetryPolicy
+                # resubmit through the normal §14 scheduler path
                 self._respawn(index)
-                conn = self._conns[index]
-                try:
-                    conn.send((job_id, fn_wire, args_wire))
-                except (BrokenPipeError, OSError):
-                    # crash-looping (fork failure, memory pressure): keep
-                    # the documented fault model — WorkerDiedError, always
-                    self._respawn(index)
-                    raise WorkerDiedError(
-                        f"worker process {index} died twice before accepting a job"
-                    ) from None
+                raise WorkerDiedError(
+                    f"worker process {index} died before accepting a job",
+                    started=False,
+                ) from None
             try:
                 reply = conn.recv()
             except (EOFError, OSError):
-                # died mid-job: fail the task (at-most-once), restore capacity
+                # died mid-job: restore capacity, then fail the task —
+                # TaskTimeoutError when the watchdog pulled the trigger,
+                # WorkerDiedError(started=True) (at-most-once unless the
+                # task declared itself idempotent) otherwise
                 self._respawn(index)
+                if task._timed_out:
+                    raise TaskTimeoutError(
+                        f"task {task.name!r} exceeded its {task.timeout}s "
+                        f"timeout (worker process {index} killed)"
+                    ) from None
                 raise WorkerDiedError(
-                    f"worker process {index} died while executing a task body"
+                    f"worker process {index} died while executing a task body",
+                    started=True,
                 ) from None
         finally:
+            if watched:
+                with self._proc_lock:  # fences the watchdog's is-check
+                    self._current_remote[index] = None
             for ref in refs:
                 self._arena.recycle(ref)
         jid, ok, payload = reply
@@ -255,6 +298,35 @@ class ProcessPool(ThreadPool):
         if ok:
             return loads_value(payload, self._arena)
         raise loads_exception(payload)
+
+    # -- fault tolerance (DESIGN.md §14) -----------------------------------------
+
+    def _retry_policy_for(self, task: Task, exc: BaseException) -> Any:
+        """Task policy first (base rule); otherwise the implicit one-shot
+        transport-loss retry for :class:`WorkerDiedError`. The base pool's
+        at-most-once gate still blocks ``started=True`` losses for
+        non-idempotent tasks regardless of which policy matched."""
+        pol = super()._retry_policy_for(task, exc)
+        if pol is None and isinstance(exc, WorkerDiedError):
+            return _TRANSPORT_RETRY
+        return pol
+
+    def _hard_timeout(self, task: Task, index: int, attempt: int) -> None:
+        """Timer-thread callback: SIGKILL the worker still running ``task``.
+
+        The (task, attempt) pair guards against firing late — if the slot
+        has moved on, or this very task was already retried onto a new
+        attempt, the deadline belonged to an execution that no longer
+        exists and the callback is a no-op.
+        """
+        with self._proc_lock:
+            if self._current_remote[index] is not task or task._attempt != attempt:
+                return
+            task._timed_out = True
+            self._worker_kills[index] += 1
+            proc = self._procs[index]
+        if proc is not None:
+            proc.kill()  # dispatcher's recv sees EOF -> TaskTimeoutError
 
     # -- worker lifecycle --------------------------------------------------------
 
@@ -299,10 +371,12 @@ class ProcessPool(ThreadPool):
 
     def stats(self) -> dict[str, int]:
         """Base pool counters plus ``remote_jobs`` (bodies executed in
-        worker processes) and ``worker_restarts`` (respawns after death)."""
+        worker processes), ``worker_restarts`` (respawns after death) and
+        ``worker_kills`` (§14 watchdog SIGKILLs of timed-out workers)."""
         out = super().stats()
         out["remote_jobs"] = sum(self._remote_jobs)
         out["worker_restarts"] = sum(self._restarts)
+        out["worker_kills"] = sum(self._worker_kills)
         return out
 
     def close(self) -> None:

@@ -86,7 +86,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ChromeTraceObserver, Executor, Future, Task, TaskGraph, ThreadPool
+from repro.core import (
+    ChromeTraceObserver,
+    Executor,
+    Future,
+    RetryPolicy,
+    Task,
+    TaskGraph,
+    ThreadPool,
+)
 
 from .kv import PagedKVCache, SlotKVCache
 
@@ -116,6 +124,17 @@ class QueueFull(RuntimeError):
 
 class DeadlineExceeded(TimeoutError):
     """The request's deadline lapsed before its prefill started."""
+
+
+class _PrefillRetry(RetryPolicy):
+    """§14 policy for prefill tasks: transient failures retry (the compute
+    is pure — params + prompt in, logits out — so a retried prefill is
+    bit-identical), but a lapsed TTFT deadline is not transient and is
+    surfaced immediately. Each retry attempt re-checks the deadline, so
+    backoff can never extend a request past its TTFT budget."""
+
+    def matches(self, exc: BaseException) -> bool:
+        return not isinstance(exc, DeadlineExceeded) and super().matches(exc)
 
 
 @dataclass(frozen=True)
@@ -286,7 +305,9 @@ class _Pending:
     join queue). ``tokens`` is non-empty iff this is a preempted sequence
     awaiting resume. Heap key: (deadline or +inf, arrival order)."""
 
-    __slots__ = ("handle", "req", "deadline", "order", "tokens", "cancelled", "stage")
+    __slots__ = (
+        "handle", "req", "deadline", "order", "tokens", "cancelled", "stage", "joined",
+    )
 
     def __init__(self, handle: RequestHandle, req: GenRequest, deadline: Optional[float], order: int) -> None:
         self.handle = handle
@@ -296,6 +317,7 @@ class _Pending:
         self.tokens: list[int] = []
         self.cancelled = False
         self.stage = "waiting"  # waiting -> prefill -> join -> (active)
+        self.joined: Optional[tuple] = None  # (cache, first_token, pad)
 
     @property
     def key(self) -> tuple:
@@ -388,6 +410,9 @@ class ServeEngine:
         prefill_buckets: Optional[Sequence[int]] = None,
         prefill_lookahead: Optional[int] = None,
         trace_path: Optional[str] = None,
+        prefill_retries: int = 2,
+        breaker_threshold: int = 5,
+        breaker_cooldown: float = 1.0,
     ) -> None:
         cfg = model.cfg
         if cfg.is_encdec or cfg.family == "vlm":
@@ -411,6 +436,19 @@ class ServeEngine:
         self._buckets = tuple(sorted(prefill_buckets)) if prefill_buckets else None
         self._lookahead = max_slots if prefill_lookahead is None else prefill_lookahead
         self._max_waiting = max_waiting
+        # §14 graceful degradation: transient prefill failures retry under
+        # the TTFT deadline; sustained failure trips a circuit breaker that
+        # sheds load fast (QueueFull) instead of queueing doomed requests.
+        self._prefill_retry = (
+            _PrefillRetry(max_attempts=1 + prefill_retries, backoff=0.005, factor=2.0)
+            if prefill_retries > 0
+            else None
+        )
+        self._breaker_threshold = breaker_threshold
+        self._breaker_cooldown = breaker_cooldown
+        self._breaker_fails = 0  # consecutive exhausted prefill failures
+        self._breaker_until = 0.0  # monotonic time the breaker re-closes
+        self._breaker_trips = 0
         self._prefill_jit = jax.jit(model.prefill)
 
         def _step(p, tok, cache, idx):
@@ -530,6 +568,19 @@ class ServeEngine:
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
+            if self._breaker_until:
+                now = time.monotonic()
+                if now < self._breaker_until:
+                    self._rejected += 1
+                    raise QueueFull(
+                        f"circuit breaker open for another "
+                        f"{self._breaker_until - now:.2f}s "
+                        f"({self._breaker_threshold} consecutive prefill failures)"
+                    )
+                # half-open: admit trial requests, but one more exhausted
+                # failure re-trips immediately; a success fully closes it
+                self._breaker_until = 0.0
+                self._breaker_fails = self._breaker_threshold - 1
             if self._max_waiting is not None and self._nwaiting >= self._max_waiting:
                 self._rejected += 1
                 raise QueueFull(
@@ -646,6 +697,7 @@ class ServeEngine:
                 "preemptions": self._preemptions,
                 "rejected": self._rejected,
                 "deadline_misses": self._deadline_misses,
+                "breaker_trips": self._breaker_trips,
                 "waiting": self._nwaiting,
                 "tokens_out": self._tokens_out,
                 "ticks": self._ticks,
@@ -674,7 +726,7 @@ class ServeEngine:
                 self._nwaiting -= 1  # heap entry is skipped lazily at pump
             elif p.stage == "join":
                 self._joinq = deque(e for e in self._joinq if e[0] is not p)
-            # stage "prefill": _prefill_one sees p.cancelled on completion
+            # stage "prefill": _prefill_done sees p.cancelled on completion
             self._requests -= 1
             self._pump_locked()
             self._idle.notify_all()
@@ -712,51 +764,80 @@ class ServeEngine:
                 lambda p=p: self._prefill_one(p),
                 name=name,
                 priority=self._band(p, now),
+                retry=self._prefill_retry,
             )
             t.propagate_errors = False
+            t.on_done = lambda t, p=p: self._prefill_done(p, t)
             self.pool.submit(t)
 
     def _prefill_one(self, p: _Pending) -> None:
+        """Prefill task *body*: deadline fail-fast + the pure jit compute.
+
+        Exceptions raise out so the task's §14 retry policy sees them —
+        transient failures re-run (every attempt re-checks the deadline),
+        ``DeadlineExceeded`` never retries. All terminal bookkeeping lives
+        in :meth:`_prefill_done` (the task's ``on_done``), which fires
+        exactly once per task — never for a retried attempt.
+        """
         handle, req = p.handle, p.req
-        try:
-            if not p.tokens and p.deadline is not None and time.monotonic() >= p.deadline:
-                raise DeadlineExceeded(
-                    f"request {handle.rid} missed its {req.deadline:.3f}s deadline "
-                    "before prefill started"
-                )
-            if p.tokens:
-                # resume a preempted sequence: re-prefill prompt + generated
-                # prefix except the last token (it is the next decode feed).
-                # Exact length, no bucketing — the length is feed_index and
-                # is < max_len by the retire invariant.
-                seq_toks = np.concatenate(
-                    [req.prompt, np.asarray(p.tokens[:-1], np.int32)]
-                )
-                plen = pad = int(seq_toks.size)
-            else:
-                seq_toks = req.prompt
-                plen = int(req.prompt.size)
-                pad = self._bucket(plen)
-            toks = np.zeros((1, pad), np.int32)
-            toks[0, :plen] = seq_toks
-            logits, cache = self._prefill_jit(
-                self.params,
-                {"tokens": jnp.asarray(toks)},
-                last_pos=jnp.asarray(plen - 1, jnp.int32),
+        if not p.tokens and p.deadline is not None and time.monotonic() >= p.deadline:
+            raise DeadlineExceeded(
+                f"request {handle.rid} missed its {req.deadline:.3f}s deadline "
+                "before prefill started"
             )
-            first = int(jnp.argmax(logits[0, -1]))
-        except BaseException as exc:  # noqa: BLE001 - delivered via the handle
+        if p.tokens:
+            # resume a preempted sequence: re-prefill prompt + generated
+            # prefix except the last token (it is the next decode feed).
+            # Exact length, no bucketing — the length is feed_index and
+            # is < max_len by the retire invariant.
+            seq_toks = np.concatenate(
+                [req.prompt, np.asarray(p.tokens[:-1], np.int32)]
+            )
+            plen = pad = int(seq_toks.size)
+        else:
+            seq_toks = req.prompt
+            plen = int(req.prompt.size)
+            pad = self._bucket(plen)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :plen] = seq_toks
+        logits, cache = self._prefill_jit(
+            self.params,
+            {"tokens": jnp.asarray(toks)},
+            last_pos=jnp.asarray(plen - 1, jnp.int32),
+        )
+        p.joined = (cache, int(jnp.argmax(logits[0, -1])), pad)
+
+    def _prefill_done(self, p: _Pending, task: Task) -> None:
+        """Terminal prefill outcome (task ``on_done``): deliver failure or
+        hand the result to the join queue, and feed the circuit breaker."""
+        handle = p.handle
+        exc = task.exception
+        if exc is not None:
             with self._lock:
                 self._inflight -= 1
                 self._pending_by_rid.pop(handle.rid, None)
                 if isinstance(exc, DeadlineExceeded):
                     self._deadline_misses += 1
+                else:
+                    # sustained non-deadline failure (model/runtime fault,
+                    # retries exhausted): trip the breaker so submit()
+                    # sheds load fast instead of queueing doomed requests
+                    self._breaker_fails += 1
+                    if self._breaker_fails >= self._breaker_threshold:
+                        self._breaker_trips += 1
+                        self._breaker_until = (
+                            time.monotonic() + self._breaker_cooldown
+                        )
+                        self._breaker_fails = 0
                 self._pump_locked()  # freed admission capacity: re-admit waiters
                 self._idle.notify_all()
             if not handle.future.done():
                 handle.future.set_exception(exc)
             return
+        cache, first, pad = p.joined
+        p.joined = None
         with self._lock:
+            self._breaker_fails = 0  # a healthy prefill closes the streak
             self._inflight -= 1
             if p.cancelled:  # cancelled mid-prefill: drop the result
                 self._pump_locked()

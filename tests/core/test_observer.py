@@ -162,3 +162,72 @@ def test_chrome_trace_marks_errors_and_cancellations():
         assert pool.wait_idle(10)
     events = json.loads(tracer.to_json())["traceEvents"]
     assert any("error" in e.get("args", {}) for e in events)
+
+
+def test_stats_observer_counts_retries_and_timeouts():
+    """§14 observability: StatsObserver's summary carries the retried /
+    timed_out counters alongside the lifecycle counts."""
+    from repro.core import RetryPolicy, checkpoint
+
+    stats = StatsObserver()
+    attempts = [0]
+
+    def flaky():
+        attempts[0] += 1
+        if attempts[0] < 3:
+            raise ValueError("transient")
+        return attempts[0]
+
+    def wedged():
+        import time
+
+        while True:
+            time.sleep(0.005)
+            checkpoint()
+
+    with ThreadPool(2, observers=[stats]) as pool:
+        g = TaskGraph("faulty")
+        g.add(flaky, name="flaky", retry=RetryPolicy(max_attempts=3, backoff=0.0))
+        w = g.add(wedged, name="wedged", timeout=0.05)
+        w.propagate_errors = False
+        pool.run(g)
+    s = stats.summary()
+    assert s["retried"] == 2
+    assert s["timed_out"] == 1
+    assert s["finished"] >= 2  # both tasks still complete their lifecycle
+
+
+def test_chrome_trace_marks_retries_and_timeouts():
+    """§14 observability: retries show up as "retry:<name>" complete events
+    (cat "fault", args.attempt) and timeouts as "timeout:<name>" instants."""
+    from repro.core import RetryPolicy, checkpoint
+
+    tracer = ChromeTraceObserver()
+    attempts = [0]
+
+    def flaky():
+        attempts[0] += 1
+        if attempts[0] < 2:
+            raise ValueError("transient")
+
+    def wedged():
+        import time
+
+        while True:
+            time.sleep(0.005)
+            checkpoint()
+
+    with ThreadPool(2, observers=[tracer]) as pool:
+        g = TaskGraph("faulty")
+        g.add(flaky, name="flaky", retry=RetryPolicy(max_attempts=2, backoff=0.0))
+        w = g.add(wedged, name="wedged", timeout=0.05)
+        w.propagate_errors = False
+        pool.run(g)
+    events = json.loads(tracer.to_json())["traceEvents"]
+    retries = [e for e in events if e["name"] == "retry:flaky"]
+    assert len(retries) == 1
+    assert retries[0]["ph"] == "X" and retries[0]["cat"] == "fault"
+    assert retries[0]["args"]["attempt"] == 1
+    timeouts = [e for e in events if e["name"] == "timeout:wedged"]
+    assert len(timeouts) == 1
+    assert timeouts[0]["ph"] == "i" and timeouts[0]["cat"] == "fault"

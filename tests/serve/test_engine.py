@@ -481,3 +481,70 @@ def test_cancel_mid_prefill_never_joins():
         with pytest.raises(CancelledError):
             list(h)
         engine.close(drain=False)
+
+
+def test_prefill_circuit_breaker_trips_then_recovers():
+    """§14 degradation: sustained prefill failure trips a circuit breaker —
+    submissions during the cooldown fail fast with QueueFull instead of
+    queueing doomed work — and a post-cooldown success re-closes it."""
+    from repro.serve import QueueFull
+
+    cfg, model, params = _build("tinyllama-1.1b")
+    engine = ServeEngine(
+        model, params, max_slots=1, max_len=16,
+        prefill_retries=0, breaker_threshold=2, breaker_cooldown=0.5,
+    )
+    try:
+        real_prefill = engine._prefill_jit
+        engine._prefill_jit = lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("prefill is down")
+        )
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        for _ in range(2):  # two consecutive exhausted failures -> trip
+            h = engine.submit(prompt, 4)
+            with pytest.raises(RuntimeError, match="prefill is down"):
+                h.result(60)
+        with pytest.raises(QueueFull, match="circuit breaker open"):
+            engine.submit(prompt, 4)
+        s = engine.stats()
+        assert s["breaker_trips"] == 1
+        assert s["rejected"] >= 1
+        # heal the backend, wait out the cooldown: half-open admits again
+        engine._prefill_jit = real_prefill
+        time.sleep(0.6)
+        good = engine.submit(prompt, 4)
+        assert len(good.result(120)) == 4
+        assert engine.stats()["breaker_trips"] == 1  # did not re-trip
+    finally:
+        engine.close(drain=False)
+
+
+def test_transient_prefill_failures_leave_outputs_bit_identical():
+    """§14 acceptance: with fault injection upstream of prefill, retried
+    requests complete and their token streams are bit-identical to the
+    sequential no-fault reference."""
+    cfg, model, params = _build("tinyllama-1.1b")
+    MAX_LEN = 16
+    rng = np.random.default_rng(14)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32) for _ in range(3)]
+    refs = [sequential_decode(model, params, p, 4, MAX_LEN) for p in prompts]
+    with ServeEngine(model, params, max_slots=2, max_len=MAX_LEN) as engine:
+        real_prefill = engine._prefill_jit
+        calls = [0]
+        lock = threading.Lock()
+
+        def flaky_prefill(p, batch, last_pos):
+            with lock:
+                calls[0] += 1
+                fail = calls[0] <= 2  # first two attempts die in-flight
+            if fail:
+                raise RuntimeError("transient prefill fault")
+            return real_prefill(p, batch, last_pos=last_pos)
+
+        engine._prefill_jit = lambda p, batch, last_pos: flaky_prefill(p, batch, last_pos)
+        outs = engine.generate(prompts, 4, timeout=300)
+        s = engine.stats()
+    for ref, out in zip(refs, outs):
+        assert list(map(int, out)) == ref  # bit-identical despite retries
+    assert s["pool"]["retries"] >= 2  # the recovery went through §14 retry
+    assert s["breaker_trips"] == 0  # transient, never sustained
