@@ -341,7 +341,7 @@ def main() -> int:
             )
         if speedup_failures:
             print(
-                f"\nFAIL: §11 process backend below the "
+                "\nFAIL: §11 process backend below the "
                 f"{args.min_process_speedup:.2f}x speedup floor in: "
                 f"{', '.join(speedup_failures)}"
             )

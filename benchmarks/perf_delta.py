@@ -143,8 +143,6 @@ def main():
         t += "\n\nServe latency (overload Poisson trace):\n\n" + serve_table(srs)
     print(t)
     if args.update_experiments and EXP.exists():
-        import re
-
         text = EXP.read_text()
         begin, end = "<!-- perf-after:begin -->", "<!-- perf-after:end -->"
         pre, rest = text.split(begin)

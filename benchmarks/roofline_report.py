@@ -35,7 +35,8 @@ def gib(x) -> str:
 
 def dryrun_table(rows: list[dict]) -> str:
     out = [
-        "| arch | shape | mesh | ok | compile_s | args GiB/dev | temp GiB/dev | HLO GFLOP/dev | coll MiB/dev |",
+        "| arch | shape | mesh | ok | compile_s | args GiB/dev | temp GiB/dev "
+        "| HLO GFLOP/dev | coll MiB/dev |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
@@ -57,7 +58,8 @@ def dryrun_table(rows: list[dict]) -> str:
 
 def roofline_table(rows: list[dict]) -> str:
     out = [
-        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | bound_ms | MODEL_FLOPS/chip | useful_ratio |",
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant "
+        "| bound_ms | MODEL_FLOPS/chip | useful_ratio |",
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:

@@ -53,7 +53,10 @@ def section_pipeline_schedules() -> None:
     )
 
     print("\n# task-graph-derived pipeline schedules (1F1B from the paper's policy)")
-    print(f"{'S':>3}{'M':>5}{'1f1b_ticks':>12}{'gpipe_ticks':>12}{'1f1b_peak':>11}{'gpipe_peak':>11}{'bubble':>9}")
+    print(
+        f"{'S':>3}{'M':>5}{'1f1b_ticks':>12}{'gpipe_ticks':>12}"
+        f"{'1f1b_peak':>11}{'gpipe_peak':>11}{'bubble':>9}"
+    )
     for S, M in [(2, 8), (4, 16), (8, 32), (16, 64)]:
         t1 = pipeline_task_graph(S, M)
         r1 = pipeline_schedule(S, M)

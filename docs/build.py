@@ -1,6 +1,6 @@
 #!/usr/bin/env python
-"""Build the API reference for ``repro.core`` + ``repro.dist`` and verify
-cross-references.
+"""Build the API reference for ``repro.core`` + ``repro.dist`` +
+``repro.analysis`` and verify cross-references.
 
 Two generator paths, one contract:
 
@@ -32,7 +32,7 @@ import re
 import sys
 from typing import Any, Iterator
 
-PACKAGES = ("repro.core", "repro.dist")
+PACKAGES = ("repro.core", "repro.dist", "repro.analysis")
 
 _ROLE_RE = re.compile(r":(?:class|meth|func|attr|data|obj):`([^`]+)`")
 

@@ -49,7 +49,9 @@ def main() -> None:
 
     rng = np.random.default_rng(1)
     prompts = [
-        rng.integers(0, cfg.vocab_size, size=int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)))
+        rng.integers(
+            0, cfg.vocab_size, size=int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        )
         for _ in range(args.requests)
     ]
     budgets = [int(rng.integers(max(2, args.new // 2), args.new + 1)) for _ in range(args.requests)]

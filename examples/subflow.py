@@ -18,7 +18,9 @@ from repro.core import Executor, Runtime, TaskGraph
 def make_dataset(seed: int = 0) -> dict[str, np.ndarray]:
     rng = np.random.default_rng(seed)
     nparts = int(rng.integers(3, 9))  # unknown at graph-build time
-    return {f"part{i}": rng.standard_normal(int(rng.integers(10_000, 50_000))) for i in range(nparts)}
+    return {
+        f"part{i}": rng.standard_normal(int(rng.integers(10_000, 50_000))) for i in range(nparts)
+    }
 
 
 def main() -> None:

@@ -73,7 +73,6 @@ def collective_traffic(hlo_text: str) -> dict[str, Any]:
     """Per-device ICI traffic (bytes) by collective kind + op counts."""
     bytes_by_kind: dict[str, float] = defaultdict(float)
     count_by_kind: dict[str, int] = defaultdict(int)
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:

@@ -16,7 +16,6 @@ padding overheads in the compiled program.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 from repro.configs.base import ModelConfig, param_count
 

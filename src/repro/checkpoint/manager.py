@@ -30,7 +30,7 @@ import json
 import pathlib
 import shutil
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -317,7 +317,9 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, like: Any, *, step: Optional[int] = None, shardings: Any = None) -> tuple[Any, dict]:
+    def restore(
+        self, like: Any, *, step: Optional[int] = None, shardings: Any = None
+    ) -> tuple[Any, dict]:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")

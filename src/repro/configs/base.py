@@ -8,7 +8,7 @@ plus a ``reduced()`` smoke-test variant of the same family.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # Shape suites assigned to the LM families (seq_len, global_batch).
@@ -180,7 +180,9 @@ def param_count(cfg: ModelConfig) -> dict:
         d_inner = cfg.ssm_expand * d if cfg.family == "ssm" else cfg.num_heads * cfg.head_dim
         nh = cfg.ssm_heads or d_inner // cfg.ssm_head_dim
         # in/out/gate projections dominate; per-head state params are small
-        ssm_per_layer = d * d_inner * 2 + d_inner * d + d_inner * cfg.conv_kernel + nh * (2 + cfg.ssm_state)
+        ssm_per_layer = (
+            d * d_inner * 2 + d_inner * d + d_inner * cfg.conv_kernel + nh * (2 + cfg.ssm_state)
+        )
         per_layer += ssm_per_layer
     attn_total = L * per_layer
     enc = 0

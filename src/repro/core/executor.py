@@ -34,7 +34,9 @@ Migration from the old call sites is mechanical (see README):
 """
 from __future__ import annotations
 
+import os
 import time
+import warnings
 from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 from .baseline import SerialPool
@@ -78,6 +80,19 @@ class Executor:
         ``backend``.
     observers, name, deque_cls:
         Forwarded to the owned pool (see ``ThreadPool``).
+    verify:
+        Pre-submission static verification (DESIGN.md §15). ``"off"``
+        (default) submits untouched; ``"warn"`` runs the
+        :mod:`repro.analysis` linter + race detector over each graph the
+        first time it is submitted (and again only after structural
+        mutation, tracked by the §12 epoch fingerprint) and reports
+        findings through :mod:`warnings`; ``"strict"`` raises
+        :class:`~repro.analysis.verify.GraphVerificationError` on
+        error-severity findings before any task runs. The default comes
+        from the ``REPRO_VERIFY`` environment variable when set —
+        flipping a whole deployment to ``warn`` needs no code change.
+        Verification is per *graph submission*, never per task: with
+        ``"off"`` the only cost is one attribute test in :meth:`run`.
     backend_kwargs:
         Extra keyword arguments for the owned pool's constructor (e.g.
         ``mp_context="spawn"`` or ``arena_threshold=...`` for the process
@@ -105,8 +120,17 @@ class Executor:
         observers: Sequence[Any] = (),
         name: str = "repro-executor",
         deque_cls: Optional[type] = None,
+        verify: Optional[str] = None,
         **backend_kwargs: Any,
     ) -> None:
+        if verify is None:
+            verify = os.environ.get("REPRO_VERIFY", "off")
+        if verify not in ("off", "warn", "strict"):
+            raise ValueError(
+                f"unknown verify mode {verify!r}; expected 'off', 'warn' or 'strict'"
+            )
+        # None when off: the hot-path check in run() is one falsy test
+        self._verify_mode: Optional[str] = None if verify == "off" else verify
         if pool is not None:
             if backend is not None:
                 raise ValueError("pass either backend= or pool=, not both")
@@ -197,6 +221,8 @@ class Executor:
         if isinstance(work, TaskGraph):
             if priority is not None:
                 self._apply_priority(work.tasks, priority)
+            if self._verify_mode is not None:
+                self._verify(work)
             return work.as_future(self.pool, replay=replay)
         if isinstance(work, Task):
             task = work
@@ -232,10 +258,34 @@ class Executor:
         # is what makes build-once/run-N futures resolve correctly.
         g0 = tasks[0].graph if tasks else None
         if g0 is not None and len(g0) == len(tasks) and all(t.graph is g0 for t in tasks):
+            if self._verify_mode is not None:
+                self._verify(g0)
             return g0.as_future(self.pool)
         g = TaskGraph("executor-run")
         g.adopt(*tasks)
+        if self._verify_mode is not None:
+            self._verify(g)
         return g.as_future(self.pool)
+
+    def _verify(self, graph: TaskGraph) -> None:
+        """§15 pre-submission verification (``verify="warn"|"strict"``).
+
+        Cached by the graph's §12 epoch fingerprint: a build-once /
+        run-N graph verifies exactly once, and again only after a
+        structural mutation. Runtime-spawned subflows are born after
+        submission and are not covered — lint spawner scripts with
+        ``python -m repro.analysis.lint`` for that.
+        """
+        if graph._verified_epoch == graph._epoch:
+            return
+        from repro.analysis.verify import verify_graph  # lazy: analysis is opt-in
+
+        report = verify_graph(graph, backend=self.backend)
+        if self._verify_mode == "strict":
+            report.raise_if_errors()  # before caching: resubmission re-raises
+        graph._verified_epoch = graph._epoch
+        if not report.ok:
+            warnings.warn(str(report), stacklevel=3)
 
     @staticmethod
     def _apply_priority(tasks: Sequence[Task], priority: float) -> None:

@@ -256,6 +256,9 @@ class TaskGraph:
         self._epoch = 0
         self._settled_epoch = -1
         self._plan: Any = None
+        # epoch as of the last `Executor(verify=...)` pass over this graph
+        # (analysis/verify.py) — re-verification happens only on mutation
+        self._verified_epoch: Optional[int] = None
 
     # -- construction -----------------------------------------------------------
 
@@ -552,6 +555,10 @@ class TaskGraph:
             for t in self.tasks
             if not any(not isinstance(s, _FinTask) for s in t.successors)
         }
+        # Fin edges are submission bookkeeping, not user structure: wiring
+        # them must not move the §12/§15 epoch fingerprint (a first-run
+        # bump would force one spurious re-verify and re-settle per graph).
+        epoch0 = self._epoch
         for tid, t in list(self._sinks.items()):
             if tid not in current:  # gained a real successor since last round
                 t.successors.remove(fin)
@@ -561,6 +568,7 @@ class TaskGraph:
             if tid not in self._sinks:
                 fin.after(t)
                 self._sinks[tid] = t
+        self._epoch = epoch0
         graph_tasks = list(self.tasks)
 
         def _canceller() -> bool:
@@ -749,6 +757,79 @@ class TaskGraph:
         at runtime, never at submission)."""
         return [t for t in self.tasks if t.is_source]
 
+    def edges(self) -> list[tuple[Task, Task, bool]]:
+        """Every edge as ``(pred, succ, strong)`` in declaration order.
+
+        The strength column encodes the §10 rule the scheduler itself
+        uses: *all* out-edges of a condition task are weak (no countdown
+        token; successor position is the branch index), all out-edges of
+        any other task are strong. Edges to another graph's hidden
+        completion task are omitted — bookkeeping, not structure. This is
+        the introspection surface the :mod:`repro.analysis` verifier walks
+        so lint rules never reimplement edge-strength semantics.
+        """
+        out: list[tuple[Task, Task, bool]] = []
+        for t in self.tasks:
+            strong = not t.is_condition
+            for s in t.successors:
+                if isinstance(s, _FinTask):
+                    continue
+                out.append((t, s, strong))
+        return out
+
+    def find_strong_cycle(self) -> Optional[list[Task]]:
+        """Return one cycle of **strong** edges as a task path (first task
+        repeated at the end), or ``None`` when every cycle is closed only
+        by weak condition branches.
+
+        This is the analysis companion to :meth:`validate`: the same
+        Kahn-on-strong-in-degrees walk, but instead of a count it names
+        the offending tasks. The cycle found is walked from an arbitrary
+        unfinished task along strong successors, so for tangled graphs it
+        is *a* witness cycle, not necessarily the only one.
+        """
+        indeg = {id(t): t.num_predecessors for t in self.tasks}
+        q = _pydeque(t for t in self.tasks if t.num_predecessors == 0)
+        remaining = {id(t): t for t in self.tasks}
+        while q:
+            t = q.popleft()
+            remaining.pop(id(t), None)
+            if t.is_condition:
+                continue  # weak out-edges never contributed to in-degrees
+            for s in t.successors:
+                if id(s) not in indeg:
+                    continue
+                indeg[id(s)] -= 1
+                if indeg[id(s)] == 0:
+                    q.append(s)
+        # Every task left has an unfinished strong predecessor, so following
+        # strong in-edges inside `remaining` must revisit a node: a cycle.
+        for start in remaining.values():
+            path: list[Task] = []
+            seen: dict[int, int] = {}
+            t: Optional[Task] = start
+            while t is not None and id(t) not in seen:
+                seen[id(t)] = len(path)
+                path.append(t)
+                t = next(
+                    (
+                        p
+                        for p in remaining.values()
+                        if not p.is_condition and t in p.successors
+                    ),
+                    None,
+                )
+            if t is not None:  # closed a strong cycle
+                cyc = path[seen[id(t)] :]
+                cyc.reverse()  # we walked in-edges; report in edge direction
+                # rotate to start at the earliest-declared member, so the
+                # reported path is deterministic for a given build order
+                order = {id(x): i for i, x in enumerate(self.tasks)}
+                k = min(range(len(cyc)), key=lambda i: order[id(cyc[i])])
+                cyc = cyc[k:] + cyc[:k]
+                return cyc + [cyc[0]]
+        return None
+
     def validate(self) -> None:
         """Raise :class:`CycleError` unless every cycle is condition-closed.
 
@@ -791,9 +872,15 @@ class TaskGraph:
                 if indeg[id(s)] == 0:
                     q.append(s)
         if visited != len(self.tasks):
+            cycle = self.find_strong_cycle()
+            path = (
+                " -> ".join(t.name or f"t{i}" for i, t in enumerate(cycle))
+                if cycle
+                else "<no witness cycle found>"
+            )
             raise CycleError(
                 f"task graph {self.name!r}: {len(self.tasks) - visited} task(s) "
-                "unreachable from roots — dependency cycle"
+                f"unreachable from roots — strong dependency cycle: {path}"
             )
 
     def critical_path(self, cost: Callable[[Task], float] = lambda _t: 1.0) -> float:

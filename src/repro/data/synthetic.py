@@ -9,7 +9,6 @@ the multi-host story needs no coordination traffic at all.
 from __future__ import annotations
 
 import pathlib
-from typing import Optional
 
 import numpy as np
 

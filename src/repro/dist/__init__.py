@@ -10,12 +10,14 @@ scheduling decision:
 * :class:`ShmArena` / :class:`ArrayRef` — the shared-memory data plane for
   large numpy/jax edge values;
 * :class:`UnpicklableTaskError` — submit-time verdict for a body that
-  cannot ship; :class:`WorkerDiedError` — a worker death surfaced as a
-  task failure (never a hang).
+  cannot ship; :func:`picklability_error` — the same verdict as a
+  non-raising probe (the ``repro.analysis`` linter's static check);
+  :class:`WorkerDiedError` — a worker death surfaced as a task failure
+  (never a hang).
 """
 from .process_pool import ProcessPool, WorkerDiedError
 from .shm_arena import DEFAULT_THRESHOLD, ArrayRef, ShmArena
-from .wire import UnpicklableTaskError
+from .wire import UnpicklableTaskError, picklability_error
 
 __all__ = [
     "ProcessPool",
@@ -24,4 +26,5 @@ __all__ = [
     "ArrayRef",
     "DEFAULT_THRESHOLD",
     "UnpicklableTaskError",
+    "picklability_error",
 ]

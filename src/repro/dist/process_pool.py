@@ -239,7 +239,7 @@ class ProcessPool(ThreadPool):
             if task.affinity == "remote":
                 raise UnpicklableTaskError(
                     f"task {task.name or fn!r} has affinity='remote' but a "
-                    f"dataflow input cannot be shipped to a worker process: "
+                    "dataflow input cannot be shipped to a worker process: "
                     f"{exc}"
                 ) from exc
             return fn(*args)

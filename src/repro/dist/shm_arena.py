@@ -40,7 +40,6 @@ from __future__ import annotations
 import secrets
 import threading
 from multiprocessing import shared_memory
-from typing import Any, Optional
 
 import numpy as np
 

@@ -50,6 +50,7 @@ from typing import Any, Optional
 
 __all__ = [
     "UnpicklableTaskError",
+    "picklability_error",
     "dumps_fn",
     "loads_fn",
     "dumps_value",
@@ -108,6 +109,28 @@ def _dumps_cell(value: Any) -> Any:
         if callable(value):
             return dumps_fn(value)
         raise
+
+
+def picklability_error(fn: Any) -> Optional[str]:
+    """Non-raising probe: would :func:`dumps_fn` accept this body?
+
+    Returns ``None`` when ``fn`` can cross the §11 process wire, or the
+    :class:`UnpicklableTaskError` message naming the offending capture
+    when it cannot. This is the static-analysis entry point
+    (``repro.analysis.lint``'s *remote-unpicklable* rule) — the same
+    serializer the real offload path runs, invoked at lint time instead
+    of at dispatch, so a ``affinity="remote"`` body that would die in
+    flight is reported before the graph ever runs. The probe serializes
+    (it does not ship), so it is side-effect free but pays the wire cost
+    once per probed body.
+    """
+    try:
+        dumps_fn(fn)
+    except UnpicklableTaskError as exc:
+        return str(exc)
+    except Exception as exc:  # defensive: any serializer failure is a verdict
+        return f"{type(exc).__name__}: {exc}"
+    return None
 
 
 def dumps_fn(fn: Any) -> tuple:

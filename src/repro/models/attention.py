@@ -33,7 +33,6 @@ def attend(
 ) -> jax.Array:
     B, Sq, H, Dh = q.shape
     KV = k.shape[2]
-    G = H // KV
     if use_kernel and Sq > 1:
         from repro.kernels import ops as kops
 
@@ -159,8 +158,12 @@ def gqa_attention(
         Sk = cache["k"].shape[1]
         if "pos" in cache:  # ring buffer (S must be 1)
             slot = jnp.mod(cache_index, Sk)
-            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+            )
             pos_buf = jax.lax.dynamic_update_slice_in_dim(
                 cache["pos"], positions.astype(jnp.int32), slot, axis=0
             )
@@ -175,8 +178,12 @@ def gqa_attention(
             else:
                 new_cache = {"k": k_cache, "v": v_cache, "pos": pos_buf}
         else:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1
+            )
             k_pos = jnp.arange(Sk)
             bias = causal_mask_bias(
                 positions, k_pos, window=window, prefix_len=prefix_len,
@@ -191,8 +198,11 @@ def gqa_attention(
         if bidirectional:
             bias = jnp.zeros((1, S, S), jnp.float32)
         else:
-            bias = causal_mask_bias(positions, positions, window=window, prefix_len=prefix_len)[None]
-        out = attend(q, k, v, bias, use_kernel=use_kernel, causal_hint=prefix_len is None and window is None and not bidirectional)
+            bias = causal_mask_bias(
+                positions, positions, window=window, prefix_len=prefix_len
+            )[None]
+        causal_hint = prefix_len is None and window is None and not bidirectional
+        out = attend(q, k, v, bias, use_kernel=use_kernel, causal_hint=causal_hint)
         if return_cache:
             if window is not None:  # return a ring cache of the last W keys,
                 # laid out so position p lives at slot p % W (the decode
@@ -285,8 +295,12 @@ def mla_attention(
         # decode: absorbed form — score/value directly against the compressed
         # cache; per-token cache traffic is kv_lora+rope (576) instead of
         # 2*H*Dh (32768 for 128 heads): the paper-faithful 93% KV reduction.
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_index, axis=1)
-        krope_c = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope.astype(cache["krope"].dtype), cache_index, axis=1)
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_index, axis=1
+        )
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), cache_index, axis=1
+        )
         Sk = ckv_c.shape[1]
         q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, p["wk_b"])  # absorb W_UK
         scores = (
@@ -306,7 +320,9 @@ def mla_attention(
         # prefill/train: expanded form (better matmul shapes at long Sq)
         k_nope = jnp.einsum("bsl,lhn->bshn", ckv, p["wk_b"])
         v = jnp.einsum("bsl,lhv->bshv", ckv, p["wv_b"])
-        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))], axis=-1
+        )
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
         bias = causal_mask_bias(positions, positions)[None]
         out = attend(q, k, v, bias, use_kernel=use_kernel, causal_hint=True)

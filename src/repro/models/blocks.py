@@ -14,7 +14,6 @@ the uniform SWA segments, plain calls for the global layers.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional, Tuple
 
 import jax
@@ -211,7 +210,9 @@ def _cross_attention(cfg, p, x, enc_out, *, cache=None, return_cache=False):
 # ---------------------------------------------------------------------------
 
 
-def block_cache_shape(cfg, batch: int, seq: int, dtype, *, is_global: bool = True, xdec_enc_seq: Optional[int] = None) -> dict:
+def block_cache_shape(
+    cfg, batch: int, seq: int, dtype, *, is_global: bool = True, xdec_enc_seq: Optional[int] = None
+) -> dict:
     """Abstract cache for ONE layer. seq = the KV length this layer keeps."""
     c: dict[str, Any] = {}
     if cfg.attention == "mla":

@@ -9,8 +9,7 @@ groups so their caches/params can differ in shape.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,9 @@ class StackGroup:
     is_global: bool  # full attention (ignores cfg.window)
 
 
-def stack_plan(cfg, num_layers: Optional[int] = None, *, block_kind: str = "decoder") -> list[StackGroup]:
+def stack_plan(
+    cfg, num_layers: Optional[int] = None, *, block_kind: str = "decoder"
+) -> list[StackGroup]:
     L = num_layers if num_layers is not None else cfg.num_layers
     g_set = set(cfg.global_layers) if block_kind != "encoder" else set()
     first_dense = cfg.first_dense_layers if block_kind == "decoder" else L + 1
@@ -96,8 +97,12 @@ def _merge_decode_cache(cache_in, emitted, index):
                 slot = jnp.mod(index, Sk) if ring else index
                 ax = node_in["k"].ndim - 3
                 out = {
-                    "k": dus(node_in["k"], node_em["k_new"].astype(node_in["k"].dtype), slot, axis=ax),
-                    "v": dus(node_in["v"], node_em["v_new"].astype(node_in["v"].dtype), slot, axis=ax),
+                    "k": dus(
+                        node_in["k"], node_em["k_new"].astype(node_in["k"].dtype), slot, axis=ax
+                    ),
+                    "v": dus(
+                        node_in["v"], node_em["v_new"].astype(node_in["v"].dtype), slot, axis=ax
+                    ),
                 }
                 if ring:
                     pax = node_in["pos"].ndim - 1
@@ -107,8 +112,18 @@ def _merge_decode_cache(cache_in, emitted, index):
             if "ckv_new" in node_em:
                 ax = node_in["ckv"].ndim - 2
                 return {
-                    "ckv": dus(node_in["ckv"], node_em["ckv_new"].astype(node_in["ckv"].dtype), index, axis=ax),
-                    "krope": dus(node_in["krope"], node_em["krope_new"].astype(node_in["krope"].dtype), index, axis=ax),
+                    "ckv": dus(
+                        node_in["ckv"],
+                        node_em["ckv_new"].astype(node_in["ckv"].dtype),
+                        index,
+                        axis=ax,
+                    ),
+                    "krope": dus(
+                        node_in["krope"],
+                        node_em["krope_new"].astype(node_in["krope"].dtype),
+                        index,
+                        axis=ax,
+                    ),
                 }
             return {k: merge(node_in[k], node_em.get(k)) for k in node_in}
         if isinstance(node_in, dict) or node_em is None:

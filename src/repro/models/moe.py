@@ -19,8 +19,7 @@ gradients and the aux term stay in plain global-land.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +87,8 @@ def moe_dense(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
         sp = p["shared"]
         y = y + jnp.einsum(
             "bsf,fd->bsd",
-            act(jnp.einsum("bsd,df->bsf", x, sp["w_gate"])) * jnp.einsum("bsd,df->bsf", x, sp["w_up"]),
+            act(jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+            * jnp.einsum("bsd,df->bsf", x, sp["w_up"]),
             sp["w_down"],
         )
     return y, aux
@@ -222,7 +222,8 @@ def moe_ep(cfg, p: dict, x: jax.Array, ctx) -> Tuple[jax.Array, jax.Array]:
         act = act_fn(cfg.act if cfg.act in ("silu", "gelu") else "silu")
         y = y + jnp.einsum(
             "bsf,fd->bsd",
-            act(jnp.einsum("bsd,df->bsf", x, sp["w_gate"])) * jnp.einsum("bsd,df->bsf", x, sp["w_up"]),
+            act(jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+            * jnp.einsum("bsd,df->bsf", x, sp["w_up"]),
             sp["w_down"],
         )
     return y, aux

@@ -201,7 +201,6 @@ def ssm_apply(
     A = -jnp.exp(p["a_log"])  # (nh,)
 
     if cache is None:
-        conv_in_raw = xBC  # pre-activation stream feeds the decode ring
         xBC, tail = _causal_conv(xBC, p["conv_w"], p["conv_b"], None)
         xc, Bc, Cc = jnp.split(xBC, [di, di + N], axis=-1)
         x = xc.reshape(B, S, nh, Pd)

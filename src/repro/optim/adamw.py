@@ -15,7 +15,7 @@ Weight decay is masked off 1-D params (norms, biases) by default.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

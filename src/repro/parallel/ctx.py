@@ -6,7 +6,7 @@ means single-device execution (CPU smoke tests).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax

@@ -21,16 +21,15 @@ remat on the stage function the activation footprint per stage is the
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.schedule import pipeline_task_graph, schedule_to_table, simulate
+from repro.core.schedule import simulate
 from repro.parallel.ctx import shard_map
 
 _HAS_PUBLIC_SHARD_MAP = hasattr(jax, "shard_map")
@@ -134,7 +133,6 @@ def build_pipelined_loss(
         return total[0] if _HAS_PUBLIC_SHARD_MAP else total
 
     # loss must come back identical on every rank: psum above handles it.
-    other_axes = [a for a in mesh.axis_names if a != axis]
 
     def loss(params_stacked, x_mb, y_mb):
         out = shard_map(

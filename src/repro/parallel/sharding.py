@@ -110,7 +110,9 @@ def shardings(spec_tree: Any, mesh: Mesh) -> Any:
     )
 
 
-def zero_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh, data_axes: Tuple[str, ...] = ("data",)) -> P:
+def zero_spec(
+    spec: P, shape: Tuple[int, ...], mesh: Mesh, data_axes: Tuple[str, ...] = ("data",)
+) -> P:
     """Add data-axis sharding to the largest still-replicated divisible dim
     (ZeRO partitioning of optimizer state / master weights)."""
     n_data = int(np.prod([mesh.shape[a] for a in data_axes]))
@@ -133,7 +135,9 @@ def zero_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh, data_axes: Tuple[str,
     return P(*parts)
 
 
-def zero_specs(spec_tree: Any, abstract: Any, mesh: Mesh, data_axes: Tuple[str, ...] = ("data",)) -> Any:
+def zero_specs(
+    spec_tree: Any, abstract: Any, mesh: Mesh, data_axes: Tuple[str, ...] = ("data",)
+) -> Any:
     return jax.tree.map(
         lambda s, a: zero_spec(s, tuple(a.shape), mesh, data_axes),
         spec_tree,
@@ -161,4 +165,8 @@ def estimate_padding_waste(abstract: Any, spec_tree: Any, mesh: Mesh) -> dict:
         padded += pbytes
 
     jax.tree.map(one, abstract, spec_tree, is_leaf=lambda s: isinstance(s, P))
-    return {"logical_bytes": total, "padded_bytes": padded, "waste_frac": (padded - total) / max(total, 1)}
+    return {
+        "logical_bytes": total,
+        "padded_bytes": padded,
+        "waste_frac": (padded - total) / max(total, 1),
+    }

@@ -6,17 +6,15 @@ policy (params+opt donated in train; caches donated in decode).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import batch_axes_of
 from repro.models import Model
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 from repro.optim.adamw import adamw_abstract_state
 
 from .ctx import ParallelCtx

@@ -18,18 +18,16 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core import ThreadPool
 from repro.data import Prefetcher, SyntheticTokens
-from repro.models import Model, build_model
+from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init, cosine_schedule
-from repro.optim.adamw import adamw_abstract_state
 from repro.parallel.steps import build_train_step
 
 
@@ -87,7 +85,11 @@ class Trainer:
 
     def _build_step(self):
         if self.mesh is not None:
-            spec = {"seq_len": self.tcfg.seq_len, "global_batch": self.tcfg.global_batch, "kind": "train"}
+            spec = {
+                "seq_len": self.tcfg.seq_len,
+                "global_batch": self.tcfg.global_batch,
+                "kind": "train",
+            }
             batch_abstract = self.model.input_specs("train", spec)
             step, shardings, _ = build_train_step(
                 self.model, self.mesh, self.ocfg, self.lr_fn, batch_abstract, donate=False

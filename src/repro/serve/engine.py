@@ -309,7 +309,9 @@ class _Pending:
         "handle", "req", "deadline", "order", "tokens", "cancelled", "stage", "joined",
     )
 
-    def __init__(self, handle: RequestHandle, req: GenRequest, deadline: Optional[float], order: int) -> None:
+    def __init__(
+        self, handle: RequestHandle, req: GenRequest, deadline: Optional[float], order: int
+    ) -> None:
         self.handle = handle
         self.req = req
         self.deadline = deadline  # absolute monotonic, or None
@@ -329,7 +331,9 @@ class _Seq:
 
     __slots__ = ("p", "tokens", "feed_index", "remaining", "slot")
 
-    def __init__(self, p: _Pending, tokens: list, feed_index: int, remaining: int, slot: int) -> None:
+    def __init__(
+        self, p: _Pending, tokens: list, feed_index: int, remaining: int, slot: int
+    ) -> None:
         self.p = p
         self.tokens = tokens
         self.feed_index = feed_index  # position of the token fed next tick
@@ -573,7 +577,7 @@ class ServeEngine:
                 if now < self._breaker_until:
                     self._rejected += 1
                     raise QueueFull(
-                        f"circuit breaker open for another "
+                        "circuit breaker open for another "
                         f"{self._breaker_until - now:.2f}s "
                         f"({self._breaker_threshold} consecutive prefill failures)"
                     )

@@ -1,0 +1,320 @@
+"""§15 graph linter: one true-positive and one clean-pass per rule."""
+import pytest
+
+from repro.analysis.lint import RULES, Finding, lint_graph, rule_catalog
+from repro.core import RetryPolicy, TaskGraph
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def lint(g, **kw):
+    kw.setdefault("races", False)
+    return lint_graph(g, **kw)
+
+
+# -- strong-cycle --------------------------------------------------------------
+
+
+def test_strong_cycle_true_positive_names_path():
+    g = TaskGraph("cyc")
+    a = g.add(lambda: None, name="a")
+    b = g.add(lambda: None, name="b")
+    b.succeed(a)
+    a.succeed(b)
+    (f,) = [f for f in lint(g) if f.rule == "strong-cycle"]
+    assert f.severity == "error"
+    assert "a -> b -> a" in f.message
+    assert f.tasks == ("a", "b")
+
+
+def test_strong_cycle_clean_on_weak_loop():
+    g = TaskGraph("loop")
+    entry = g.add(None, name="entry")
+    body = g.add(lambda: None, name="body")
+    body.after(entry)
+    cond = g.add(lambda: 2, kind="condition", name="more")
+    cond.after(body)
+    cond.precede(body)
+    assert "strong-cycle" not in rules_of(lint(g))
+
+
+# -- unreachable-task ----------------------------------------------------------
+
+
+def test_unreachable_true_positive_external_predecessor():
+    other = TaskGraph("other")
+    ext = other.add(lambda: None, name="ext")
+    g = TaskGraph("main")
+    t = g.add(lambda: None, name="dangling")
+    t.after(ext)  # strong pred lives in a different graph
+    found = [f for f in lint(g) if f.rule == "unreachable-task"]
+    assert found and "outside this graph" in found[0].message
+
+
+def test_unreachable_clean_and_not_duplicated_for_cycles():
+    g = TaskGraph("ok")
+    a = g.add(lambda: None, name="a")
+    g.then(a, lambda x: x, name="b")
+    assert "unreachable-task" not in rules_of(lint(g))
+    # cycle members are the strong-cycle rule's report, not this rule's
+    g2 = TaskGraph("cyc")
+    x = g2.add(lambda: None, name="x")
+    y = g2.add(lambda: None, name="y")
+    x.succeed(y)
+    y.succeed(x)
+    assert "unreachable-task" not in rules_of(lint(g2))
+
+
+# -- orphan-task ---------------------------------------------------------------
+
+
+def test_orphan_true_positive():
+    g = TaskGraph("orphan")
+    g.add(lambda: 1, name="real")
+    g.add(None, name="placeholder")
+    (f,) = [f for f in lint(g) if f.rule == "orphan-task"]
+    assert f.severity == "warning" and f.tasks == ("placeholder",)
+
+
+def test_orphan_clean_when_wired_or_alone():
+    g = TaskGraph("wired")
+    entry = g.add(None, name="entry")
+    body = g.add(lambda: 1, name="body")
+    body.after(entry)
+    assert "orphan-task" not in rules_of(lint(g))
+    solo = TaskGraph("solo")
+    solo.add(None, name="only")
+    assert "orphan-task" not in rules_of(lint(solo))
+
+
+# -- condition-branch-range ----------------------------------------------------
+
+
+def test_branch_range_error_when_no_return_selects():
+    g = TaskGraph("condbad")
+    entry = g.add(None, name="entry")
+    c = g.add(lambda: 7, kind="condition", name="pick")
+    c.after(entry)
+    c.precede(g.add(lambda: 1, name="tgt"))
+    (f,) = [f for f in lint(g) if f.rule == "condition-branch-range"]
+    assert f.severity == "error" and "[7]" in f.message
+
+
+def test_branch_range_warns_out_of_cycle_only():
+    # outside a cycle, a sometimes-out-of-range constant is a warning
+    g = TaskGraph("maybe")
+    entry = g.add(None, name="entry")
+    c = g.add(lambda x=0: 0 if x else 3, kind="condition", name="pick")
+    c.after(entry)
+    c.precede(g.add(lambda: 1, name="tgt"))
+    (f,) = [f for f in lint(g) if f.rule == "condition-branch-range"]
+    assert f.severity == "warning" and "[3]" in f.message
+    # inside a cycle the same shape is the loop-exit idiom: clean
+    g2 = TaskGraph("loop")
+    entry2 = g2.add(None, name="entry")
+    body = g2.add(lambda: 1, name="body")
+    body.after(entry2)
+    c2 = g2.add(lambda x=0: 0 if x else 3, kind="condition", name="more")
+    c2.after(body)
+    c2.precede(body)
+    assert "condition-branch-range" not in rules_of(lint(g2))
+
+
+def test_branch_range_flags_condition_without_successors():
+    g = TaskGraph("nosucc")
+    entry = g.add(None, name="entry")
+    c = g.add(lambda: 0, kind="condition", name="lonely")
+    c.after(entry)
+    found = [f for f in lint(g) if f.rule == "condition-branch-range"]
+    assert found and "no successors" in found[0].message
+
+
+def test_branch_range_declines_dynamic_bodies():
+    g = TaskGraph("dyn")
+    entry = g.add(None, name="entry")
+
+    def decide():
+        import os
+
+        return len(os.getcwd()) % 2
+
+    c = g.add(decide, kind="condition", name="pick")
+    c.after(entry)
+    c.precede(g.add(lambda: 1, name="tgt"))
+    assert "condition-branch-range" not in rules_of(lint(g))
+
+
+# -- weak-loop-no-exit ---------------------------------------------------------
+
+
+def test_weak_loop_no_exit_true_positive():
+    g = TaskGraph("noexit")
+    entry = g.add(None, name="entry")
+    body = g.add(lambda: 1, name="body")
+    body.after(entry)
+    c = g.add(lambda: 0, kind="condition", name="again")
+    c.after(body)
+    c.precede(body)
+    (f,) = [f for f in lint(g) if f.rule == "weak-loop-no-exit"]
+    assert f.severity == "error" and "body" in f.tasks and "again" in f.tasks
+
+
+def test_weak_loop_clean_with_reachable_exit():
+    g = TaskGraph("exit")
+    entry = g.add(None, name="entry")
+    body = g.add(lambda: 1, name="body")
+    body.after(entry)
+    state = {"n": 0}
+
+    def more():
+        state["n"] += 1
+        return 0 if state["n"] < 3 else 9  # 9 selects nothing: the loop drains
+
+    c = g.add(more, kind="condition", name="more")
+    c.after(body)
+    c.precede(body)
+    assert "weak-loop-no-exit" not in rules_of(lint(g))
+
+
+# -- priority-inversion --------------------------------------------------------
+
+
+def test_priority_inversion_true_positive():
+    g = TaskGraph("inv")
+    low = g.add(lambda: 1, name="low", priority=0.0)
+    high = g.add(lambda: 2, name="high", priority=5.0)
+    high.succeed(low)
+    (f,) = [f for f in lint(g) if f.rule == "priority-inversion"]
+    assert f.severity == "warning" and f.tasks == ("low", "high")
+
+
+def test_priority_inversion_clean_on_weak_edges_and_equal_bands():
+    g = TaskGraph("ok")
+    entry = g.add(None, name="entry", priority=5.0)
+    tick = g.add(lambda: 1, name="tick", priority=5.0)
+    tick.after(entry)
+    c = g.add(lambda: 2, kind="condition", name="more", priority=5.0)
+    c.after(tick)
+    c.precede(tick)  # weak edges never count, whatever the bands
+    assert "priority-inversion" not in rules_of(lint(g))
+
+
+# -- retry-non-idempotent ------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["serial", "thread", "process"])
+def test_retry_non_idempotent_fires_only_where_offload_is_possible(backend):
+    g = TaskGraph("retry")
+    g.add(lambda: 1, name="flaky", retry=RetryPolicy(max_attempts=3))
+    fired = "retry-non-idempotent" in rules_of(lint(g, backend=backend))
+    assert fired == (backend == "process")
+
+
+def test_retry_non_idempotent_remote_fires_without_backend_context():
+    g = TaskGraph("retry-remote")
+    g.add(
+        lambda: 1, name="flaky", affinity="remote", retry=RetryPolicy(max_attempts=3)
+    )
+    (f,) = [f for f in lint(g) if f.rule == "retry-non-idempotent"]
+    assert "at-most-once" in f.message
+
+
+@pytest.mark.parametrize("backend", ["serial", "thread", "process"])
+def test_retry_clean_when_idempotent_or_local(backend):
+    g = TaskGraph("ok")
+    g.add(
+        lambda: 1,
+        name="safe",
+        retry=RetryPolicy(max_attempts=3),
+        idempotent=True,
+        affinity="remote",
+    )
+    g.add(
+        lambda: 2, name="pinned", retry=RetryPolicy(max_attempts=3), affinity="local"
+    )
+    assert "retry-non-idempotent" not in rules_of(lint(g, backend=backend))
+
+
+# -- remote-unpicklable --------------------------------------------------------
+
+
+def test_remote_unpicklable_true_positive():
+    import threading
+
+    lock = threading.Lock()
+    g = TaskGraph("wire")
+    g.add(lambda: lock.acquire(False), name="locked", affinity="remote")
+    (f,) = [f for f in lint(g) if f.rule == "remote-unpicklable"]
+    assert f.severity == "error" and "locked" in f.tasks
+
+
+def test_remote_unpicklable_clean_for_wireable_bodies():
+    g = TaskGraph("wire-ok")
+    g.add(lambda: 40 + 2, name="pure", affinity="remote")
+    assert "remote-unpicklable" not in rules_of(lint(g))
+
+
+# -- affinity-ignored ----------------------------------------------------------
+
+
+def test_affinity_ignored_true_positive_on_condition():
+    g = TaskGraph("aff")
+    entry = g.add(None, name="entry")
+    c = g.add(lambda: 0, kind="condition", name="pick", affinity="remote")
+    c.after(entry)
+    c.precede(g.add(lambda: 1, name="tgt"))
+    (f,) = [f for f in lint(g) if f.rule == "affinity-ignored"]
+    assert "condition" in f.message
+
+
+def test_affinity_ignored_clean_for_plain_remote_body():
+    g = TaskGraph("aff-ok")
+    g.add(lambda: 1, name="worker", affinity="remote")
+    assert "affinity-ignored" not in rules_of(lint(g))
+
+
+# -- timeout-control-flow ------------------------------------------------------
+
+
+def test_timeout_control_flow_true_positive():
+    g = TaskGraph("to")
+    entry = g.add(None, name="entry")
+    c = g.add(lambda: 0, kind="condition", name="pick", timeout=1.0)
+    c.after(entry)
+    c.precede(g.add(lambda: 1, name="tgt"))
+    (f,) = [f for f in lint(g) if f.rule == "timeout-control-flow"]
+    assert f.severity == "warning"
+
+
+def test_timeout_clean_on_plain_bodies():
+    g = TaskGraph("to-ok")
+    g.add(lambda: 1, name="bounded", timeout=5.0)
+    assert "timeout-control-flow" not in rules_of(lint(g))
+
+
+# -- framework -----------------------------------------------------------------
+
+
+def test_rule_catalog_lists_every_rule():
+    cat = rule_catalog()
+    for name in RULES:
+        assert name in cat
+
+
+def test_rules_subset_selection():
+    g = TaskGraph("cyc")
+    a = g.add(lambda: None, name="a")
+    b = g.add(lambda: None, name="b")
+    a.succeed(b)
+    b.succeed(a)
+    only = lint_graph(g, rules=["strong-cycle"], races=False)
+    assert rules_of(only) == {"strong-cycle"}
+    with pytest.raises(KeyError):
+        lint_graph(g, rules=["no-such-rule"], races=False)
+
+
+def test_finding_str_is_informative():
+    f = Finding("strong-cycle", "error", "boom", ("a", "b"), "g")
+    assert str(f) == "error[strong-cycle] graph 'g': boom [a, b]"

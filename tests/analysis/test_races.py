@@ -1,0 +1,225 @@
+"""§15 race detector: static dis-level scan + dynamic vector-clock witness."""
+import pytest
+
+from repro.analysis.lint import lint_graph
+from repro.analysis.races import RaceObserver, detect_races, task_writes
+from repro.core import Executor, TaskGraph
+
+COUNTER = 0  # module global written by the global-race fixtures below
+
+
+def race_rules(findings):
+    return [f for f in findings if f.rule == "shared-state-race"]
+
+
+def make_closure_pair(g):
+    """Two independent tasks bumping the same captured variable."""
+    total = 0
+
+    def bump_a():
+        nonlocal total
+        total += 1
+
+    def bump_b():
+        nonlocal total
+        total += 2
+
+    return g.add(bump_a, name="bump_a"), g.add(bump_b, name="bump_b")
+
+
+# -- static: task_writes -------------------------------------------------------
+
+
+def test_task_writes_sees_closure_cell():
+    g = TaskGraph("w")
+    a, b = make_closure_pair(g)
+    wa, wb = task_writes(a), task_writes(b)
+    assert wa and wb
+    # same cell ⇒ same key; the description names the variable
+    assert set(wa) == set(wb)
+    assert "captured variable 'total'" in next(iter(wa.values()))
+
+
+def test_task_writes_sees_global_and_attr():
+    class Box:
+        def __init__(self):
+            self.n = 0
+
+        def poke(self):
+            self.n += 1
+
+    box = Box()
+
+    def bump_global():
+        global COUNTER
+        COUNTER += 1
+
+    g = TaskGraph("w")
+    tg = g.add(bump_global, name="g")
+    ta = g.add(box.poke, name="a")
+    assert any(k[0] == "global" for k in task_writes(tg))
+    attr_keys = [k for k in task_writes(ta) if k[0] == "attr"]
+    assert attr_keys and attr_keys[0][2] == "n"
+
+
+def test_task_writes_recurses_into_nested_functions():
+    total = 0
+
+    def outer():
+        def inner():
+            nonlocal total
+            total += 1
+
+        inner()
+
+    g = TaskGraph("w")
+    t = g.add(outer, name="outer")
+    assert any(k[0] == "cell" for k in task_writes(t))
+
+
+def test_task_writes_ignores_local_state():
+    def pure():
+        acc = 0
+        for i in range(4):
+            acc += i
+        return acc
+
+    g = TaskGraph("w")
+    assert task_writes(g.add(pure, name="pure")) == {}
+
+
+def test_task_writes_handles_non_functions():
+    g = TaskGraph("w")
+    assert task_writes(g.add(None, name="none")) == {}
+    assert task_writes(g.add(min, name="builtin")) == {}
+
+
+# -- static: detect_races ------------------------------------------------------
+
+
+def test_detect_races_flags_unordered_closure_writers():
+    g = TaskGraph("racy")
+    a, b = make_closure_pair(g)
+    (f,) = race_rules(detect_races(g))
+    assert f.severity == "error"
+    assert set(f.tasks) == {"bump_a", "bump_b"}
+    assert "captured variable 'total'" in f.message
+
+
+def test_detect_races_clean_when_edge_orders_writers():
+    g = TaskGraph("ordered")
+    a, b = make_closure_pair(g)
+    b.succeed(a)
+    assert detect_races(g) == []
+
+
+def test_detect_races_weak_edges_order_too():
+    # §10 loop: body and condition both touch the loop counter, but the
+    # weak back-edge serializes each pass — not a race.
+    g = TaskGraph("loop")
+    entry = g.add(None, name="entry")
+    i = 0
+
+    def body():
+        nonlocal i
+        i += 1
+
+    def more():
+        nonlocal i
+        return 0 if i < 3 else 9
+
+    b = g.add(body, name="body")
+    b.after(entry)
+    c = g.add(more, kind="condition", name="more")
+    c.after(b)
+    c.precede(b)
+    assert detect_races(g) == []
+
+
+def test_detect_races_different_cells_do_not_collide():
+    g = TaskGraph("distinct")
+
+    def make(name):
+        n = 0
+
+        def bump():
+            nonlocal n
+            return n
+
+        return g.add(bump, name=name)
+
+    make("x")
+    make("y")
+    assert detect_races(g) == []
+
+
+def test_lint_graph_includes_races_by_default():
+    g = TaskGraph("racy")
+    make_closure_pair(g)
+    assert race_rules(lint_graph(g))
+    assert not race_rules(lint_graph(g, races=False))
+
+
+# -- dynamic: RaceObserver -----------------------------------------------------
+
+
+def test_race_observer_orders_chain():
+    g = TaskGraph("chain")
+    a = g.add(lambda: 1, name="a")
+    b = g.add(lambda: 2, name="b")
+    b.succeed(a)
+    obs = RaceObserver(g)
+    with Executor(2, observers=[obs]) as ex:
+        ex.run(g).result(10)
+    assert obs.happens_before(a, b)
+    assert not obs.happens_before(b, a)
+    assert not obs.concurrent(a, b)
+
+
+def test_race_observer_confirms_static_race():
+    g = TaskGraph("racy")
+    a, b = make_closure_pair(g)
+    findings = detect_races(g)
+    obs = RaceObserver(g)
+    with Executor(2, observers=[obs]) as ex:
+        ex.run(g).result(10)
+    assert obs.concurrent(a, b)
+    (report,) = obs.check(findings)
+    assert report["status"] == "confirmed-concurrent"
+
+
+def test_race_observer_check_unrun_graph_reports_not_observed():
+    g = TaskGraph("racy")
+    make_closure_pair(g)
+    obs = RaceObserver(g)  # never attached to a run
+    (report,) = obs.check(detect_races(g))
+    assert report["status"] == "not-observed"
+
+
+def test_race_observer_ignores_foreign_tasks():
+    g = TaskGraph("mine")
+    a = g.add(lambda: 1, name="a")
+    other = TaskGraph("other")
+    x = other.add(lambda: 2, name="x")
+    obs = RaceObserver(g)
+    obs.on_start(x, worker=0)  # must not blow up or pollute clocks
+    obs.on_finish(x, worker=0)
+    assert not obs.happens_before(x, a)
+
+
+@pytest.mark.parametrize("backend", ["serial", "thread"])
+def test_race_observer_backend_parity(backend):
+    g = TaskGraph("diamond")
+    src = g.add(lambda: 0, name="src")
+    l = g.add(lambda: 1, name="l")
+    r = g.add(lambda: 2, name="r")
+    join = g.add(lambda: 3, name="join")
+    l.succeed(src)
+    r.succeed(src)
+    join.succeed(l, r)
+    obs = RaceObserver(g)
+    with Executor(2, backend=backend, observers=[obs]) as ex:
+        ex.run(g).result(10)
+    # graph order holds on every backend; the branches stay unordered
+    assert obs.happens_before(src, join)
+    assert obs.concurrent(l, r)

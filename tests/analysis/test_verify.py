@@ -1,0 +1,160 @@
+"""§15 Executor(verify=) integration: modes, caching, consumers stay clean."""
+import warnings
+
+import pytest
+
+import repro.analysis.verify as verify_mod
+from repro.analysis.verify import GraphVerificationError, verify_graph
+from repro.core import Executor, TaskGraph
+
+
+def racy_graph(name="racy"):
+    g = TaskGraph(name)
+    total = 0
+
+    def wa():
+        nonlocal total
+        total += 1
+
+    def wb():
+        nonlocal total
+        total += 2
+
+    g.add(wa, name="wa")
+    g.add(wb, name="wb")
+    return g
+
+
+def clean_graph(name="clean"):
+    g = TaskGraph(name)
+    a = g.add(lambda: 21, name="a")
+    g.then(a, lambda x: x * 2, name="b")
+    return g
+
+
+# -- verify_graph facade -------------------------------------------------------
+
+
+def test_verify_graph_report_shape():
+    rep = verify_graph(clean_graph())
+    assert rep.ok and rep.errors == [] and "verified clean" in str(rep)
+    bad = verify_graph(racy_graph())
+    assert not bad.ok and bad.errors
+    with pytest.raises(GraphVerificationError) as exc:
+        bad.raise_if_errors()
+    assert exc.value.report is bad
+    assert "shared-state-race" in str(exc.value)
+
+
+# -- executor modes ------------------------------------------------------------
+
+
+def test_strict_raises_before_any_task_runs():
+    ran = []
+    g = racy_graph()
+    g.add(lambda: ran.append(1), name="probe")
+    with Executor(2, verify="strict") as ex:
+        with pytest.raises(GraphVerificationError):
+            ex.run(g)
+    assert ran == []  # the graph never reached the pool
+
+
+def test_warn_mode_warns_but_runs():
+    g = racy_graph()
+    with Executor(2, verify="warn") as ex:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            ex.run(g).result(10)
+    assert any("shared-state-race" in str(w.message) for w in caught)
+
+
+def test_off_is_default_and_silent():
+    g = racy_graph()
+    with Executor(2) as ex:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            ex.run(g).result(10)
+    assert caught == []
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="verify"):
+        Executor(1, verify="loud")
+
+
+def test_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "strict")
+    with Executor(2) as ex:
+        with pytest.raises(GraphVerificationError):
+            ex.run(racy_graph())
+    monkeypatch.setenv("REPRO_VERIFY", "off")
+    with Executor(2) as ex:  # env only sets the default; explicit arg wins
+        ex.run(clean_graph()).result(10)
+
+
+def test_strict_green_on_clean_graph_and_result_flows():
+    g = clean_graph()
+    with Executor(2, verify="strict") as ex:
+        ex.run(g).result(10)
+    assert g.tasks[1].result == 42
+
+
+# -- epoch caching -------------------------------------------------------------
+
+
+def test_verification_cached_per_structure(monkeypatch):
+    calls = []
+    real = verify_mod.verify_graph
+
+    def counting(graph, **kw):
+        calls.append(graph.name)
+        return real(graph, **kw)
+
+    monkeypatch.setattr(verify_mod, "verify_graph", counting)
+    g = clean_graph("cached")
+    with Executor(2, verify="warn") as ex:
+        ex.run(g).result(10)
+        ex.run(g).result(10)  # same structure: cached, no second pass
+        assert calls == ["cached"]
+        g.then(g.tasks[-1], lambda x: x, name="c")  # structural change bumps epoch
+        ex.run(g).result(10)
+        assert calls == ["cached", "cached"]
+
+
+def test_strict_failure_not_cached(monkeypatch):
+    g = racy_graph()
+    with Executor(2, verify="strict") as ex:
+        with pytest.raises(GraphVerificationError):
+            ex.run(g)
+        with pytest.raises(GraphVerificationError):
+            ex.run(g)  # unchanged broken graph re-raises, not silently cached
+
+
+# -- shipped consumers stay clean under strict ---------------------------------
+
+
+def test_prefetcher_lane_graphs_verify_strict():
+    from repro.data.pipeline import Prefetcher
+
+    class Src:
+        def batch(self, step):
+            return {"x": step}
+
+    pf = Prefetcher(Src(), backend="serial", depth=2)
+    try:
+        for lane in pf._lanes:
+            verify_graph(lane.graph).raise_if_errors()
+    finally:
+        pf.close()
+
+
+def test_checkpoint_template_graph_verifies_strict(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    try:
+        mgr.save_async(1, {"w": [1.0, 2.0]})
+        mgr.wait()
+        verify_graph(mgr._tpl_graph).raise_if_errors()
+    finally:
+        mgr.close()

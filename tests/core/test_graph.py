@@ -14,6 +14,49 @@ def test_cycle_detection():
         g.validate()
 
 
+def test_cycle_error_names_tasks_and_prints_path():
+    """Satellite regression: the CycleError message must name the offending
+    tasks and print the witness cycle path (not just a count)."""
+    g = TaskGraph("pipeline")
+    a = g.add(lambda: None, name="load")
+    b = g.add(lambda: None, name="transform")
+    c = g.add(lambda: None, name="store")
+    b.succeed(a)
+    c.succeed(b)
+    a.succeed(c)  # closes the strong cycle
+    with pytest.raises(CycleError) as exc:
+        g.validate()
+    msg = str(exc.value)
+    assert msg == (
+        "task graph 'pipeline': 3 task(s) unreachable from roots — "
+        "strong dependency cycle: load -> transform -> store -> load"
+    )
+
+
+def test_find_strong_cycle_ignores_weak_back_edges():
+    g = TaskGraph("loop")
+    entry = g.add(None, name="entry")
+    body = g.add(lambda: None, name="body")
+    body.after(entry)
+    cond = g.add(lambda: 0, kind="condition", name="more")
+    cond.after(body)
+    cond.precede(body)  # weak back-edge: a legal §10 loop
+    assert g.find_strong_cycle() is None
+    g.validate()  # weak cycles stay legal
+
+
+def test_edges_reports_strength_per_task_kind():
+    g = TaskGraph("edges")
+    a = g.add(lambda: None, name="a")
+    b = g.add(lambda: None, name="b")
+    b.succeed(a)
+    c = g.add(lambda: 0, kind="condition", name="c")
+    c.after(b)
+    c.precede(a)
+    edges = {(u.name, v.name): strong for u, v, strong in g.edges()}
+    assert edges == {("a", "b"): True, ("b", "c"): True, ("c", "a"): False}
+
+
 def test_roots_and_validate_ok():
     g = TaskGraph()
     a = g.add(lambda: None, name="a")

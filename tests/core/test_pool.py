@@ -7,9 +7,7 @@ import pytest
 from repro.core import (
     CancelledError,
     ChaseLevDeque,
-    FastDeque,
     NaiveThreadPool,
-    Task,
     TaskGraph,
     ThreadPool,
 )
@@ -362,8 +360,8 @@ def test_priority_inline_continuation_prefers_high():
         order = []
         g = TaskGraph()
         root = g.add(lambda: order.append("root"))
-        lo = g.add(lambda: order.append("lo"), priority=-1.0).succeed(root)
-        hi = g.add(lambda: order.append("hi"), priority=1.0).succeed(root)
+        g.add(lambda: order.append("lo"), priority=-1.0).succeed(root)
+        g.add(lambda: order.append("hi"), priority=1.0).succeed(root)
         pool.run(g)
         assert order == ["root", "hi", "lo"]
 

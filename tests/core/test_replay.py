@@ -13,7 +13,6 @@ The replay contract under test:
   the process backend replays with full §11 placement parity.
 """
 import threading
-import time
 
 import pytest
 

@@ -43,7 +43,9 @@ def random_dags(draw):
             SimTask(
                 name=f"t{i}",
                 cost=float(draw(st.integers(min_value=1, max_value=5))),
-                worker=draw(st.integers(min_value=0, max_value=num_workers - 1)) if pinned else None,
+                worker=(
+                    draw(st.integers(min_value=0, max_value=num_workers - 1)) if pinned else None
+                ),
                 priority=float(draw(st.integers(min_value=0, max_value=3))),
             )
         )

@@ -84,7 +84,7 @@ def test_unpicklable_spawned_remote_task_fails_its_task(pool):
     def spawn(rt):
         rt.add(_locked_body(), affinity="remote", name="bad-spawn")
 
-    sp = g.add(spawn, takes_runtime=True)
+    g.add(spawn, takes_runtime=True)
     for t in g.tasks:
         t.propagate_errors = False
     with pytest.raises(UnpicklableTaskError, match="bad-spawn"):

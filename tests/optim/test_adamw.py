@@ -45,7 +45,9 @@ def test_matches_numpy_reference(wd):
     np_p = dict(params)
     for step in range(5):
         grads = {k: rng.standard_normal(p.shape).astype(np.float32) for k, p in params.items()}
-        jp, state, _ = adamw_update(cfg, jnp.asarray(1e-2), jp, jax.tree.map(jnp.asarray, grads), state)
+        jp, state, _ = adamw_update(
+            cfg, jnp.asarray(1e-2), jp, jax.tree.map(jnp.asarray, grads), state
+        )
         np_p, m, v = numpy_adamw(cfg, 1e-2, np_p, grads, m, v, step)
     for k in params:
         np.testing.assert_allclose(np.asarray(jp[k]), np_p[k], atol=1e-5, rtol=1e-4)

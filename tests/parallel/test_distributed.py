@@ -4,7 +4,6 @@ These run in SUBPROCESSES with ``--xla_force_host_platform_device_count=8``
 so the main pytest process keeps its single-device jax (the dry-run is the
 only place that touches 512 devices, per the assignment).
 """
-import json
 import os
 import subprocess
 import sys

@@ -74,7 +74,9 @@ def test_model_axis_actually_used(arch):
     """TP must engage: a healthy fraction of parameter bytes shard on model."""
     cfg = get_config(arch)
     model = build_model(cfg)
-    specs = param_specs(model.abstract_params(), model.logical_axes(), rules_for(cfg), FakeMesh(data=16, model=16))
+    specs = param_specs(
+        model.abstract_params(), model.logical_axes(), rules_for(cfg), FakeMesh(data=16, model=16)
+    )
     flat_p = jax.tree.leaves(model.abstract_params())
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     total = sharded = 0
@@ -95,6 +97,8 @@ def test_padding_waste_estimator():
         shape = (56, 128)
         dtype = np.dtype("float32")
 
-    waste = estimate_padding_waste({"w": Leaf()}, {"w": P("model", None)}, FakeMesh(data=16, model=16))
+    waste = estimate_padding_waste(
+        {"w": Leaf()}, {"w": P("model", None)}, FakeMesh(data=16, model=16)
+    )
     # 56 -> padded 64: 14.3% waste
     assert waste["waste_frac"] == pytest.approx(8 / 56)

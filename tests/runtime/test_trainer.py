@@ -1,10 +1,8 @@
 """End-to-end training-driver tests: loss goes down, checkpoints commit
 atomically, failure injection restarts and resumes bit-exact."""
 import glob
-import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
