@@ -1,0 +1,125 @@
+"""Seeded socket chaos fingerprint: the CI artifact for §16 determinism.
+
+Runs the same seeded chaos battery as ``tests/dist/test_socket_chaos.py``
+— a fan-out of idempotent retryable tasks on a live :class:`SocketPool`
+under a :class:`FaultInjector` mixing injected failures, delays and
+**real worker kills** — twice on fresh pools, and verifies the injected
+schedules are **byte-identical** before writing the digest.
+
+The injector keys every decision on ``(seed, task, occurrence)``, so two
+runs can only diverge if the *pool* makes occurrence counts
+interleaving-dependent (e.g. a kill swallowed because the monitor
+respawned the worker before the dispatcher noticed). The fingerprint is
+therefore a transport-determinism canary, uploaded per CI run so a
+diverging schedule is diffable across commits, not just a red X.
+
+Output JSON: ``{seed, tasks, fingerprint, counts, schedule, stats}``
+where ``fingerprint`` is a blake2b digest of the canonical schedule
+serialization and ``counts`` tallies faults by kind. Exit 1 when the two
+runs disagree, when any fault kind never fired (a battery that injected
+nothing certifies nothing), or when either run returns wrong values.
+
+    PYTHONPATH=src python benchmarks/chaos_fingerprint.py \
+        --seed 2026 --out benchmarks/artifacts/chaos_fingerprint.json
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+from repro.core import ChaosError, Executor, FaultInjector, RetryPolicy, TaskGraph
+from repro.dist import SocketPool, WorkerDiedError
+
+_POLICY = RetryPolicy(
+    max_attempts=10, backoff=0.0, retry_on=(ChaosError, WorkerDiedError)
+)
+_CHAOS = dict(fail_rate=0.2, delay_rate=0.08, kill_rate=0.1, delay_s=0.001)
+
+
+def run_battery(seed: int, ntasks: int) -> tuple[list, list, dict]:
+    """One full battery on a fresh pool -> (schedule, values, stats)."""
+    with SocketPool(2, name="ci-chaos-sock") as pool:
+        inj = FaultInjector(
+            seed=seed, match=lambda t: (t.name or "").startswith("k:"), **_CHAOS
+        )
+        g = TaskGraph("sock-chaos")
+        tasks = [
+            g.add(lambda i=i: i * i, name=f"k:{i}", retry=_POLICY, idempotent=True)
+            for i in range(ntasks)
+        ]
+        sink = g.gather(tasks, name="collect")
+        with inj.on(pool):
+            Executor(pool=pool).run(g).result(180)
+        return inj.schedule(), list(sink.result), pool.stats()
+
+
+def fingerprint(schedule: list) -> str:
+    """Canonical digest of an injected-fault schedule."""
+    blob = json.dumps(schedule, separators=(",", ":")).encode()
+    return hashlib.blake2b(blob, digest_size=16).hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=2026)
+    ap.add_argument("--tasks", type=int, default=24)
+    ap.add_argument(
+        "--out",
+        default=str(
+            pathlib.Path(__file__).parent / "artifacts" / "chaos_fingerprint.json"
+        ),
+    )
+    args = ap.parse_args()
+
+    failures: list[str] = []
+    expected = [i * i for i in range(args.tasks)]
+    runs = [run_battery(args.seed, args.tasks) for _ in range(2)]
+    for which, (_sched, values, _stats) in zip("ab", runs):
+        if values != expected:
+            failures.append(f"run {which} returned wrong values")
+
+    (sched_a, _va, stats_a), (sched_b, _vb, _sb) = runs
+    blob_a = json.dumps(sched_a, separators=(",", ":")).encode()
+    blob_b = json.dumps(sched_b, separators=(",", ":")).encode()
+    if blob_a != blob_b:
+        failures.append(
+            f"schedules diverged: {fingerprint(sched_a)} != {fingerprint(sched_b)}"
+        )
+
+    counts = {"fail": 0, "delay": 0, "kill": 0}
+    for _name, _occ, kind in sched_a:
+        counts[kind] += 1
+    for kind, n in counts.items():
+        if n == 0:
+            failures.append(f"no {kind} fault ever fired — nothing certified")
+
+    payload = {
+        "seed": args.seed,
+        "tasks": args.tasks,
+        "fingerprint": fingerprint(sched_a),
+        "counts": counts,
+        "schedule": sched_a,
+        "stats": {
+            k: v
+            for k, v in stats_a.items()
+            if isinstance(v, (int, float, str, bool))
+        },
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=1))
+
+    print(f"seed {args.seed}: {len(sched_a)} injected faults {counts}")
+    print(f"fingerprint {payload['fingerprint']} (identical across both runs)")
+    print(f"wrote {out}")
+    if failures:
+        print("\nFAIL: " + "; ".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

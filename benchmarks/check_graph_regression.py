@@ -38,6 +38,18 @@ rows from failing on jitter — at ~1 µs overheads a 1.5× ratio is smaller
 than CI-runner noise, while the regression class this gate exists for
 (a lock back on the task path) shows up at 5–10 µs.
 
+The §16 socket gate runs entirely inside the fresh payload and never
+passes vacuously: every shape named in ``--socket-shapes`` (default
+``chain,cpu-bound`` — pass an empty string to disarm) must carry a
+``ws-socket`` row, the cpu-bound socket row must finish within
+``--max-socket-vs-process``× of the same run's ``ws-process`` wall (the
+transport may tax compute, not swallow it), and the chain socket row's
+``us_per_task`` — the pure per-task TCP round-trip — must stay under
+``--max-socket-us-per-task``. Both bounds are deliberately generous
+sanity rails for shared runners: the regression class they exist for
+(a serialized dispatcher, a lost-wakeup stall in the slot handoff, a
+cache gone quadratic) shows up as a 10–100× blowout, not a 2× dip.
+
 The §13 serve gate (``--serve-baseline`` + ``--serve-new``, both required
 to arm it) reads ``serve_bench`` payloads and fails when any of:
 
@@ -168,6 +180,49 @@ def serve_gate(args) -> list[str]:
     return failures
 
 
+def socket_gate(payload: dict, args) -> list[str]:
+    """§16 socket-transport gate (module docs). Returns failure labels."""
+    wanted = [s.strip() for s in args.socket_shapes.split(",") if s.strip()]
+    if not wanted:
+        return []
+    failures: list[str] = []
+    sock: dict[str, dict] = {}
+    proc_wall: dict[str, float] = {}
+    for row in payload["rows"]:
+        prefix = shape_prefix(row["bench"])
+        if row.get("executor") == "ws-socket":
+            sock[prefix] = row
+        elif row.get("executor") == "ws-process":
+            proc_wall[prefix] = row["wall_ms"]
+    for shape in wanted:
+        row = sock.get(shape)
+        if row is None:
+            print(f"FAIL: socket: no ws-socket {shape} row in the fresh run")
+            failures.append(f"socket {shape} (missing)")
+            continue
+        if shape in proc_wall:
+            ratio = row["wall_ms"] / proc_wall[shape]
+            limit = args.max_socket_vs_process
+            verdict = "ok" if ratio <= limit else "REGRESSION"
+            print(
+                f"{shape:<18}ws-socket wall {ratio:.2f}x of ws-process "
+                f"(max {limit:.2f}x)  {verdict}"
+            )
+            if ratio > limit:
+                failures.append(f"socket {shape} vs process")
+        else:
+            per_task = row["us_per_task"]
+            limit = args.max_socket_us_per_task
+            verdict = "ok" if per_task <= limit else "REGRESSION"
+            print(
+                f"{shape:<18}ws-socket {per_task:.1f}us/task round-trip "
+                f"(max {limit:.1f}us)  {verdict}"
+            )
+            if per_task > limit:
+                failures.append(f"socket {shape} round-trip")
+    return failures
+
+
 def process_speedups(payload: dict) -> dict[str, float]:
     """Map shape-prefix -> speedup_vs_thread for ws-process rows."""
     return {
@@ -210,6 +265,26 @@ def main() -> int:
         default=str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_graph.json"),
         help="committed full-size BENCH_graph.json for the absolute replay "
         "bound (pass an empty string to skip)",
+    )
+    ap.add_argument(
+        "--socket-shapes",
+        default="chain,cpu-bound",
+        help="comma-separated shape prefixes that must carry a ws-socket row "
+        "in the fresh run (§16 gate; empty string disarms it)",
+    )
+    ap.add_argument(
+        "--max-socket-vs-process",
+        type=float,
+        default=3.0,
+        help="max allowed ratio of the cpu-bound ws-socket wall over the same "
+        "run's ws-process wall (generous rail; see module docs)",
+    )
+    ap.add_argument(
+        "--max-socket-us-per-task",
+        type=float,
+        default=2000.0,
+        help="ceiling on the chain ws-socket us_per_task — the per-task TCP "
+        "round-trip (generous rail; see module docs)",
     )
     ap.add_argument(
         "--serve-baseline",
@@ -324,14 +399,19 @@ def main() -> int:
             if ovh > args.replay_chain_max_us:
                 replay_failures.append(f"{shape} (committed)")
 
+    # §16 gate: the socket transport holds its rails inside the fresh run
+    socket_failures = socket_gate(new_payload, args)
+
     # §13 gate: paged serving must hold throughput and tail latency
     serve_failures: list[str] = []
     if args.serve_baseline:
         serve_failures = serve_gate(args)
 
-    if failures or speedup_failures or replay_failures or serve_failures:
+    if failures or speedup_failures or replay_failures or serve_failures or socket_failures:
         if replay_failures:
             print(f"\nFAIL: §12 replay gate: {', '.join(replay_failures)}")
+        if socket_failures:
+            print(f"\nFAIL: §16 socket gate: {', '.join(socket_failures)}")
         if serve_failures:
             print(f"\nFAIL: §13 serve gate: {', '.join(serve_failures)}")
         if failures:

@@ -25,6 +25,13 @@ shape runs on:
   ws-process  the same scheduler, bodies in worker processes
               (repro.dist.ProcessPool; cpu-bound shape only — per-task
               IPC buys nothing for no-op bodies)
+  ws-socket   the same scheduler, bodies on TCP-connected workers
+              (repro.dist.SocketPool, DESIGN.md §16). Two rows: the
+              cpu-bound shape (does compute survive the framed-pickle
+              transport? carries ``speedup_vs_thread`` like ws-process)
+              and the plain chain (per-task round-trip cost of the
+              socket transport itself — its ``us_per_task`` is the §16
+              transport-overhead figure the regression gate bounds)
   stdlib      concurrent.futures.ThreadPoolExecutor driving the same
               graphs (static DAG shapes only: no weak-edge/subflow
               dispatch)
@@ -195,6 +202,10 @@ def build_cpu_bound(g: TaskGraph, width: int, iters: int) -> None:
 STDLIB_UNSUPPORTED = ("condition-loop", "subflow-fanout", "cpu-bound")
 # the one shape whose bodies are heavy enough to amortize per-job IPC
 PROCESS_SHAPES = ("cpu-bound",)
+# §16 socket rows: cpu-bound (compute over the wire, speedup figure) and
+# the plain chain (pure per-task transport cost). Exact prefixes — the
+# chain-dataflow shape would measure the same wire twice.
+SOCKET_SHAPES = ("cpu-bound", "chain")
 # steady-state shapes that get a §12 ws-replay row ("chain" also matches
 # chain-dataflow); subflow-fanout is spawn-dominated and cpu-bound is
 # compute-dominated — replay rows there would measure nothing new
@@ -294,6 +305,13 @@ def run_bench(
             from repro.dist import ProcessPool
 
             executors.append(("ws-process", cores, lambda: ProcessPool(cores)))
+        if shape.split("(", 1)[0] in SOCKET_SHAPES:
+            from repro.dist import SocketPool
+
+            # cpu-bound wants real parallelism; the chain is sequential by
+            # construction, so a small pool measures the same round-trip
+            sw = cores if shape.startswith(PROCESS_SHAPES) else 2
+            executors.append(("ws-socket", sw, lambda sw=sw: SocketPool(sw)))
         if not shape.startswith(STDLIB_UNSUPPORTED):
             executors.append(("stdlib", NUM_THREADS, lambda: StdlibExecutor(NUM_THREADS)))
         executors.append(("serial", 1, lambda: SerialExecutor()))
@@ -342,7 +360,9 @@ def run_bench(
             if b is None or r["wall_ms"] < b:
                 best_thread[r["bench"]] = r["wall_ms"]
     for r in rows:
-        if r["executor"] == "ws-process":
+        if r["executor"] in ("ws-process", "ws-socket") and r["bench"].startswith(
+            PROCESS_SHAPES
+        ):
             if r["bench"] in best_thread:
                 r["speedup_vs_thread"] = best_thread[r["bench"]] / r["wall_ms"]
             floor = serial_wall.get(r["bench"])

@@ -83,8 +83,12 @@ def _iter_docstrings(mod: Any) -> Iterator[tuple[str, str, list]]:
 
 
 def _resolve(ref: str, mod: Any, extra_contexts: list = ()) -> bool:
-    """Can ``ref`` (role target, possibly ``~``-prefixed and dotted) be
-    resolved to a real object?"""
+    """Can ``ref`` (role target, possibly ``~``-prefixed and dotted, or
+    the explicit-title form ``Text <target>``) be resolved to a real
+    object?"""
+    titled = re.fullmatch(r".*<(.+)>", ref, flags=re.DOTALL)
+    if titled:
+        ref = titled.group(1)
     name = ref.lstrip("~")
     contexts: list[Any] = [mod, *extra_contexts]
     for pkg_name in PACKAGES + ("repro",):

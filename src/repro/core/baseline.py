@@ -359,9 +359,14 @@ class SerialPool:
         while stack:
             t = stack.pop()
             rt: Any = None
-            if self._observers:
-                self._notify("on_start", t, 0)
             while True:  # §14 retries happen inline — there is one thread
+                if self._observers:
+                    # §8 ledger parity with ThreadPool: one on_start per
+                    # *attempt* (a retry re-dispatches there). on_submit
+                    # stays structurally zero — it is a queue-push event,
+                    # and the serial baseline has no queue (same rule as
+                    # inline continuations on the thread backend).
+                    self._notify("on_start", t, 0)
                 _current.task = t
                 _current.deadline = (
                     None if t.timeout is None else time.monotonic() + t.timeout

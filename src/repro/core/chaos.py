@@ -190,17 +190,27 @@ class FaultInjector:
             task.run()
 
     def _kill(self, task: Task, index: int) -> None:
-        """Worker loss: real process kill on ProcessPool (the body's send
-        then hits a dead pipe), synthetic pre-start ``WorkerDiedError``
-        elsewhere — same §14 retry semantics either way."""
+        """Worker loss: real process kill on the process/socket backends
+        (the body's dispatch then hits a dead transport), synthetic
+        pre-start ``WorkerDiedError`` elsewhere — including socket slots
+        bound to *remote* workers (``_procs[index] is None``), where there
+        is no local process to kill — same §14 retry semantics every way."""
         from repro.dist.process_pool import WorkerDiedError  # lazy: no dist dep
 
         pool = self._pool
         procs = getattr(pool, "_procs", None)
-        if procs is not None and index is not None and 0 <= index < len(procs):
-            procs[index].kill()
-            procs[index].join()  # pipe closed before dispatch: the offload
-            return  # below deterministically fails pre-start (send side)
+        if (
+            procs is not None
+            and index is not None
+            and 0 <= index < len(procs)
+            and procs[index] is not None
+        ):
+            try:
+                procs[index].kill()
+                procs[index].join()  # transport dead before dispatch: the
+                return  # offload below deterministically fails pre-start
+            except ValueError:  # the pool retired this process under us
+                pass
         raise WorkerDiedError(
             f"injected worker loss before {task.name!r} started", started=False
         )

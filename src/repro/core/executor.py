@@ -67,13 +67,20 @@ class Executor:
           scheduler, with task bodies shipped to worker processes so
           CPU-bound pure-Python bodies actually run in parallel. Large
           array edge values cross via shared memory.
+        * ``"socket"`` — :class:`repro.dist.SocketPool`: the same
+          scheduler again, with bodies shipped over TCP to connected
+          worker processes — locally forked by default, or joined from
+          other hosts (``python -m repro.dist.remote_worker --connect
+          host:port``). Large arrays cross each connection once via a
+          content-hashed transfer cache (DESIGN.md §16).
         * ``"serial"`` — :class:`~repro.core.SerialPool`: everything on
           the calling thread; the zero-overhead floor and a
           deterministic debugging backend.
 
         Every graph kind — DAGs, condition loops, subflows, ``run_until``,
-        the asyncio bridge — behaves identically on all three (the
-        backend-parametrized executor test suite enforces it).
+        the asyncio bridge — behaves identically on all four (the
+        backend-parametrized conformance suite in ``tests/dist``
+        enforces it).
     pool:
         Adopt an existing (possibly shared) pool instead of owning one;
         ``close()`` then leaves it running. Mutually exclusive with
@@ -137,6 +144,8 @@ class Executor:
             self.pool = pool
             if isinstance(pool, SerialPool):
                 self.backend = "serial"
+            elif hasattr(pool, "_caches"):  # dist.SocketPool (also has _procs)
+                self.backend = "socket"
             elif hasattr(pool, "_procs"):  # dist.ProcessPool
                 self.backend = "process"
             else:
@@ -149,20 +158,25 @@ class Executor:
         self.backend = backend
         if backend == "serial":
             self.pool = SerialPool(observers=observers)
-        elif backend in ("thread", "process"):
+        elif backend in ("thread", "process", "socket"):
             kwargs: dict[str, Any] = {"name": name, "observers": observers}
             if deque_cls is not None:
                 kwargs["deque_cls"] = deque_cls
             kwargs.update(backend_kwargs)
             if backend == "thread":
                 self.pool = ThreadPool(num_threads, **kwargs)
-            else:
+            elif backend == "process":
                 from repro.dist import ProcessPool  # deferred: core stays below dist
 
                 self.pool = ProcessPool(num_threads, **kwargs)
+            else:
+                from repro.dist import SocketPool  # deferred: core stays below dist
+
+                self.pool = SocketPool(num_threads, **kwargs)
         else:
             raise ValueError(
-                f"unknown backend {backend!r}; expected 'thread', 'process' or 'serial'"
+                f"unknown backend {backend!r}; expected 'thread', 'process', "
+                "'socket' or 'serial'"
             )
         self._own_pool = True
 

@@ -238,14 +238,14 @@ class Prefetcher:
     """Ordered prefetching over condition-looped lane graphs (module docs).
 
     ``backend`` selects the execution backend for an *owned* pool (the
-    same ``"thread"`` / ``"process"`` / ``"serial"`` switch as
-    :class:`~repro.core.Executor`; ignored when ``pool`` is given). With
-    ``backend="process"`` each lane's transform body runs in a worker
-    process — CPU-bound transforms (tokenization, augmentation,
-    numpy-side preprocessing) overlap truly in parallel. Pass a
-    numpy-level ``put_fn`` in that case: the default jax ``device_put``
-    transform must talk to this process's devices, so it belongs on the
-    thread backend.
+    same ``"thread"`` / ``"process"`` / ``"socket"`` / ``"serial"``
+    switch as :class:`~repro.core.Executor`; ignored when ``pool`` is
+    given). With ``backend="process"`` (or ``"socket"``) each lane's
+    transform body runs in a worker process — CPU-bound transforms
+    (tokenization, augmentation, numpy-side preprocessing) overlap truly
+    in parallel. Pass a numpy-level ``put_fn`` in that case: the default
+    jax ``device_put`` transform must talk to this process's devices, so
+    it belongs on the thread backend.
     """
 
     def __init__(
@@ -272,20 +272,20 @@ class Prefetcher:
             self._exec = Executor(2, backend=backend, name="prefetch")
             self.pool = self._exec.pool
             self._own_pool = True
-        if self._exec.backend == "process" and put_fn is None:
-            # checked against the *resolved* backend (a ProcessPool handed
-            # in via pool= must not bypass it): the default transform is
-            # jax.device_put-shaped — it must talk to THIS process's
-            # devices and would run jax post-fork, both wrong in a worker.
-            # Fail loudly instead of silently delivering host numpy
-            # batches transformed in a forked child.
+        if self._exec.backend in ("process", "socket") and put_fn is None:
+            # checked against the *resolved* backend (a ProcessPool or
+            # SocketPool handed in via pool= must not bypass it): the
+            # default transform is jax.device_put-shaped — it must talk to
+            # THIS process's devices and would run jax post-fork, both
+            # wrong in a worker. Fail loudly instead of silently
+            # delivering host numpy batches transformed in a worker.
             if self._own_pool:
                 self._exec.close()
             raise ValueError(
-                'Prefetcher on a process backend requires an explicit numpy-'
-                "level put_fn: the default jax device_put transform belongs "
-                'on the thread backend (DESIGN.md §11). Pass put_fn=<numpy '
-                'transform>, or use backend="thread".'
+                f'Prefetcher on a {self._exec.backend} backend requires an '
+                "explicit numpy-level put_fn: the default jax device_put "
+                "transform belongs on the thread backend (DESIGN.md §11). "
+                'Pass put_fn=<numpy transform>, or use backend="thread".'
             )
         self.depth = max(1, depth)
         self.put_fn = put_fn or (lambda b: jax.tree.map(jax.numpy.asarray, b))

@@ -126,6 +126,11 @@ class ProcessPool(ThreadPool):
     arena_threshold:
         Minimum array size (bytes) to route through shared memory instead
         of pickle (``repro.dist.shm_arena.DEFAULT_THRESHOLD`` = 32 KiB).
+    arena_max_pooled:
+        Cap on pooled arena segments (``None`` = unbounded). At the cap,
+        oversize argument arrays degrade to one-shot ephemeral segments
+        instead of growing the pool — see :meth:`ShmArena.stats
+        <repro.dist.shm_arena.ShmArena.stats>`.
     mp_context:
         ``"fork"`` (default where available — cheap, inherits imported
         modules so lambdas defined anywhere resolve) or ``"spawn"``
@@ -148,6 +153,7 @@ class ProcessPool(ThreadPool):
         num_workers: Optional[int] = None,
         *,
         arena_threshold: int = DEFAULT_THRESHOLD,
+        arena_max_pooled: Optional[int] = None,
         mp_context: Optional[str] = None,
         name: str = "repro-procpool",
         observers: Sequence[Any] = (),
@@ -160,7 +166,7 @@ class ProcessPool(ThreadPool):
             "fork" if "fork" in mp.get_all_start_methods() else "spawn"
         )
         self._mp = mp.get_context(ctx_name)
-        self._arena = ShmArena(arena_threshold)
+        self._arena = ShmArena(arena_threshold, max_pooled=arena_max_pooled)
         self._worker_name = name
         self._conns: list[Any] = [None] * n
         self._procs: list[Any] = [None] * n
@@ -365,18 +371,29 @@ class ProcessPool(ThreadPool):
                 old_proc.join(timeout=0.1)
                 if old_proc.is_alive():  # pipe broke but process wedged
                     old_proc.terminate()
+                    old_proc.join(timeout=1.0)
+                try:
+                    # release the dead worker's sentinel + pipe FDs *now* —
+                    # parking them on the GC leaks FDs for the life of a
+                    # draining pool (kill/respawn churn under chaos)
+                    old_proc.close()
+                except Exception:
+                    pass
             self._start_worker(index)
 
     # -- lifecycle / stats -------------------------------------------------------
 
     def stats(self) -> dict[str, int]:
         """Base pool counters plus ``remote_jobs`` (bodies executed in
-        worker processes), ``worker_restarts`` (respawns after death) and
-        ``worker_kills`` (§14 watchdog SIGKILLs of timed-out workers)."""
+        worker processes), ``worker_restarts`` (respawns after death),
+        ``worker_kills`` (§14 watchdog SIGKILLs of timed-out workers) and
+        the nested ``arena`` segment-recycling counters (see
+        :meth:`ShmArena.stats <repro.dist.shm_arena.ShmArena.stats>`)."""
         out = super().stats()
         out["remote_jobs"] = sum(self._remote_jobs)
         out["worker_restarts"] = sum(self._restarts)
         out["worker_kills"] = sum(self._worker_kills)
+        out["arena"] = self._arena.stats()
         return out
 
     def close(self) -> None:
@@ -398,6 +415,10 @@ class ProcessPool(ThreadPool):
             if proc.is_alive():  # pragma: no cover - wedged worker safety net
                 proc.terminate()
                 proc.join(timeout=1.0)
+            try:
+                proc.close()  # release sentinel FDs with the pool, not the GC
+            except Exception:
+                pass
         for conn in self._conns:
             try:
                 conn.close()

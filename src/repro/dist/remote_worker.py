@@ -1,0 +1,294 @@
+"""Socket-worker entry point for the multi-host backend (DESIGN.md §16).
+
+The socket transport keeps the §9/§10/§12 scheduler wholly in the parent
+(exactly like the §11 process backend) and ships task *bodies* to worker
+processes connected over TCP — same host or remote. This module is the
+worker side: a plain loop over one duplex socket to its dispatcher thread
+in the parent, plus the pieces both ends share (framing, handshake
+constants) and two launchers:
+
+* ``python -m repro.dist.remote_worker --connect host:port [--workers N]``
+  — join a listening :class:`~repro.dist.socket_pool.SocketPool` from any
+  machine that can import this package;
+* :func:`spawn_workers` — fork-and-connect N local workers (what
+  ``SocketPool`` uses for single-host runs and tests).
+
+**Framing.** Every message is one length-prefixed frame: a 4-byte
+big-endian payload length followed by a pickled payload
+(:class:`FramedConn`). Frames on one socket are strictly ordered, which is
+what lets the per-connection transfer cache
+(:class:`~repro.dist.shm_arena.TransferCache`) mark an array digest as
+peer-resident the moment the frame carrying its bytes is queued.
+
+**Handshake.** The worker speaks first::
+
+    worker -> parent   {"magic": MAGIC, "version": PROTOCOL_VERSION,
+                        "caps": {pid, host, cpu_count, python}}
+    parent -> worker   {"ok": True, "version": ..., "threshold": ...,
+                        "heartbeat_s": ...}          # or {"ok": False, ...}
+
+A version mismatch (or garbage on the port) is rejected before the
+connection ever reaches a scheduler slot.
+
+**Job protocol** (one in-flight job per worker — the dispatcher thread
+blocks on the reply, heartbeats interleave)::
+
+    parent -> worker   ("job", job_id, fn_wire, args_wire)   run this body
+    parent -> worker   ("bye",)                               shut down
+    worker -> parent   ("res", job_id, True,  result_wire)    body returned
+    worker -> parent   ("res", job_id, False, exception_bytes) body raised
+    worker -> parent   ("hb",)                                 liveness pulse
+
+``fn_wire``/``args_wire``/``result_wire`` are ``repro.dist.wire`` payloads;
+arrays at/above the threshold ride the content-hashed transfer cache
+instead of being re-pickled into every frame.
+
+A worker catches *everything* a body raises — including ``SystemExit`` /
+``KeyboardInterrupt`` — and reports it as a task failure; only socket loss
+(parent gone) or the shutdown sentinel ends the loop. A worker that dies
+anyway (``os._exit``, OOM kill, a severed link) surfaces in the parent as
+:class:`~repro.dist.process_pool.WorkerDiedError` on the in-flight task,
+never as a hang: the heartbeat thread keeps pulsing even while a body
+runs, so a silent peer is indistinguishable from a dead one only until
+the liveness window expires.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import select
+import socket
+import struct
+import sys
+import threading
+from typing import Any, Optional
+
+from .shm_arena import DEFAULT_THRESHOLD, TransferCache
+from .wire import dumps_exception, dumps_value, loads_args, loads_fn
+
+__all__ = [
+    "MAGIC",
+    "PROTOCOL_VERSION",
+    "FramedConn",
+    "worker_caps",
+    "run_worker",
+    "spawn_workers",
+]
+
+MAGIC = "repro-dist"
+PROTOCOL_VERSION = 1
+DEFAULT_HEARTBEAT_S = 0.25
+
+_HDR = struct.Struct("!I")
+
+
+class FramedConn:
+    """Length-prefixed pickle frames over one TCP socket.
+
+    ``send`` is thread-safe (the worker's heartbeat thread shares the
+    socket with its job loop); ``recv`` is single-reader by contract —
+    exactly one thread reads a connection at a time (the §16 dispatcher
+    holds the slot's I/O lock, the idle monitor only reads when it can
+    take that lock). A ``recv`` that times out mid-frame leaves the
+    stream desynchronized, which is fine: a timeout is a liveness verdict
+    and the connection is discarded, never reused.
+    """
+
+    def __init__(self, sock: socket.socket) -> None:
+        try:
+            # frames are small and latency-bound: defeat Nagle batching
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass  # non-TCP transport (AF_UNIX socketpair in tests)
+        self._sock = sock
+        self._send_lock = threading.Lock()
+
+    def send(self, obj: Any) -> None:
+        payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._send_lock:
+            self._sock.sendall(_HDR.pack(len(payload)) + payload)
+
+    def _read_exact(self, n: int) -> bytes:
+        buf = bytearray()
+        while len(buf) < n:
+            chunk = self._sock.recv(n - len(buf))
+            if not chunk:
+                raise EOFError("peer closed the connection")
+            buf += chunk
+        return bytes(buf)
+
+    def recv(self, timeout: Optional[float] = None) -> Any:
+        """Next frame's payload. Raises ``EOFError`` on orderly close,
+        ``TimeoutError`` past ``timeout`` (the §16 liveness window) and
+        ``OSError`` on a severed link."""
+        self._sock.settimeout(timeout)
+        (length,) = _HDR.unpack(self._read_exact(_HDR.size))
+        return pickle.loads(self._read_exact(length))
+
+    def poll(self) -> bool:
+        """True when a frame (or EOF) is ready to read without blocking."""
+        r, _w, _x = select.select([self._sock], [], [], 0)
+        return bool(r)
+
+    def fileno(self) -> int:
+        return self._sock.fileno()
+
+    def kill(self) -> None:
+        """Sever the link abruptly (both directions) — the chaos harness's
+        and the §16 watchdog's connection-loss primitive."""
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.close()
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def worker_caps() -> dict:
+    """This host's capability record, sent in the handshake hello."""
+    return {
+        "pid": os.getpid(),
+        "host": socket.gethostname(),
+        "cpu_count": os.cpu_count(),
+        "python": tuple(sys.version_info[:3]),
+    }
+
+
+def run_worker(
+    host: str,
+    port: int,
+    *,
+    connect_timeout: float = 20.0,
+) -> int:
+    """Connect to a listening ``SocketPool`` and serve jobs until the
+    shutdown sentinel or connection loss. Returns a process exit code
+    (0 = orderly shutdown, 1 = handshake rejected).
+    """
+    sock = socket.create_connection((host, port), timeout=connect_timeout)
+    conn = FramedConn(sock)
+    conn.send({"magic": MAGIC, "version": PROTOCOL_VERSION, "caps": worker_caps()})
+    try:
+        ack = conn.recv(timeout=connect_timeout)
+    except (EOFError, OSError, TimeoutError):
+        conn.close()
+        return 1
+    if not (isinstance(ack, dict) and ack.get("ok")):
+        conn.close()
+        return 1
+    cache = TransferCache(ack.get("threshold", DEFAULT_THRESHOLD))
+    heartbeat_s = ack.get("heartbeat_s", DEFAULT_HEARTBEAT_S)
+
+    stop = threading.Event()
+
+    def _pulse() -> None:
+        # keeps pulsing while a body runs, so the parent can tell "slow
+        # body" from "dead worker" — the §16 liveness signal
+        while not stop.wait(heartbeat_s):
+            try:
+                conn.send(("hb",))
+            except OSError:
+                return
+
+    threading.Thread(target=_pulse, name="repro-sock-hb", daemon=True).start()
+    try:
+        while True:
+            try:
+                msg = conn.recv(timeout=None)
+            except (EOFError, OSError):  # parent died or closed the link
+                return 0
+            if msg is None or msg[0] == "bye":  # orderly shutdown
+                return 0
+            _kind, job_id, fn_wire, args_wire = msg
+            try:
+                fn = loads_fn(fn_wire, cache)
+                args = loads_args(args_wire, cache)
+                result = fn(*args)
+                reply = ("res", job_id, True, dumps_value(result, cache))
+            except BaseException as exc:  # noqa: BLE001 - body verdicts travel home
+                reply = ("res", job_id, False, dumps_exception(exc))
+            try:
+                conn.send(reply)
+            except OSError:  # parent went away mid-reply
+                return 0
+    finally:
+        stop.set()
+        cache.close()
+        conn.close()
+
+
+def spawn_workers(
+    n: int,
+    address: tuple,
+    *,
+    mp_context: Optional[str] = None,
+    name: str = "repro-sockworker",
+) -> list:
+    """Fork-and-connect ``n`` local worker processes against ``address``
+    (``(host, port)``) — the single-host convenience ``SocketPool`` uses.
+
+    ``fork`` (default where available) inherits imported modules, so
+    lambdas defined anywhere resolve in the worker exactly as on the §11
+    process backend; ``spawn`` requires importable bodies. Returns the
+    started ``multiprocessing.Process`` objects.
+    """
+    import multiprocessing as mp
+    import warnings
+
+    ctx_name = mp_context or ("fork" if "fork" in mp.get_all_start_methods() else "spawn")
+    ctx = mp.get_context(ctx_name)
+    host, port = address
+    procs = []
+    with warnings.catch_warnings():
+        # same rationale as ProcessPool._start_worker: the worker loop
+        # never touches jax post-fork
+        warnings.filterwarnings("ignore", message=".*fork.*", category=RuntimeWarning)
+        for i in range(n):
+            proc = ctx.Process(
+                target=run_worker, args=(host, port), name=f"{name}-{i}", daemon=True
+            )
+            proc.start()
+            procs.append(proc)
+    return procs
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dist.remote_worker",
+        description="Join a listening repro.dist.SocketPool as a worker host.",
+    )
+    ap.add_argument(
+        "--connect",
+        required=True,
+        metavar="HOST:PORT",
+        help="address the SocketPool parent is listening on",
+    )
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=1,
+        help="worker processes to run from this host (default 1)",
+    )
+    args = ap.parse_args(argv)
+    host, _, port_s = args.connect.rpartition(":")
+    if not host or not port_s.isdigit():
+        ap.error(f"--connect expects HOST:PORT, got {args.connect!r}")
+    host, port = host.strip("[]"), int(port_s)
+    if args.workers == 1:
+        return run_worker(host, port)
+    procs = spawn_workers(args.workers, (host, port))
+    code = 0
+    for proc in procs:
+        proc.join()
+        code = max(code, proc.exitcode or 0)
+        proc.close()
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

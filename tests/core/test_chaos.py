@@ -26,13 +26,13 @@ from repro.core import (
 )
 from repro.dist.process_pool import WorkerDiedError
 
-BACKENDS = ("serial", "thread", "process")
+BACKENDS = ("serial", "thread", "process", "socket")
 
 
 @pytest.fixture(params=BACKENDS)
 def ex(request):
-    """One Executor per backend — the whole suite runs on all three."""
-    n = 2 if request.param == "process" else 4
+    """One Executor per backend — the whole suite runs on all four."""
+    n = 2 if request.param in ("process", "socket") else 4
     with Executor(n, backend=request.param) as e:
         yield e
 
@@ -325,14 +325,15 @@ def test_chaos_same_seed_same_schedule(ex):
 def test_chaos_schedule_identical_across_backends():
     outcomes = {}
     for backend in BACKENDS:
-        with Executor(2 if backend == "process" else 4, backend=backend) as e:
+        n = 2 if backend in ("process", "socket") else 4
+        with Executor(n, backend=backend) as e:
             inj = FaultInjector(seed=123, match=lambda t: (t.name or "").startswith("c:"),
                                 **_CHAOS)
             g, sink = _chaos_graph()
             with inj.on(e.pool):
                 e.run(g).result(60)
             outcomes[backend] = (inj.schedule(), list(sink.result))
-    assert outcomes["serial"] == outcomes["thread"] == outcomes["process"]
+    assert len(set(map(repr, outcomes.values()))) == 1, outcomes
     assert outcomes["serial"][1] == [i + 1 for i in range(30)]
 
 

@@ -1,17 +1,15 @@
-"""Executor facade + §10 control flow, parametrized over every backend.
+"""Executor facade: thread-backend-specific behavior and plumbing.
 
-The ``ex`` fixture runs each test on the **serial**, **thread** and
-**process** backends (DESIGN.md §11): one suite, three executors, same
-semantics. Tests here follow the process-safe idioms the process backend
-demands — loop/convergence state lives in condition bodies (which always
-run scheduler-side) or flows along dataflow edges, and assertions read
-parent-side task state (``result`` / ``started`` / ``done``), never
-closure cells a remote body would have mutated in its own address space.
-
-Backend-specific behavior (cancellation timing, pool adoption, priority
-bands, wait_idle timeouts) uses the thread-only ``tex`` fixture below.
+The backend-*portable* executor matrix (lifecycle, priorities, conditions
+and weak cycles, subflows, counted completion, replay parity,
+retry/timeout/at-most-once, observer accounting) lives in
+``tests/dist/conformance.py``, where every test runs identically on the
+serial, thread, process and socket backends (DESIGN.md §11, §16). This
+file keeps what cannot be backend-parametrized: pool adoption and
+ownership, constructor validation, sub-millisecond cancellation timing
+(needs in-process closure cells), serial/plain-pool compatibility shims,
+``Future`` plumbing and ``to_dot`` rendering.
 """
-import asyncio
 import threading
 import time
 
@@ -28,16 +26,6 @@ from repro.core import (
     ThreadPool,
 )
 
-BACKENDS = ("serial", "thread", "process")
-
-
-@pytest.fixture(params=BACKENDS)
-def ex(request):
-    """One Executor per backend — the whole suite runs on all three."""
-    n = 2 if request.param == "process" else 4
-    with Executor(n, backend=request.param) as e:
-        yield e
-
 
 @pytest.fixture()
 def tex():
@@ -47,73 +35,8 @@ def tex():
 
 
 # ---------------------------------------------------------------------------
-# facade basics (all backends)
+# facade plumbing: ownership + validation
 # ---------------------------------------------------------------------------
-
-
-def test_run_callable_returns_future(ex):
-    assert ex.run(lambda: 6 * 7).result(10) == 42
-
-
-def test_run_single_task_resolves_to_result(ex):
-    t = Task(lambda: "payload")
-    t.propagate_errors = False
-    assert ex.run(t).result(10) == "payload"
-
-
-def test_run_graph_and_iterable(ex):
-    g = TaskGraph()
-    a = g.add(lambda: 3)
-    b = g.then(a, lambda x: x * x)
-    assert ex.run(g).result(10) is None
-    assert b.result == 9
-    # an anonymous iterable of tasks is wrapped in a graph; the dataflow
-    # edge proves t2 ran after t1 on any backend
-    t1 = Task(lambda: 20)
-    t2 = Task(lambda x: x + 1, takes_inputs=True)
-    t2.succeed(t1)
-    assert ex.run([t1, t2]).result(10) is None
-    assert t2.result == 21
-
-
-def test_submit_alias(ex):
-    assert ex.submit(lambda: "ok").result(10) == "ok"
-
-
-def test_run_failure_delivered_through_future(ex):
-    with pytest.raises(ValueError, match="boom"):
-        ex.run(lambda: (_ for _ in ()).throw(ValueError("boom"))).result(10)
-    # the backend stays healthy afterwards
-    assert ex.run(lambda: "still alive").result(10) == "still alive"
-
-
-def test_failure_propagates_along_dataflow_edges(ex):
-    g = TaskGraph()
-    bad = g.add(lambda: (_ for _ in ()).throw(RuntimeError("upstream died")))
-    down = g.then(bad, lambda x: x)
-    for t in g.tasks:
-        t.propagate_errors = False
-    with pytest.raises(RuntimeError, match="upstream died"):
-        ex.run(g).result(10)
-    assert isinstance(down.exception, RuntimeError)  # adopted, body skipped
-
-
-def test_run_graph_priority_overrides_non_explicit_bands(ex):
-    """run(graph, priority=) follows the ThreadPool.submit contract: every
-    task without an explicit band is promoted, explicit bands win.
-    (Serial ignores bands at runtime but records them identically.)"""
-    g = TaskGraph()
-    a = g.add(lambda: None)
-    b = a.then(lambda _x: None)
-    c = g.add(lambda: None, priority=-2.0)
-    ex.run(g, priority=3.0).result(10)
-    assert a.priority == b.priority == 3.0
-    assert c.priority == -2.0
-
-
-def test_wait_idle_after_work(ex):
-    ex.run(lambda: 1).result(10)
-    assert ex.wait_idle(10) is True
 
 
 def test_context_manager_closes_own_pool_only():
@@ -150,54 +73,8 @@ def test_wait_idle_reports_timeout_as_bool(tex):
 
 
 # ---------------------------------------------------------------------------
-# condition tasks: branching (all backends)
+# condition construction rules + shims
 # ---------------------------------------------------------------------------
-
-
-def test_condition_selects_single_branch(ex):
-    g = TaskGraph("branch")
-    src = g.add(lambda: None, name="src")
-    pick = g.add(lambda: 1, kind="condition", name="pick")
-    pick.after(src)
-    left = g.add(lambda: "L", name="left")
-    right = g.add(lambda: "R", name="right")
-    pick.precede(left, right)  # branch order = wiring order
-    assert ex.run(g).result(10) is None
-    # every member of a condition graph re-arms after running (clearing
-    # `started` for the next pass), so assert on results — rearm keeps them
-    assert right.result == "R"
-    assert left.result is None  # branch not taken
-
-
-def test_branch_not_taken_resets_cleanly_across_runs(ex):
-    """Un-run branches leave no residue: across run_count > 1 each run
-    releases exactly the branch its condition names."""
-    sel = {"v": 0}
-    g = TaskGraph()
-    pick = g.add(lambda: sel["v"], kind="condition")  # conditions run in-parent
-    a = g.add(lambda: "a")
-    b = g.add(lambda: "b")
-    pick.precede(a, b)
-    taken = []
-    for v in (0, 1, 0):
-        sel["v"] = v
-        if taken:
-            g.reset()
-        assert ex.run(g).result(10) is None
-        assert (a.result is None) != (b.result is None)  # exactly one branch ran
-        taken.append(a.result or b.result)
-    assert taken == ["a", "b", "a"]
-    assert g.run_count == 3
-
-
-def test_condition_out_of_range_ends_run(ex):
-    """A non-int / out-of-range return selects nothing — the loop's exit."""
-    g = TaskGraph()
-    c = g.add(lambda: 99, kind="condition")
-    dead = g.add(lambda: "never")
-    c.precede(dead)
-    assert ex.run(g).result(10) is None
-    assert dead.result is None  # branch never released
 
 
 def test_condition_plus_runtime_rejected():
@@ -221,21 +98,16 @@ def test_weak_edges_skip_countdown_and_slots():
     assert t.inputs == [val]
 
 
-# ---------------------------------------------------------------------------
-# condition tasks: weak-edge cycles (all backends)
-# ---------------------------------------------------------------------------
-
-
 def _build_loop(iters):
     """entry -> body -> more? with a weak back-edge to body.
 
-    Loop state lives in the *condition* body — conditions always execute
-    scheduler-side, so the counter is authoritative on every backend.
+    (Thread/serial-shim copy; the four-backend version lives in the
+    conformance suite.)
     """
     g = TaskGraph("loop")
     state = {"i": 0, "runs": 0}
     entry = g.add(lambda: state.update(i=0), name="entry", affinity="local")
-    body = g.add(lambda: None, name="body")  # remote-eligible each pass
+    body = g.add(lambda: None, name="body")
     body.after(entry)
 
     def more():
@@ -247,21 +119,6 @@ def _build_loop(iters):
     cond.after(body)
     cond.precede(body)
     return g, state
-
-
-def test_condition_loop_bounded_iteration(ex):
-    g, state = _build_loop(7)
-    assert ex.run(g).result(10) is None
-    assert state["runs"] == 7
-
-
-def test_condition_loop_rerunnable(ex):
-    g, state = _build_loop(4)
-    for expect in (4, 8, 12):
-        ex.run(g).result(10)
-        assert state["runs"] == expect
-        g.reset()
-    assert g.run_count == 3
 
 
 def test_condition_loop_via_plain_pool_run():
@@ -291,33 +148,9 @@ def test_validate_permits_condition_closed_cycle():
         bad.validate()  # strong cycle: still illegal
 
 
-def test_condition_loop_failure_resolves_future(ex):
-    boom = {"at": 3, "i": 0}
-    g = TaskGraph()
-    entry = g.add(lambda: boom.update(i=0), name="entry", affinity="local")
-
-    # pass counting and the triggered failure stay scheduler-side
-    # (affinity="local"): the loop machinery under test is identical on
-    # every backend, and the counter must be authoritative
-    def body():
-        boom["i"] += 1
-        if boom["i"] == boom["at"]:
-            raise ValueError("pass 3 failed")
-
-    bt = g.add(body, name="body", affinity="local")
-    bt.after(entry)
-    # the condition consumes the body's value edge, so a body failure
-    # propagates into it (skip + adopt) and the loop stops that pass
-    cond = g.add(
-        lambda _x: 0 if boom["i"] < 10 else 1, kind="condition", takes_inputs=True
-    )
-    cond.succeed(bt)
-    cond.precede(bt)
-    for t in g.tasks:
-        t.propagate_errors = False
-    with pytest.raises(ValueError, match="pass 3"):
-        ex.run(g).result(10)
-    assert boom["i"] == 3  # the loop stopped at the failing pass
+# ---------------------------------------------------------------------------
+# cancellation timing (thread-only: needs in-process events + closure cells)
+# ---------------------------------------------------------------------------
 
 
 def test_condition_loop_cancellation(tex):
@@ -342,78 +175,6 @@ def test_condition_loop_cancellation(tex):
     tex.wait_idle(10)
 
 
-# ---------------------------------------------------------------------------
-# dynamic subflows (all backends)
-# ---------------------------------------------------------------------------
-
-
-def test_subflow_join_before_successor(ex):
-    """Every runtime-spawned task completes before the spawner's successor
-    runs, and the gather's result is visible through the spawner."""
-    g = TaskGraph()
-
-    def spawn(rt):
-        ws = [rt.add(lambda i=i: i * i, name=f"w{i}") for i in range(8)]
-        return rt.gather(ws)
-
-    sp = g.add(spawn, takes_runtime=True, name="spawn")
-    # the spawner's dataflow value is the gather's result (join unwraps it)
-    done = g.then(sp, lambda vals: sorted(vals))
-    assert ex.run(g).result(10) is None
-    assert done.result == [i * i for i in range(8)]
-    assert all(w.done for w in sp._spawned)  # joined before the successor
-
-
-def test_subflow_sized_by_runtime_data(ex):
-    """The fan-out width comes from data the task sees at execution time."""
-    g = TaskGraph()
-    width = g.add(lambda: 5, name="width")
-
-    def spawn(rt, n):
-        return rt.gather([rt.add(lambda i=i: i, name=f"s{i}") for i in range(n)])
-
-    sp = g.add(spawn, takes_inputs=True, takes_runtime=True, name="spawn")
-    sp.succeed(width)
-    total = g.then(sp, sum)
-    assert ex.run(g).result(10) is None
-    assert total.result == sum(range(5))
-    assert len(sp._spawned) == 6  # 5 workers + gather
-
-
-def test_subflow_failure_propagates_to_future(ex):
-    g = TaskGraph()
-
-    def spawn(rt):
-        rt.add(lambda: None)
-        rt.add(lambda: (_ for _ in ()).throw(RuntimeError("shard died")))
-
-    sp = g.add(spawn, takes_runtime=True)
-    g.then(sp, lambda _gt: None)
-    for t in g.tasks:
-        t.propagate_errors = False
-    with pytest.raises(RuntimeError, match="shard died"):
-        ex.run(g).result(10)
-    assert isinstance(sp.exception, RuntimeError)  # adopted by the spawner
-    ex.wait_idle(10)  # pool not poisoned
-
-
-def test_nested_subflow_spawner(ex):
-    """A spawned task may itself be a takes_runtime spawner; the outer
-    successor still waits for the innermost join."""
-    g = TaskGraph()
-
-    def outer_spawn(rt):
-        def inner_spawn(rt2):
-            return rt2.gather([rt2.add(lambda i=i: ("inner", i)) for i in range(3)])
-
-        return rt.add(inner_spawn, takes_runtime=True, name="inner")
-
-    sp = g.add(outer_spawn, takes_runtime=True, name="outer")
-    after = g.then(sp, lambda inner_vals: sorted(inner_vals))
-    assert ex.run(g).result(10) is None
-    assert after.result == [("inner", i) for i in range(3)]
-
-
 def test_subflow_serial_executor():
     order = []
     g = TaskGraph()
@@ -426,19 +187,6 @@ def test_subflow_serial_executor():
     g.add(lambda: order.append("after")).after(sp)
     SerialExecutor().run(g)
     assert order[-1] == "after" and sorted(order[:-1]) == [0, 1, 2]
-
-
-def test_subflow_priority_inherited_from_spawner(ex):
-    g = TaskGraph()
-    captured = []
-
-    def spawn(rt):  # spawner bodies always run scheduler-side
-        captured.append(rt.add(lambda: None).priority)
-        captured.append(rt.add(lambda: None, priority=-1.0).priority)
-
-    g.add(spawn, takes_runtime=True, priority=2.5)
-    ex.run(g).result(10)
-    assert captured == [2.5, -1.0]
 
 
 def test_subflow_cancellation_in_flight():
@@ -512,6 +260,11 @@ def test_subflow_cancellation_mid_spawner_body():
         pool.close()
 
 
+# ---------------------------------------------------------------------------
+# facade re-run + Future plumbing
+# ---------------------------------------------------------------------------
+
+
 def test_run_same_task_repeatedly_does_not_chain_callbacks(tex):
     """Re-running one Task through the facade must not stack resolver
     wrappers (leak) — each round resolves its own future exactly once."""
@@ -544,80 +297,6 @@ def test_run_iterable_rerun_waits_for_completion(tex):
         t.reset()
         tex.run([t]).result(0.001)
     tex.wait_idle(10)
-
-
-# ---------------------------------------------------------------------------
-# run_until + asyncio bridge (all backends)
-# ---------------------------------------------------------------------------
-
-
-def test_run_until_reruns_to_convergence(ex):
-    # convergence state is carried by the task's own result: the predicate
-    # reads parent-side task state, valid on every backend
-    state = {"x": 100.0}
-    g = TaskGraph()
-
-    def halve():
-        state["x"] /= 2
-        return state["x"]
-
-    t = g.add(halve, affinity="local")  # caller-side loop, caller-side state
-    rounds = ex.run_until(g, lambda: t.result < 1.0)
-    assert rounds == 7  # 100 / 2^7 < 1
-    assert g.run_count == 7
-
-
-def test_run_until_max_rounds(ex):
-    g = TaskGraph()
-    g.add(lambda: None)
-    with pytest.raises(RuntimeError, match="still false"):
-        ex.run_until(g, lambda: False, max_rounds=3)
-    assert g.run_count == 3
-
-
-def test_await_future_from_asyncio(ex):
-    async def main():
-        return await ex.run(lambda: 6 * 7)
-
-    assert asyncio.run(main()) == 42
-
-
-def test_await_future_already_resolved(ex):
-    fut = ex.run(lambda: "early")
-    fut.result(10)
-
-    async def main():
-        return await fut
-
-    assert asyncio.run(main()) == "early"
-
-
-def test_await_future_delivers_exception(ex):
-    async def main():
-        await ex.run(lambda: (_ for _ in ()).throw(ValueError("async boom")))
-
-    with pytest.raises(ValueError, match="async boom"):
-        asyncio.run(main())
-
-
-def test_co_run_graph_with_condition_loop(ex):
-    g, state = _build_loop(5)
-
-    async def main():
-        await ex.co_run(g)
-        return state["runs"]
-
-    assert asyncio.run(main()) == 5
-
-
-def test_co_run_concurrent_awaits(ex):
-    """Several co_run awaitables progress concurrently on one loop."""
-
-    async def main():
-        futs = [ex.co_run(lambda i=i: i * 10) for i in range(5)]
-        return await asyncio.gather(*futs)
-
-    assert asyncio.run(main()) == [0, 10, 20, 30, 40]
 
 
 def test_future_add_done_callback_fires_once():
@@ -654,14 +333,3 @@ def test_to_dot_condition_edges_dashed_and_subflow_cluster(tex):
     dot = g.to_dot()
     assert 'subgraph "cluster_' in dot and "spawned0" in dot
     assert "style=dotted" in dot  # spawner -> subflow link
-
-
-def test_single_prewired_task_runs_on_every_backend(ex):
-    """Submitting one pre-wired (non-source) Task runs exactly that task,
-    as ThreadPool._schedule does — the serial backend must not reject it
-    as a sourceless graph (review fix)."""
-    t1 = Task(lambda: "unrun")
-    t2 = Task(lambda x: (x, "ran"), takes_inputs=True)
-    t2.succeed(t1)
-    t2.propagate_errors = False
-    assert ex.run(t2).result(10) == (None, "ran")  # t1 never ran: slot is None

@@ -119,6 +119,29 @@ def test_remote_exception_type_survives(pool):
         pool.submit_future(lambda: 1 // 0).result(10)
 
 
+@pytest.mark.skipif(not os.path.isdir("/proc/self/fd"), reason="needs procfs")
+def test_respawn_cycles_do_not_leak_fds():
+    """Regression (§14 satellite): every kill/respawn cycle must close the
+    dead worker's pipe ends AND its Process object's sentinel/fifo
+    descriptors — 20 cycles through one slot may not grow this process's
+    open-FD count."""
+    with ProcessPool(1, name="fd-pool") as pool:
+        with pytest.raises(WorkerDiedError):
+            pool.submit_future(lambda: os._exit(9)).result(20)  # warm the path
+        pool.submit_future(lambda: None).result(20)  # slot respawned + live
+        baseline = len(os.listdir("/proc/self/fd"))
+        for _ in range(20):
+            with pytest.raises(WorkerDiedError):
+                pool.submit_future(lambda: os._exit(9)).result(20)
+        pool.submit_future(lambda: None).result(20)  # steady state again
+        after = len(os.listdir("/proc/self/fd"))
+        # identical modulo transient slack (a respawn mid-count holds a
+        # few descriptors for one cycle); 20 leaked cycles would show as
+        # +40 or more (two pipe ends each)
+        assert after - baseline <= 4, f"fd leak: {baseline} -> {after}"
+        assert pool.stats()["worker_restarts"] >= 21
+
+
 # ---------------------------------------------------------------------------
 # shared-memory data plane
 # ---------------------------------------------------------------------------

@@ -113,6 +113,74 @@ def test_close_unlinks_owned_segments():
         shared_memory.SharedMemory(name=name)
 
 
+def test_max_pooled_cap_falls_back_to_ephemeral_without_blocking():
+    """§11 satellite: at the ``max_pooled`` cap, ``put`` degrades to an
+    ephemeral segment instead of blocking or growing — values still
+    deliver intact, and the overflow is visible in stats()."""
+    arena = ShmArena(threshold=0, max_pooled=2)
+    try:
+        arrays = [np.full(1000, float(i)) for i in range(5)]
+        refs = [arena.put(a) for a in arrays]
+        assert sum(not r.ephemeral for r in refs) == 2  # the cap
+        assert sum(r.ephemeral for r in refs) == 3  # the overflow
+        for ref, a in zip(refs, arrays):
+            np.testing.assert_array_equal(arena.get(ref), a)
+        s = arena.stats()
+        assert s["pooled_segments"] == 2  # never grew past the cap
+        assert s["ephemeral_created"] == 3
+        assert s["ephemeral_unlinked"] == 3  # get() released each one
+        for ref in refs:
+            arena.recycle(ref)
+        # recycled pooled segments serve the next round (no new creation)
+        r = arena.put(np.ones(1000))
+        assert not r.ephemeral
+        assert arena.stats()["pooled_created"] == 2
+        arena.recycle(r)
+    finally:
+        arena.close()
+
+
+def test_exhaustion_under_concurrent_jobs_stays_deadlock_free():
+    """A capped arena under a real ProcessPool: more concurrent large-array
+    jobs than pooled segments. Overflow rides ephemeral segments, every
+    job completes (no checkout ever blocks), and the recycle counters
+    surface through ``pool.stats()['arena']``."""
+    from repro.core import Executor, TaskGraph
+    from repro.dist import ProcessPool
+
+    with ProcessPool(2, arena_threshold=1024, arena_max_pooled=1,
+                     name="capped-arena") as pool:
+        g = TaskGraph()
+        heads = [
+            g.add(lambda i=i: np.full(2000, float(i)), name=f"mk{i}",
+                  affinity="local")
+            for i in range(6)
+        ]
+        sums = [g.then(h, lambda a: float(a.sum())) for h in heads]
+        Executor(pool=pool).run(g).result(60)
+        assert [t.result for t in sums] == [2000.0 * i for i in range(6)]
+        arena = pool.stats()["arena"]
+        assert arena["pooled_segments"] <= 1  # the cap held
+        assert arena["ephemeral_created"] >= 1  # overflow took the fallback
+        assert arena["pooled_recycled"] >= 1  # and pooled traffic recycled
+
+
+def test_stats_counters_round_trip():
+    arena = ShmArena(threshold=0)
+    try:
+        ref = arena.put(np.zeros(100))
+        arena.recycle(ref)
+        ref2 = arena.put(np.zeros(100))
+        arena.recycle(ref2)
+        s = arena.stats()
+        assert s["pooled_created"] == 1
+        assert s["pooled_reused"] == 1
+        assert s["pooled_recycled"] == 2
+        assert s["free_segments"] == 1
+    finally:
+        arena.close()
+
+
 def test_freelist_keyed_by_requested_bucket_not_os_size():
     """recycle must file segments under the checkout bucket: the OS may
     page-round seg.size (macOS: 16 KiB), which would make every lookup

@@ -1,0 +1,330 @@
+"""SocketPool transport behavior (DESIGN.md §16): the framed job protocol,
+handshake gating, the worker launcher, per-connection transfer caching and
+the consumer surfaces — everything socket-*specific*. The backend-portable
+scheduler semantics are certified by ``tests/dist/conformance.py``; the
+fault battery (real kills, half-open sockets, heartbeat lapses) lives in
+``test_socket_chaos.py``."""
+import os
+import pickle
+import socket
+import struct
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Executor, Task, TaskGraph
+from repro.dist import SocketPool, UnpicklableTaskError, WorkerDiedError
+from repro.dist.remote_worker import (
+    MAGIC,
+    PROTOCOL_VERSION,
+    FramedConn,
+    spawn_workers,
+    worker_caps,
+)
+
+
+@pytest.fixture()
+def pool():
+    with SocketPool(2, name="test-sockpool") as p:
+        yield p
+
+
+# ---------------------------------------------------------------------------
+# placement + wiring (socket-specific: the body crosses a TCP frame)
+# ---------------------------------------------------------------------------
+
+
+def test_remote_execution_crosses_the_socket(pool):
+    assert pool.submit_future(lambda: os.getpid()).result(20) != os.getpid()
+    s = pool.stats()
+    assert s["remote_jobs"] >= 1
+    assert s["workers_connected"] == 2
+
+
+def test_affinity_local_pins_to_parent(pool):
+    t = Task(lambda: os.getpid(), affinity="local")
+    t.propagate_errors = False
+    assert Executor(pool=pool).run(t).result(20) == os.getpid()
+
+
+def test_unpicklable_body_raises_clear_error_at_submit(pool):
+    import threading
+
+    lock = threading.Lock()
+    t = Task(lambda: lock.acquire(), name="locked", affinity="remote")
+    with pytest.raises(UnpicklableTaskError, match="locked"):
+        pool.submit(t)
+    assert not t.started
+
+
+def test_remote_exception_type_survives(pool):
+    with pytest.raises(ZeroDivisionError):
+        pool.submit_future(lambda: 1 // 0).result(20)
+
+
+def test_workers_alias_and_liveness_validation():
+    with SocketPool(workers=1) as p:
+        assert p.num_threads == 1
+        assert p.submit_future(lambda: "hi").result(20) == "hi"
+    with pytest.raises(ValueError, match="liveness"):
+        SocketPool(1, heartbeat_s=0.5, liveness_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# handshake gating
+# ---------------------------------------------------------------------------
+
+
+def _raw_hello(address, hello, timeout=5.0):
+    """Open a raw framed connection, send ``hello``, return the ack."""
+    with socket.create_connection(address, timeout=timeout) as sk:
+        payload = pickle.dumps(hello, protocol=pickle.HIGHEST_PROTOCOL)
+        sk.sendall(struct.pack("!I", len(payload)) + payload)
+        hdr = b""
+        while len(hdr) < 4:
+            chunk = sk.recv(4 - len(hdr))
+            assert chunk, "listener hung up without an ack"
+            hdr += chunk
+        (n,) = struct.unpack("!I", hdr)
+        body = b""
+        while len(body) < n:
+            body += sk.recv(n - len(body))
+        return pickle.loads(body)
+
+
+def test_handshake_rejects_version_mismatch(pool):
+    ack = _raw_hello(
+        pool.address, {"magic": MAGIC, "version": 999, "caps": worker_caps()}
+    )
+    assert ack["ok"] is False and "protocol" in ack["error"]
+    assert ack["version"] == PROTOCOL_VERSION  # the rejection names ours
+    assert pool.stats()["handshakes_rejected"] == 1
+    # the pool keeps serving on its existing workers
+    assert pool.submit_future(lambda: 21 * 2).result(20) == 42
+
+
+def test_handshake_rejects_wrong_magic(pool):
+    ack = _raw_hello(pool.address, {"magic": "not-repro", "version": 1, "caps": {}})
+    assert ack["ok"] is False
+    assert pool.submit_future(lambda: "fine").result(20) == "fine"
+
+
+def test_handshake_rejects_when_slots_full(pool):
+    """All slots occupied: a well-formed extra worker is turned away."""
+    ack = _raw_hello(
+        pool.address,
+        {"magic": MAGIC, "version": PROTOCOL_VERSION, "caps": worker_caps()},
+    )
+    assert ack["ok"] is False and "slot" in ack["error"]
+    assert pool.submit_future(lambda: "serving").result(20) == "serving"
+
+
+# ---------------------------------------------------------------------------
+# remote attach: the launcher CLI and spawn_workers
+# ---------------------------------------------------------------------------
+
+
+def test_cli_worker_attaches_and_serves():
+    """``python -m repro.dist.remote_worker --connect host:port`` fills a
+    slot: the pool records no local process for it, the handshake carries
+    the CLI's pid, and an orderly close sends ``bye`` (worker exits 0)."""
+    import repro.dist.remote_worker as rw
+
+    src_dir = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(rw.__file__)))
+    )
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src_dir, env.get("PYTHONPATH")) if p
+    )
+    with SocketPool(1, spawn_local=False) as pool:
+        host, port = pool.address
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.dist.remote_worker",
+             "--connect", f"{host}:{port}"],
+            env=env,
+        )
+        try:
+            assert pool.submit_future(lambda: os.getpid()).result(30) == proc.pid
+            assert pool._procs[0] is None  # remote slot: no local Process
+            assert pool._caps[0]["pid"] == proc.pid
+        finally:
+            pool.close()
+            assert proc.wait(10) == 0  # "bye" -> orderly exit
+    # close() before the fixture-style exit above; the context exit is a no-op
+
+
+def test_submit_parks_until_a_worker_attaches():
+    """spawn_local=False: jobs wait for capacity, then flow. The §16
+    dispatcher blocks on the slot-ready event, not on a dead endpoint."""
+    with SocketPool(1, spawn_local=False, connect_timeout=30.0) as pool:
+        fut = pool.submit_future(lambda: "late but served")
+        time.sleep(0.2)  # genuinely parked: nothing to run it yet
+        assert not fut.done()
+        procs = spawn_workers(1, pool.address)
+        try:
+            assert fut.result(30) == "late but served"
+        finally:
+            pool.close()
+            for p in procs:
+                p.join(10)
+
+
+def test_spawn_workers_returns_live_processes():
+    with SocketPool(2, spawn_local=False) as pool:
+        procs = spawn_workers(2, pool.address)
+        try:
+            fut = pool.submit_future(lambda: sum(range(100)))
+            assert fut.result(30) == 4950
+            assert pool.stats()["workers_connected"] == 2
+        finally:
+            pool.close()
+            for p in procs:
+                p.join(10)
+
+
+# ---------------------------------------------------------------------------
+# per-connection transfer cache
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_cache_dedups_repeated_arrays(pool):
+    """The same large array flowing to several consumers ships once per
+    connection; repeats travel digest-only (§16 TransferCache)."""
+    g = TaskGraph()
+    src = g.add(lambda: np.ones(300_000), name="make", affinity="local")
+    sums = [g.then(src, lambda a: float(a.sum()), name=f"s{i}") for i in range(4)]
+    Executor(pool=pool).run(g).result(30)
+    assert [t.result for t in sums] == [300_000.0] * 4
+    s = pool.stats()
+    assert s["cache_misses"] >= 1  # first send per connection
+    assert s["cache_hits"] >= 1  # at least one repeat went digest-only
+
+
+def test_transfer_cache_resets_after_respawn(pool):
+    """A replacement worker holds no cached state: the same array misses
+    again on the fresh connection instead of dangling a stale digest."""
+    g = TaskGraph()
+    src = g.add(lambda: np.full(200_000, 7.0), name="make", affinity="local")
+    sums = [g.then(src, lambda a: float(a.sum())) for _ in range(4)]
+    Executor(pool=pool).run(g).result(30)
+    assert pool.stats()["cache_misses"] >= 1
+    # kill both workers: every connection (and its cache) is replaced
+    for p in list(pool._procs):
+        if p is not None:
+            p.kill()
+    deadline = time.monotonic() + 20
+    while pool.stats()["worker_restarts"] < 2 and time.monotonic() < deadline:
+        time.sleep(0.05)
+    # the replacement connections carry *fresh* caches: counters are zero
+    s = pool.stats()
+    assert s["cache_misses"] == 0 and s["cache_hits"] == 0
+    g2 = TaskGraph()
+    src2 = g2.add(lambda: np.full(200_000, 7.0), name="make2", affinity="local")
+    sums2 = [g2.then(src2, lambda a: float(a.sum())) for _ in range(4)]
+    Executor(pool=pool).run(g2).result(30)
+    assert [t.result for t in sums2] == [1_400_000.0] * 4
+    # the same array *missed* again — sent inline on the new connection,
+    # not resolved against a digest the dead worker took with it
+    assert pool.stats()["cache_misses"] >= 1
+
+
+def test_large_array_result_returns_intact(pool):
+    arr = pool.submit_future(lambda: np.arange(100_000, dtype=np.int64)).result(30)
+    assert isinstance(arr, np.ndarray)
+    assert arr.shape == (100_000,) and arr[-1] == 99_999
+
+
+# ---------------------------------------------------------------------------
+# consumer surfaces on the socket backend
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_manager_on_socket_backend(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    tree = {"w": np.arange(12.0).reshape(3, 4), "step": np.array(3)}
+    with CheckpointManager(tmp_path, backend="socket") as mgr:
+        mgr.save_async(3, tree)
+        mgr.wait()
+        restored, meta = mgr.restore(tree)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_prefetcher_on_socket_backend():
+    from repro.data import Prefetcher
+
+    class Source:
+        def batch(self, step):
+            return {"x": np.full(4, float(step))}
+
+    pf = Prefetcher(Source(), backend="socket", depth=2,
+                    put_fn=lambda b: float(b["x"].sum()))
+    try:
+        assert [pf.get(30) for _ in range(5)] == [0.0, 4.0, 8.0, 12.0, 16.0]
+    finally:
+        pf.close()
+
+
+def test_prefetcher_socket_requires_put_fn():
+    from repro.data import Prefetcher
+
+    class Source:
+        def batch(self, step):  # pragma: no cover - never reached
+            return {}
+
+    with pytest.raises(ValueError, match="put_fn"):
+        Prefetcher(Source(), backend="socket")
+
+
+# ---------------------------------------------------------------------------
+# framing primitives
+# ---------------------------------------------------------------------------
+
+
+def test_framed_conn_roundtrip_and_eof():
+    a, b = socket.socketpair()
+    ca, cb = FramedConn(a), FramedConn(b)
+    try:
+        ca.send(("job", 1, b"x" * 70_000, None))  # bigger than one segment
+        kind, jid, blob, rest = cb.recv(timeout=5.0)
+        assert (kind, jid, rest) == ("job", 1, None) and len(blob) == 70_000
+        cb.send(("res", 1, True, "ok"))
+        assert ca.recv(timeout=5.0) == ("res", 1, True, "ok")
+        cb.close()
+        with pytest.raises((EOFError, OSError)):
+            ca.recv(timeout=5.0)
+    finally:
+        ca.close()
+        cb.close()
+
+
+def test_framed_conn_recv_timeout():
+    a, b = socket.socketpair()
+    ca, cb = FramedConn(a), FramedConn(b)
+    try:
+        with pytest.raises(TimeoutError):
+            ca.recv(timeout=0.1)
+    finally:
+        ca.close()
+        cb.close()
+
+
+def test_stats_surface_has_transport_counters(pool):
+    pool.submit_future(lambda: None).result(20)
+    s = pool.stats()
+    for key in (
+        "remote_jobs",
+        "worker_restarts",
+        "worker_kills",
+        "heartbeat_lapses",
+        "handshakes_rejected",
+        "workers_connected",
+        "cache_hits",
+        "cache_misses",
+    ):
+        assert key in s, key

@@ -229,3 +229,125 @@ def test_cyclic_container_edge_value_falls_back_to_pickle():
         assert out[0] is out
     finally:
         arena.close()
+
+
+# ---------------------------------------------------------------------------
+# §16 satellite: the edge cases the socket transport leans on
+# ---------------------------------------------------------------------------
+
+
+def test_mutually_recursive_closures_fail_fast_with_clear_error():
+    """Two inner functions referencing each other form a closure cycle the
+    code wire cannot ship; the dump guard reports it immediately (no
+    RecursionError stack burn) with the same actionable message as the
+    direct self-reference case."""
+
+    def make():
+        def even(n):
+            return True if n == 0 else odd(n - 1)
+
+        def odd(n):
+            return False if n == 0 else even(n - 1)
+
+        return even
+
+    with pytest.raises(UnpicklableTaskError, match="self-referential"):
+        dumps_fn(make())
+
+
+def test_lambda_capturing_module_object_in_cell_ships_by_name():
+    """A module object held in a closure *cell* (not just referenced as a
+    global) rides the wire by import name and rebinds on the far side."""
+    import numpy as np_mod
+
+    hold = np_mod  # closure cell holds the module object itself
+
+    def make():
+        return lambda: hold.arange(5).sum()
+
+    fn = loads_fn(dumps_fn(make()))
+    assert fn() == 10
+
+
+class _Plain:
+    """Module-level on purpose: instances pickle by class reference."""
+
+    def __init__(self, k):
+        self.k = k
+
+    def mul(self, x):
+        return self.k * x
+
+
+def test_partial_over_bound_method_of_picklable_instance_round_trips():
+    fn = loads_fn(dumps_fn(functools.partial(_Plain(3).mul, 7)))
+    assert fn() == 21
+
+
+def test_partial_over_bound_method_of_stateful_instance_raises():
+    class Holder:
+        def __init__(self):
+            self.lock = threading.Lock()
+
+        def body(self, x):  # pragma: no cover - never ships
+            return x
+
+    with pytest.raises(UnpicklableTaskError, match="not a plain function"):
+        dumps_fn(functools.partial(Holder().body, 1))
+
+
+# property test: the wire round-trips arbitrary nested arg packs — runs
+# under real hypothesis when installed, the deterministic shim otherwise
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from repro.testing import given, settings, st
+
+
+@st.composite
+def _arg_packs(draw):
+    scalars = st.sampled_from([0, -1, 3.5, "tag", None, True])
+    small = st.lists(scalars, min_size=0, max_size=4)
+    n = draw(st.integers(min_value=1, max_value=2048))
+    dtype = draw(st.sampled_from(["float64", "int32"]))
+    arr = np.arange(n, dtype=dtype)
+    shape = draw(st.sampled_from(["flat", "tuple", "dict"]))
+    if shape == "flat":
+        return (arr, draw(small))
+    if shape == "tuple":
+        return ((draw(scalars), arr), [arr, draw(scalars)])
+    return ({"a": arr, "b": draw(small)}, draw(scalars))
+
+
+@settings(max_examples=25, deadline=None)
+@given(pack=_arg_packs())
+def test_args_round_trip_property(pack):
+    """dumps_args/loads_args is lossless for nested scalars + arrays, both
+    below and above the arena threshold (arrays >= 1 KiB cross the shm
+    plane; equality must hold either way)."""
+    arena = ShmArena(threshold=1024)
+    try:
+        out = loads_args(dumps_args(pack, arena), arena)
+        _assert_tree_equal(out, pack)
+        for ref in shm_refs(dumps_args(pack, arena)):
+            arena.recycle(ref)
+    finally:
+        arena.close()
+
+
+def _assert_tree_equal(a, b):
+    assert type(a) is type(b), (type(a), type(b))
+    if isinstance(a, np.ndarray):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    elif isinstance(a, dict):
+        assert a.keys() == b.keys()
+        for k in a:
+            _assert_tree_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_tree_equal(x, y)
+    else:
+        assert a == b
