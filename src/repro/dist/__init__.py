@@ -17,7 +17,10 @@ fleet — while the parent keeps every scheduling decision:
 * :class:`TransferCache` / :class:`CacheRef` — its cross-host
   counterpart: per-connection content-hashed array transfer (bytes cross
   a connection once, repeats ship as digests);
-* :func:`spawn_workers` — fork-and-connect local socket workers;
+* :func:`spawn_workers` — fork-and-connect local socket workers (needs
+  the pool's :attr:`~SocketPool.authkey`: every connection passes a
+  mutual HMAC challenge before anything is unpickled);
+  :class:`AuthenticationError` — a peer that failed that challenge;
 * :class:`UnpicklableTaskError` — submit-time verdict for a body that
   cannot ship; :func:`picklability_error` — the same verdict as a
   non-raising probe (the ``repro.analysis`` linter's static check);
@@ -25,7 +28,7 @@ fleet — while the parent keeps every scheduling decision:
   (never a hang), on either backend.
 """
 from .process_pool import ProcessPool, WorkerDiedError
-from .remote_worker import spawn_workers
+from .remote_worker import AuthenticationError, spawn_workers
 from .shm_arena import (
     DEFAULT_THRESHOLD,
     ArrayRef,
@@ -46,6 +49,7 @@ __all__ = [
     "CacheRef",
     "DEFAULT_THRESHOLD",
     "spawn_workers",
+    "AuthenticationError",
     "UnpicklableTaskError",
     "picklability_error",
 ]

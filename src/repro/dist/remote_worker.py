@@ -20,15 +20,44 @@ what lets the per-connection transfer cache
 (:class:`~repro.dist.shm_arena.TransferCache`) mark an array digest as
 peer-resident the moment the frame carrying its bytes is queued.
 
-**Handshake.** The worker speaks first::
+**Handshake.** Authentication comes first, and it runs on *raw* frames —
+no pickle touches bytes from an unauthenticated peer (unpickling
+attacker data is arbitrary code execution). Both directions prove
+knowledge of the shared ``authkey`` with an HMAC-SHA256
+challenge/response, the same shape as ``multiprocessing.connection``::
+
+    parent -> worker   CHALLENGE || 32 random bytes          (raw frame)
+    worker -> parent   HMAC-SHA256(authkey, nonce)           (raw frame)
+    parent -> worker   WELCOME  (or FAILURE: connection dropped)
+    worker -> parent   CHALLENGE || 32 random bytes          (roles swap:
+    parent -> worker   HMAC-SHA256(authkey, nonce)            the worker
+    worker -> parent   WELCOME                                authenticates
+                                                              the parent too)
+
+Only then does the pickled hello/ack exchange run::
 
     worker -> parent   {"magic": MAGIC, "version": PROTOCOL_VERSION,
-                        "caps": {pid, host, cpu_count, python}}
+                        "caps": {pid, host, nonce?, cpu_count, python}}
     parent -> worker   {"ok": True, "version": ..., "threshold": ...,
                         "heartbeat_s": ...}          # or {"ok": False, ...}
 
-A version mismatch (or garbage on the port) is rejected before the
-connection ever reaches a scheduler slot.
+A peer that fails the challenge (or sends anything else first) is
+dropped before any ``pickle.loads``; a version mismatch between
+*authenticated* ends is rejected before the connection ever reaches a
+scheduler slot. ``caps["nonce"]`` echoes the per-spawn token
+:func:`spawn_workers` hands each local child, which is how the pool
+binds a connection to the right ``Process`` (pids can collide across
+hosts; nonces cannot).
+
+**Trust model.** The authkey is a bearer secret: anyone holding it can
+run arbitrary code on both ends (that is what a task body *is*), so it
+must travel out of band over a trusted channel — an env var on the
+worker hosts, a mode-0600 file — never on a command line.
+``SocketPool`` generates a random key per pool when bound to loopback
+and refuses to bind a non-loopback interface without an explicit one.
+The transport authenticates but does not encrypt: task bodies and
+results cross in cleartext, so run fleets on trusted networks (or
+tunnel the port).
 
 **Job protocol** (one in-flight job per worker — the dispatcher thread
 blocks on the reply, heartbeats interleave)::
@@ -55,8 +84,11 @@ the liveness window expires.
 from __future__ import annotations
 
 import argparse
+import hashlib
+import hmac
 import os
 import pickle
+import secrets
 import select
 import socket
 import struct
@@ -70,17 +102,35 @@ from .wire import dumps_exception, dumps_value, loads_args, loads_fn
 __all__ = [
     "MAGIC",
     "PROTOCOL_VERSION",
+    "AUTHKEY_ENV",
+    "AuthenticationError",
     "FramedConn",
+    "answer_challenge",
+    "deliver_challenge",
     "worker_caps",
     "run_worker",
     "spawn_workers",
 ]
 
 MAGIC = "repro-dist"
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2  # v2: mandatory mutual HMAC auth before any pickle
 DEFAULT_HEARTBEAT_S = 0.25
 
+#: env var the ``remote_worker`` CLI reads the authkey from (hex-encoded)
+AUTHKEY_ENV = "REPRO_DIST_AUTHKEY"
+
 _HDR = struct.Struct("!I")
+
+# auth-handshake raw-frame markers (never pickled, bounded length)
+_CHALLENGE = b"#REPRO#CHALLENGE#"
+_WELCOME = b"#REPRO#WELCOME#"
+_FAILURE = b"#REPRO#FAILURE#"
+_AUTH_NONCE_LEN = 32
+_AUTH_MAX_FRAME = 128  # challenge/digest/verdict all fit well under this
+
+
+class AuthenticationError(ConnectionError):
+    """The peer failed (or never attempted) the authkey challenge."""
 
 
 class FramedConn:
@@ -106,6 +156,10 @@ class FramedConn:
 
     def send(self, obj: Any) -> None:
         payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        self.send_bytes(payload)
+
+    def send_bytes(self, payload: bytes) -> None:
+        """One raw frame (no pickling) — what the auth handshake rides."""
         with self._send_lock:
             self._sock.sendall(_HDR.pack(len(payload)) + payload)
 
@@ -118,13 +172,38 @@ class FramedConn:
             buf += chunk
         return bytes(buf)
 
+    def recv_bytes(
+        self, timeout: Optional[float] = None, max_len: Optional[int] = None
+    ) -> bytes:
+        """Next frame's raw payload, without unpickling. ``max_len`` caps
+        the advertised length (pre-auth frames must be tiny: an attacker
+        header must not be able to command a huge allocation).
+
+        A timeout only bounds *this* read: the socket is restored to
+        blocking before returning, so a later ``send`` of a large frame
+        is never clipped by a stale liveness window.
+        """
+        self._sock.settimeout(timeout)
+        try:
+            (length,) = _HDR.unpack(self._read_exact(_HDR.size))
+            if max_len is not None and length > max_len:
+                raise AuthenticationError(
+                    f"pre-auth frame of {length} bytes exceeds the "
+                    f"{max_len}-byte handshake cap"
+                )
+            return self._read_exact(length)
+        finally:
+            try:
+                self._sock.settimeout(None)
+            except OSError:  # pragma: no cover - racing close
+                pass
+
     def recv(self, timeout: Optional[float] = None) -> Any:
         """Next frame's payload. Raises ``EOFError`` on orderly close,
         ``TimeoutError`` past ``timeout`` (the §16 liveness window) and
-        ``OSError`` on a severed link."""
-        self._sock.settimeout(timeout)
-        (length,) = _HDR.unpack(self._read_exact(_HDR.size))
-        return pickle.loads(self._read_exact(length))
+        ``OSError`` on a severed link. Only call on an *authenticated*
+        connection — unpickling untrusted bytes executes them."""
+        return pickle.loads(self.recv_bytes(timeout))
 
     def poll(self) -> bool:
         """True when a frame (or EOF) is ready to read without blocking."""
@@ -150,6 +229,51 @@ class FramedConn:
             pass
 
 
+def _coerce_authkey(authkey: Any) -> bytes:
+    if isinstance(authkey, str):
+        authkey = authkey.encode("utf-8")
+    if not isinstance(authkey, (bytes, bytearray)) or not authkey:
+        raise ValueError("authkey must be a non-empty bytes (or str) secret")
+    return bytes(authkey)
+
+
+def deliver_challenge(
+    conn: FramedConn, authkey: bytes, *, timeout: float = 5.0
+) -> None:
+    """Challenge the peer to prove it holds ``authkey`` (raw frames only —
+    this runs *before* any pickling trust is extended). Raises
+    :class:`AuthenticationError` on a wrong or missing digest."""
+    authkey = _coerce_authkey(authkey)
+    nonce = secrets.token_bytes(_AUTH_NONCE_LEN)
+    conn.send_bytes(_CHALLENGE + nonce)
+    response = conn.recv_bytes(timeout=timeout, max_len=_AUTH_MAX_FRAME)
+    expected = hmac.new(authkey, nonce, hashlib.sha256).digest()
+    if not hmac.compare_digest(response, expected):
+        try:
+            conn.send_bytes(_FAILURE)
+        except OSError:
+            pass
+        raise AuthenticationError("peer failed the authkey challenge")
+    conn.send_bytes(_WELCOME)
+
+
+def answer_challenge(
+    conn: FramedConn, authkey: bytes, *, timeout: float = 5.0
+) -> None:
+    """Answer the peer's authkey challenge (raw frames only). Raises
+    :class:`AuthenticationError` if the peer never sends a well-formed
+    challenge or rejects our digest."""
+    authkey = _coerce_authkey(authkey)
+    msg = conn.recv_bytes(timeout=timeout, max_len=_AUTH_MAX_FRAME)
+    if not msg.startswith(_CHALLENGE) or len(msg) != len(_CHALLENGE) + _AUTH_NONCE_LEN:
+        raise AuthenticationError("peer did not open with an authkey challenge")
+    nonce = msg[len(_CHALLENGE):]
+    conn.send_bytes(hmac.new(authkey, nonce, hashlib.sha256).digest())
+    verdict = conn.recv_bytes(timeout=timeout, max_len=_AUTH_MAX_FRAME)
+    if verdict != _WELCOME:
+        raise AuthenticationError("authkey rejected by peer")
+
+
 def worker_caps() -> dict:
     """This host's capability record, sent in the handshake hello."""
     return {
@@ -164,15 +288,37 @@ def run_worker(
     host: str,
     port: int,
     *,
+    authkey: bytes,
     connect_timeout: float = 20.0,
+    spawn_nonce: Optional[str] = None,
 ) -> int:
     """Connect to a listening ``SocketPool`` and serve jobs until the
     shutdown sentinel or connection loss. Returns a process exit code
-    (0 = orderly shutdown, 1 = handshake rejected).
+    (0 = orderly shutdown, 1 = authentication or handshake rejected).
+
+    ``authkey`` is the pool's shared secret (``SocketPool.authkey``);
+    the mutual challenge runs before any pickled frame in either
+    direction, so a rogue listener on the port cannot feed this process
+    bytes to unpickle. ``spawn_nonce`` is echoed in the hello caps so
+    the parent can bind this connection to the ``Process`` it spawned
+    (:func:`spawn_workers` sets it; remote workers leave it unset).
     """
+    authkey = _coerce_authkey(authkey)
     sock = socket.create_connection((host, port), timeout=connect_timeout)
+    sock.settimeout(None)  # create_connection leaves its timeout armed
     conn = FramedConn(sock)
-    conn.send({"magic": MAGIC, "version": PROTOCOL_VERSION, "caps": worker_caps()})
+    try:
+        # answer the parent's challenge, then challenge it back — only a
+        # peer that proved it holds the key may send us anything pickled
+        answer_challenge(conn, authkey, timeout=connect_timeout)
+        deliver_challenge(conn, authkey, timeout=connect_timeout)
+    except (AuthenticationError, EOFError, OSError, TimeoutError):
+        conn.close()
+        return 1
+    caps = worker_caps()
+    if spawn_nonce is not None:
+        caps["nonce"] = spawn_nonce
+    conn.send({"magic": MAGIC, "version": PROTOCOL_VERSION, "caps": caps})
     try:
         ack = conn.recv(timeout=connect_timeout)
     except (EOFError, OSError, TimeoutError):
@@ -226,20 +372,27 @@ def spawn_workers(
     n: int,
     address: tuple,
     *,
+    authkey: bytes,
     mp_context: Optional[str] = None,
     name: str = "repro-sockworker",
 ) -> list:
     """Fork-and-connect ``n`` local worker processes against ``address``
     (``(host, port)``) — the single-host convenience ``SocketPool`` uses.
+    ``authkey`` is the pool's secret (``pool.authkey``); it crosses into
+    the children in-memory (process args), never on a command line.
 
     ``fork`` (default where available) inherits imported modules, so
     lambdas defined anywhere resolve in the worker exactly as on the §11
     process backend; ``spawn`` requires importable bodies. Returns the
-    started ``multiprocessing.Process`` objects.
+    started ``multiprocessing.Process`` objects, each carrying the
+    ``spawn_nonce`` its worker echoes in the hello — the collision-proof
+    token the pool binds connections to processes with (pids recycle
+    and collide across hosts; nonces cannot).
     """
     import multiprocessing as mp
     import warnings
 
+    authkey = _coerce_authkey(authkey)
     ctx_name = mp_context or ("fork" if "fork" in mp.get_all_start_methods() else "spawn")
     ctx = mp.get_context(ctx_name)
     host, port = address
@@ -249,9 +402,15 @@ def spawn_workers(
         # never touches jax post-fork
         warnings.filterwarnings("ignore", message=".*fork.*", category=RuntimeWarning)
         for i in range(n):
+            nonce = secrets.token_hex(16)
             proc = ctx.Process(
-                target=run_worker, args=(host, port), name=f"{name}-{i}", daemon=True
+                target=run_worker,
+                args=(host, port),
+                kwargs={"authkey": authkey, "spawn_nonce": nonce},
+                name=f"{name}-{i}",
+                daemon=True,
             )
+            proc.spawn_nonce = nonce
             proc.start()
             procs.append(proc)
     return procs
@@ -274,14 +433,36 @@ def main(argv: Optional[list] = None) -> int:
         default=1,
         help="worker processes to run from this host (default 1)",
     )
+    ap.add_argument(
+        "--authkey-file",
+        metavar="PATH",
+        help="file holding the pool's raw authkey bytes (overrides "
+        f"${AUTHKEY_ENV}); keys never belong on a command line",
+    )
     args = ap.parse_args(argv)
     host, _, port_s = args.connect.rpartition(":")
     if not host or not port_s.isdigit():
         ap.error(f"--connect expects HOST:PORT, got {args.connect!r}")
     host, port = host.strip("[]"), int(port_s)
+    if args.authkey_file:
+        with open(args.authkey_file, "rb") as fh:
+            authkey = fh.read().strip()
+    else:
+        key_hex = os.environ.get(AUTHKEY_ENV, "")
+        try:
+            authkey = bytes.fromhex(key_hex) if key_hex else b""
+        except ValueError:
+            ap.error(f"${AUTHKEY_ENV} must be the authkey hex-encoded "
+                     "(pool.authkey.hex())")
+    if not authkey:
+        ap.error(
+            "no authkey: export the pool's key via "
+            f"{AUTHKEY_ENV}=<pool.authkey.hex()> or pass --authkey-file "
+            "(the parent refuses unauthenticated workers)"
+        )
     if args.workers == 1:
-        return run_worker(host, port)
-    procs = spawn_workers(args.workers, (host, port))
+        return run_worker(host, port, authkey=authkey)
+    procs = spawn_workers(args.workers, (host, port), authkey=authkey)
     code = 0
     for proc in procs:
         proc.join()

@@ -22,6 +22,14 @@ Workers join in two ways:
   out. Slots fill in connection order; a task dispatched to an empty
   slot waits ``connect_timeout`` for a worker to arrive.
 
+Every connection — local or remote — must pass a mutual HMAC-SHA256
+challenge over raw frames before the first pickled byte is read in
+either direction (task bodies are code, so the wire protocol is
+code-execution-by-design; the :attr:`authkey` is the admission control).
+Loopback pools key themselves; a non-loopback bind demands an explicit
+``authkey=``. The trust model is documented in
+:mod:`repro.dist.remote_worker`.
+
 Fault model (DESIGN.md §14 extended across hosts): every worker loss —
 socket EOF, a severed link, a heartbeat lapse — fails *that task* with
 :class:`~repro.dist.process_pool.WorkerDiedError`, the slot is respawned
@@ -45,7 +53,9 @@ on both ends, so a respawn can never resolve a digest its peer lost.
 """
 from __future__ import annotations
 
+import ipaddress
 import os
+import secrets
 import socket
 import threading
 import time
@@ -59,7 +69,10 @@ from .remote_worker import (
     DEFAULT_HEARTBEAT_S,
     MAGIC,
     PROTOCOL_VERSION,
+    AuthenticationError,
     FramedConn,
+    answer_challenge,
+    deliver_challenge,
     spawn_workers,
 )
 from .shm_arena import DEFAULT_THRESHOLD, TransferCache
@@ -69,6 +82,15 @@ __all__ = ["SocketPool"]
 
 # a slot claimed by a half-done handshake: reserved, but not dispatchable
 _PENDING = object()
+
+
+def _is_loopback(host: str) -> bool:
+    if host in ("localhost", ""):
+        return True
+    try:
+        return ipaddress.ip_address(host).is_loopback
+    except ValueError:
+        return False
 
 
 class SocketPool(ThreadPool):
@@ -90,7 +112,18 @@ class SocketPool(ThreadPool):
     host, port:
         Listening address. The default ``("127.0.0.1", 0)`` binds an
         ephemeral localhost port — read :attr:`address` for the actual
-        one. Bind ``"0.0.0.0"`` to accept workers from other hosts.
+        one. Bind ``"0.0.0.0"`` to accept workers from other hosts —
+        this *requires* an explicit ``authkey``.
+    authkey:
+        Shared secret gating every connection: both ends must answer an
+        HMAC-SHA256 challenge over raw frames before the first pickled
+        byte is accepted (unpickling unauthenticated network data would
+        be remote code execution). On a loopback bind the default is a
+        fresh random key per pool — read :attr:`authkey` and hand it to
+        out-of-band workers (``REPRO_DIST_AUTHKEY=<hex>`` for the CLI).
+        A non-loopback bind refuses to start without an explicit key.
+        The transport authenticates but does not encrypt; see the trust
+        model in :mod:`repro.dist.remote_worker`.
     spawn_local:
         Fork-and-connect ``num_workers`` local workers (default). With
         ``False`` the pool only listens; start workers yourself with
@@ -128,6 +161,10 @@ class SocketPool(ThreadPool):
     #: construction)
     address: tuple = ()
 
+    #: the pool's shared auth secret (bytes) — treat like a password;
+    #: remote workers need it (``REPRO_DIST_AUTHKEY=<authkey.hex()>``)
+    authkey: bytes = b""
+
     def __init__(
         self,
         num_workers: Optional[int] = None,
@@ -135,6 +172,7 @@ class SocketPool(ThreadPool):
         workers: Optional[int] = None,
         host: str = "127.0.0.1",
         port: int = 0,
+        authkey: Optional[bytes] = None,
         spawn_local: bool = True,
         arena_threshold: int = DEFAULT_THRESHOLD,
         heartbeat_s: float = DEFAULT_HEARTBEAT_S,
@@ -164,6 +202,21 @@ class SocketPool(ThreadPool):
         self._spawn_local = spawn_local
         self._mp_context = mp_context
         self._worker_name = name
+        if authkey is None:
+            if not _is_loopback(host):
+                raise ValueError(
+                    f"binding {host!r} exposes the pool beyond this machine: "
+                    "pass an explicit authkey= (a non-loopback listener "
+                    "without one would let any peer on the network attempt "
+                    "the handshake; see the trust model in "
+                    "repro.dist.remote_worker)"
+                )
+            authkey = secrets.token_bytes(32)
+        elif isinstance(authkey, str):
+            authkey = authkey.encode("utf-8")
+        if not authkey:
+            raise ValueError("authkey must be non-empty")
+        self.authkey: bytes = bytes(authkey)
 
         self._conns: list[Any] = [None] * n  # FramedConn | _PENDING | None
         self._caches: list[Any] = [None] * n  # TransferCache per live conn
@@ -177,7 +230,10 @@ class SocketPool(ThreadPool):
         self._restarts = [0] * n
         self._worker_kills = [0] * n  # §14 hard-timeout kills
         self._hb_lapses = [0] * n  # liveness-window expiries
-        self._rejected = 0  # handshakes turned away
+        self._rejected = 0  # handshakes turned away (post-auth)
+        self._auth_failures = 0  # peers dropped before any unpickling
+        self._pending_respawns = 0  # spawned workers replaced pre-connect
+        self._empty_slot_timeouts = 0  # dispatches that found no worker
         # set when the idle monitor retires a slot's worker: the next job
         # dispatched there fails started=False exactly as ProcessPool's
         # next send into a dead pipe would — keeps the §14 failure
@@ -199,7 +255,8 @@ class SocketPool(ThreadPool):
         self.address: tuple = listener.getsockname()[:2]
         if spawn_local:
             self._pending_procs = spawn_workers(
-                n, self.address, mp_context=mp_context, name=name
+                n, self.address, authkey=self.authkey,
+                mp_context=mp_context, name=name,
             )
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name=f"{name}-accept", daemon=True
@@ -266,6 +323,8 @@ class SocketPool(ThreadPool):
                 )
             remaining = deadline - time.monotonic()
             if remaining <= 0:
+                with self._proc_lock:
+                    self._empty_slot_timeouts += 1
                 raise WorkerDiedError(
                     f"no worker connected to slot {index} within "
                     f"{self._connect_timeout}s",
@@ -410,14 +469,24 @@ class SocketPool(ThreadPool):
     # -- connection lifecycle ---------------------------------------------------
 
     def _accept_loop(self) -> None:
-        """Acceptor thread: handshake every connecting worker and bind it
-        to a free slot (or turn it away)."""
+        """Acceptor thread: authenticate, then handshake, every connecting
+        worker and bind it to a free slot (or turn it away)."""
         while not self._net_stop.is_set():
             try:
                 sock, _addr = self._listener.accept()
             except OSError:  # listener closed: pool is shutting down
                 return
             conn = FramedConn(sock)
+            try:
+                # mutual HMAC challenge over raw frames — nothing from
+                # this peer is unpickled until it proves it holds the
+                # authkey (pickle.loads on attacker bytes is RCE)
+                deliver_challenge(conn, self.authkey, timeout=5.0)
+                answer_challenge(conn, self.authkey, timeout=5.0)
+            except Exception:  # wrong key, garbage, timeout, vanished peer
+                self._auth_failures += 1
+                conn.close()
+                continue
             try:
                 hello = conn.recv(timeout=5.0)
             except Exception:  # garbage frame, timeout, or a vanished peer
@@ -469,11 +538,16 @@ class SocketPool(ThreadPool):
             # is what the worker's handshake relies on
             with self._proc_lock:
                 proc = None
-                for p in self._pending_procs:
-                    if p.pid == caps.get("pid"):
-                        proc = p
-                        self._pending_procs.remove(p)
-                        break
+                # bind by the per-spawn nonce, never by pid: pids recycle
+                # and collide across hosts, and a mis-bound Process would
+                # aim liveness probes and watchdog SIGKILLs at a stranger
+                nonce = caps.get("nonce")
+                if nonce is not None:
+                    for p in self._pending_procs:
+                        if getattr(p, "spawn_nonce", None) == nonce:
+                            proc = p
+                            self._pending_procs.remove(p)
+                            break
                 self._conns[slot] = conn
                 self._caches[slot] = TransferCache(self._threshold)
                 self._procs[slot] = proc
@@ -483,9 +557,11 @@ class SocketPool(ThreadPool):
 
     def _monitor_loop(self) -> None:
         """Idle-liveness thread: drain heartbeats from slots whose
-        dispatcher is not mid-job, and respawn silently-dead workers so a
-        loss is usually discovered *before* the next dispatch."""
+        dispatcher is not mid-job, respawn silently-dead workers so a
+        loss is usually discovered *before* the next dispatch, and
+        replace spawned workers that died before ever connecting."""
         while not self._net_stop.wait(self._hb_s):
+            self._refill_pending()
             now = time.monotonic()
             for i in range(self._n_slots):
                 io = self._io_locks[i]
@@ -498,7 +574,11 @@ class SocketPool(ThreadPool):
                         continue
                     try:
                         while conn.poll():
-                            conn.recv(timeout=self._hb_s)
+                            # poll() guarantees one readable *byte*, not a
+                            # whole frame: allow the full liveness window
+                            # for the rest to arrive, or WAN jitter would
+                            # read as a death mid-heartbeat
+                            conn.recv(timeout=self._liveness_s)
                             self._last_seen[i] = now
                     except (EOFError, OSError, TimeoutError):
                         if self._respawn(i, conn):
@@ -512,6 +592,35 @@ class SocketPool(ThreadPool):
                                 self._transport_fault[i] = True
                 finally:
                     io.release()
+
+    def _refill_pending(self) -> None:
+        """Replace locally spawned workers that exited before occupying a
+        slot (an import failure in the child, an OOM kill during startup):
+        without this the slot would sit empty for the pool's lifetime,
+        burning ``connect_timeout`` on every task routed there."""
+        if not self._spawn_local:
+            return
+        with self._proc_lock:
+            dead = [p for p in self._pending_procs if p.exitcode is not None]
+            for p in dead:
+                self._pending_procs.remove(p)
+            empty = sum(1 for c in self._conns if c is None)
+            live_pending = len(self._pending_procs)
+        for p in dead:
+            p.join(timeout=0.1)
+            try:
+                p.close()
+            except Exception:
+                pass
+        need = min(len(dead), max(0, empty - live_pending))
+        if need and not self._net_stop.is_set():
+            self._pending_respawns += need
+            replacement = spawn_workers(
+                need, self.address, authkey=self.authkey,
+                mp_context=self._mp_context, name=self._worker_name,
+            )
+            with self._proc_lock:
+                self._pending_procs.extend(replacement)
 
     def _respawn(self, index: int, dead_conn: Any = None) -> bool:
         """Retire slot ``index``'s connection (and local process, if any)
@@ -549,7 +658,8 @@ class SocketPool(ThreadPool):
                 pass
         if self._spawn_local and not self._net_stop.is_set():
             replacement = spawn_workers(
-                1, self.address, mp_context=self._mp_context, name=self._worker_name
+                1, self.address, authkey=self.authkey,
+                mp_context=self._mp_context, name=self._worker_name,
             )
             with self._proc_lock:
                 self._pending_procs.extend(replacement)
@@ -561,14 +671,21 @@ class SocketPool(ThreadPool):
         """Base pool counters plus the transport's: ``remote_jobs``
         (bodies run on workers), ``worker_restarts``, ``worker_kills``
         (§14 watchdog), ``heartbeat_lapses`` (liveness-window expiries),
-        ``handshakes_rejected``, ``workers_connected`` (live slots) and
-        the aggregated transfer-cache ``cache_hits`` / ``cache_misses``."""
+        ``handshakes_rejected``, ``auth_failures`` (peers dropped before
+        any unpickling), ``pending_respawns`` (spawned workers replaced
+        before they ever connected), ``empty_slot_timeouts`` (dispatches
+        that found no worker within ``connect_timeout``),
+        ``workers_connected`` (live slots) and the aggregated
+        transfer-cache ``cache_hits`` / ``cache_misses``."""
         out = super().stats()
         out["remote_jobs"] = sum(self._remote_jobs)
         out["worker_restarts"] = sum(self._restarts)
         out["worker_kills"] = sum(self._worker_kills)
         out["heartbeat_lapses"] = sum(self._hb_lapses)
         out["handshakes_rejected"] = self._rejected
+        out["auth_failures"] = self._auth_failures
+        out["pending_respawns"] = self._pending_respawns
+        out["empty_slot_timeouts"] = self._empty_slot_timeouts
         hits = misses = connected = 0
         with self._proc_lock:
             for conn, cache in zip(self._conns, self._caches):

@@ -18,9 +18,14 @@ import pytest
 from repro.core import Executor, Task, TaskGraph
 from repro.dist import SocketPool, UnpicklableTaskError, WorkerDiedError
 from repro.dist.remote_worker import (
+    AUTHKEY_ENV,
     MAGIC,
     PROTOCOL_VERSION,
+    AuthenticationError,
     FramedConn,
+    answer_challenge,
+    deliver_challenge,
+    run_worker,
     spawn_workers,
     worker_caps,
 )
@@ -78,26 +83,24 @@ def test_workers_alias_and_liveness_validation():
 # ---------------------------------------------------------------------------
 
 
-def _raw_hello(address, hello, timeout=5.0):
-    """Open a raw framed connection, send ``hello``, return the ack."""
-    with socket.create_connection(address, timeout=timeout) as sk:
-        payload = pickle.dumps(hello, protocol=pickle.HIGHEST_PROTOCOL)
-        sk.sendall(struct.pack("!I", len(payload)) + payload)
-        hdr = b""
-        while len(hdr) < 4:
-            chunk = sk.recv(4 - len(hdr))
-            assert chunk, "listener hung up without an ack"
-            hdr += chunk
-        (n,) = struct.unpack("!I", hdr)
-        body = b""
-        while len(body) < n:
-            body += sk.recv(n - len(body))
-        return pickle.loads(body)
+def _raw_hello(address, hello, *, authkey, timeout=5.0):
+    """Authenticate, send ``hello``, return the ack (the attach path a
+    well-keyed but possibly version-skewed worker walks)."""
+    conn = FramedConn(socket.create_connection(address, timeout=timeout))
+    try:
+        answer_challenge(conn, authkey, timeout=timeout)
+        deliver_challenge(conn, authkey, timeout=timeout)
+        conn.send(hello)
+        return conn.recv(timeout=timeout)
+    finally:
+        conn.close()
 
 
 def test_handshake_rejects_version_mismatch(pool):
     ack = _raw_hello(
-        pool.address, {"magic": MAGIC, "version": 999, "caps": worker_caps()}
+        pool.address,
+        {"magic": MAGIC, "version": 999, "caps": worker_caps()},
+        authkey=pool.authkey,
     )
     assert ack["ok"] is False and "protocol" in ack["error"]
     assert ack["version"] == PROTOCOL_VERSION  # the rejection names ours
@@ -107,7 +110,11 @@ def test_handshake_rejects_version_mismatch(pool):
 
 
 def test_handshake_rejects_wrong_magic(pool):
-    ack = _raw_hello(pool.address, {"magic": "not-repro", "version": 1, "caps": {}})
+    ack = _raw_hello(
+        pool.address,
+        {"magic": "not-repro", "version": 1, "caps": {}},
+        authkey=pool.authkey,
+    )
     assert ack["ok"] is False
     assert pool.submit_future(lambda: "fine").result(20) == "fine"
 
@@ -117,9 +124,113 @@ def test_handshake_rejects_when_slots_full(pool):
     ack = _raw_hello(
         pool.address,
         {"magic": MAGIC, "version": PROTOCOL_VERSION, "caps": worker_caps()},
+        authkey=pool.authkey,
     )
     assert ack["ok"] is False and "slot" in ack["error"]
     assert pool.submit_future(lambda: "serving").result(20) == "serving"
+
+
+# ---------------------------------------------------------------------------
+# authentication: nothing from an unauthenticated peer is ever unpickled
+# ---------------------------------------------------------------------------
+
+_EVIL_TRIPPED = False
+
+
+def _trip_evil_flag():
+    global _EVIL_TRIPPED
+    _EVIL_TRIPPED = True
+    return ()
+
+
+class _EvilPayload:
+    """Unpickling this object calls ``_trip_evil_flag`` — the in-process
+    stand-in for an RCE gadget on the wire."""
+
+    def __reduce__(self):
+        return (_trip_evil_flag, ())
+
+
+def test_unauthenticated_pickle_is_never_loaded(pool):
+    """A peer that skips the challenge and fires a malicious pickle at
+    the listener is dropped before any ``pickle.loads`` runs (the accept
+    loop and the pool share this process, so the gadget would trip the
+    flag right here if it were ever unpickled)."""
+    global _EVIL_TRIPPED
+    _EVIL_TRIPPED = False
+    payload = pickle.dumps(_EvilPayload(), protocol=pickle.HIGHEST_PROTOCOL)
+    with socket.create_connection(pool.address, timeout=5.0) as sk:
+        sk.sendall(struct.pack("!I", len(payload)) + payload)
+        sk.settimeout(5.0)
+        # the parent reads our bytes only as a (wrong) HMAC digest and
+        # hangs up; drain until EOF to observe the rejection
+        while True:
+            try:
+                if not sk.recv(4096):
+                    break
+            except OSError:
+                break
+    deadline = time.monotonic() + 5.0
+    while pool.stats()["auth_failures"] < 1 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert not _EVIL_TRIPPED
+    assert pool.stats()["auth_failures"] == 1
+    assert pool.stats()["handshakes_rejected"] == 0  # dropped pre-handshake
+    assert pool.submit_future(lambda: "still serving").result(20) == "still serving"
+
+
+def test_wrong_authkey_is_rejected(pool):
+    conn = FramedConn(socket.create_connection(pool.address, timeout=5.0))
+    try:
+        with pytest.raises(AuthenticationError):
+            answer_challenge(conn, b"not-the-key", timeout=5.0)
+    finally:
+        conn.close()
+    deadline = time.monotonic() + 5.0
+    while pool.stats()["auth_failures"] < 1 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert pool.stats()["auth_failures"] == 1
+    assert pool.submit_future(lambda: 2 + 2).result(20) == 4
+
+
+def test_worker_refuses_unauthenticated_parent():
+    """The worker side is symmetric: a rogue listener that feeds
+    ``run_worker`` a pickled frame instead of a challenge gets dropped
+    (exit code 1) without the payload ever being unpickled."""
+    global _EVIL_TRIPPED
+    _EVIL_TRIPPED = False
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    host, port = listener.getsockname()[:2]
+
+    def _rogue_parent():
+        sk, _ = listener.accept()
+        payload = pickle.dumps(_EvilPayload(), protocol=pickle.HIGHEST_PROTOCOL)
+        sk.sendall(struct.pack("!I", len(payload)) + payload)
+        time.sleep(0.5)
+        sk.close()
+
+    import threading
+
+    t = threading.Thread(target=_rogue_parent, daemon=True)
+    t.start()
+    try:
+        code = run_worker(host, port, authkey=b"worker-key", connect_timeout=5.0)
+    finally:
+        t.join(10)
+        listener.close()
+    assert code == 1
+    assert not _EVIL_TRIPPED
+
+
+def test_nonloopback_bind_requires_explicit_authkey():
+    with pytest.raises(ValueError, match="authkey"):
+        SocketPool(1, host="0.0.0.0")
+    # an explicit key makes the same bind legal
+    with SocketPool(1, host="0.0.0.0", authkey=b"fleet-secret") as p:
+        assert p.authkey == b"fleet-secret"
+        assert p.submit_future(lambda: "keyed").result(20) == "keyed"
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +253,7 @@ def test_cli_worker_attaches_and_serves():
     )
     with SocketPool(1, spawn_local=False) as pool:
         host, port = pool.address
+        env[AUTHKEY_ENV] = pool.authkey.hex()
         proc = subprocess.Popen(
             [sys.executable, "-m", "repro.dist.remote_worker",
              "--connect", f"{host}:{port}"],
@@ -164,7 +276,7 @@ def test_submit_parks_until_a_worker_attaches():
         fut = pool.submit_future(lambda: "late but served")
         time.sleep(0.2)  # genuinely parked: nothing to run it yet
         assert not fut.done()
-        procs = spawn_workers(1, pool.address)
+        procs = spawn_workers(1, pool.address, authkey=pool.authkey)
         try:
             assert fut.result(30) == "late but served"
         finally:
@@ -175,15 +287,112 @@ def test_submit_parks_until_a_worker_attaches():
 
 def test_spawn_workers_returns_live_processes():
     with SocketPool(2, spawn_local=False) as pool:
-        procs = spawn_workers(2, pool.address)
+        procs = spawn_workers(2, pool.address, authkey=pool.authkey)
         try:
             fut = pool.submit_future(lambda: sum(range(100)))
             assert fut.result(30) == 4950
+            # the second worker may still be mid-handshake (mutual auth
+            # adds round trips); wait for it rather than racing it
+            deadline = time.monotonic() + 20
+            while (pool.stats()["workers_connected"] < 2
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
             assert pool.stats()["workers_connected"] == 2
         finally:
             pool.close()
             for p in procs:
                 p.join(10)
+
+
+# ---------------------------------------------------------------------------
+# slot binding and pending-worker lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_spawned_workers_bind_by_nonce(pool):
+    """Each locally spawned worker's connection is bound to its Process
+    via the per-spawn nonce echoed in the hello caps."""
+    for i in range(2):
+        assert pool._procs[i] is not None
+        assert pool._caps[i]["nonce"] == pool._procs[i].spawn_nonce
+
+
+def test_slot_binding_ignores_pid_collision():
+    """A connecting worker must be bound to a pending local Process only
+    via its spawn nonce, never its self-reported pid: a remote worker
+    whose pid collides with a pending local worker's must not adopt that
+    Process (exitcode probes and watchdog SIGKILLs would target a
+    stranger)."""
+
+    class FakePending:
+        pid = 987654
+        spawn_nonce = "nonce-of-a-real-local-spawn"
+        exitcode = None
+
+    fake = FakePending()
+    with SocketPool(1, spawn_local=False) as pool:
+        with pool._proc_lock:
+            pool._pending_procs.append(fake)
+        caps = worker_caps()
+        caps["pid"] = fake.pid  # the collision
+        conn = FramedConn(socket.create_connection(pool.address, timeout=5.0))
+        try:
+            answer_challenge(conn, pool.authkey, timeout=5.0)
+            deliver_challenge(conn, pool.authkey, timeout=5.0)
+            conn.send({"magic": MAGIC, "version": PROTOCOL_VERSION, "caps": caps})
+            assert conn.recv(timeout=5.0)["ok"] is True
+            assert pool._slot_ready[0].wait(5.0)
+            assert pool._procs[0] is None  # not mis-bound to the fake
+            with pool._proc_lock:
+                assert fake in pool._pending_procs  # still awaiting its own
+                pool._pending_procs.remove(fake)
+        finally:
+            conn.close()
+            pool.close()
+
+
+def _exit_immediately():
+    return  # a spawned worker that dies before ever connecting
+
+
+def test_dead_pending_worker_is_replaced(monkeypatch):
+    """A respawned local worker that exits before connecting (import
+    failure, startup OOM kill) must not strand its slot: the monitor
+    detects the exited pending process and forks a replacement, instead
+    of capacity being silently lost for the pool's lifetime."""
+    import multiprocessing as mp
+
+    import repro.dist.socket_pool as sp
+
+    real_spawn = sp.spawn_workers
+    doomed = {"armed": False, "fired": False}
+
+    def flaky_spawn(n, address, **kw):
+        if doomed["armed"] and not doomed["fired"]:
+            doomed["fired"] = True
+            procs = []
+            for _ in range(n):
+                p = mp.get_context("fork").Process(
+                    target=_exit_immediately, daemon=True
+                )
+                p.spawn_nonce = "doomed-before-connect"
+                p.start()
+                procs.append(p)
+            return procs
+        return real_spawn(n, address, **kw)
+
+    monkeypatch.setattr(sp, "spawn_workers", flaky_spawn)
+    with SocketPool(1, heartbeat_s=0.05, name="refill-sock") as pool:
+        assert pool.submit_future(lambda: 1).result(20) == 1
+        doomed["armed"] = True
+        pool._procs[0].kill()  # respawn path hands the slot the doomed child
+        deadline = time.monotonic() + 30
+        while pool.stats()["pending_respawns"] < 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert pool.stats()["pending_respawns"] >= 1
+        # the monitor's replacement (a healthy worker) restores capacity
+        assert pool.submit_future(lambda: "revived").result(30) == "revived"
+        assert pool.stats()["worker_restarts"] >= 1
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +512,25 @@ def test_framed_conn_roundtrip_and_eof():
         cb.close()
 
 
+def test_recv_restores_blocking_socket():
+    """A timed recv must not leave its timeout armed on the socket: the
+    next large ``send`` would otherwise run ``sendall`` under the stale
+    liveness window, so big frames over slow links could never succeed
+    (the transport retry would deterministically fail the same way)."""
+    a, b = socket.socketpair()
+    ca, cb = FramedConn(a), FramedConn(b)
+    try:
+        cb.send(("hb",))
+        assert ca.recv(timeout=2.5) == ("hb",)
+        assert a.gettimeout() is None  # restored: sends are unbounded
+        with pytest.raises(TimeoutError):
+            ca.recv(timeout=0.05)
+        assert a.gettimeout() is None  # restored on the timeout path too
+    finally:
+        ca.close()
+        cb.close()
+
+
 def test_framed_conn_recv_timeout():
     a, b = socket.socketpair()
     ca, cb = FramedConn(a), FramedConn(b)
@@ -323,6 +551,9 @@ def test_stats_surface_has_transport_counters(pool):
         "worker_kills",
         "heartbeat_lapses",
         "handshakes_rejected",
+        "auth_failures",
+        "pending_respawns",
+        "empty_slot_timeouts",
         "workers_connected",
         "cache_hits",
         "cache_misses",
